@@ -1,0 +1,129 @@
+"""Perf hillclimb driver: labeled roofline variants per target cell.
+
+Each entry under VARIANTS is one hypothesis->change iteration from EXPERIMENTS.md
+§Perf: a (rules, options, grad_accum) override evaluated through the same
+while-loop-corrected roofline as the baseline, written to
+experiments/roofline/<arch>__<shape>__<label>.json for before/after comparison.
+
+Run: PYTHONPATH=src python -m benchmarks.hillclimb [--cell kimi] [--label l2_...]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+from repro.models.transformer import ModelOptions
+
+from benchmarks.roofline import OUT_DIR, analyze_cell, cell_path
+
+
+def _opts(**kw) -> ModelOptions:
+    base = dict(attn_impl="xla", moe_impl="ep", wkv_impl="chunked",
+                ssd_impl="chunked", remat="full")
+    base.update(kw)
+    return ModelOptions(**base)
+
+
+_ANALYSIS_MOE = dict(moe_impl="ep_exact")  # flops-exact analysis accounting
+
+# (arch, shape) -> [(label, kwargs for analyze_cell)]
+VARIANTS = {
+    # -------- cell 1: kimi-k2 train (paper-technique representative) ----------
+    "kimi": [
+        # H1: remat recompute is ~1/4 of compiled flops; dropping it trades
+        # activation memory (host offload absorbs it on TPU) for compute.
+        ("kimi-k2-1t-a32b", "train_4k", "l1_remat_none",
+         dict(opts_override=_opts(remat="none", **_ANALYSIS_MOE))),
+        # H2: capacity factor 1.25 -> 1.0 cuts expert matmul rows ~20%.
+        ("kimi-k2-1t-a32b", "train_4k", "l2_capacity_1x",
+         dict(opts_override=_opts(remat="full", **_ANALYSIS_MOE),
+              capacity_factor=1.0)),
+        # H3: both together.
+        ("kimi-k2-1t-a32b", "train_4k", "l3_remat_none_cap1x",
+         dict(opts_override=_opts(remat="none", **_ANALYSIS_MOE),
+              capacity_factor=1.0)),
+    ],
+    # -------- cell 2: kimi decode (most collective-bound cell) ----------------
+    "kimi_decode": [
+        # H1: part of the collective term is GSPMD resharding the seq-sharded cache
+        # to head sharding and back per layer; the flash-decoding layout pins the
+        # computation to the cache sharding (softmax all-reduces are tiny).
+        ("kimi-k2-1t-a32b", "decode_32k", "l1_flash_layout",
+         dict(opts_override=_opts(remat="none", decode_flash_layout=True,
+                                  **_ANALYSIS_MOE))),
+        # H2: the remainder is FSDP gathering ~2 GB of expert weights per layer to
+        # decode 128 tokens; TP-within-expert (ep_ff + serve_moe_eptp) moves ~MB of
+        # activations instead.
+        ("kimi-k2-1t-a32b", "decode_32k", "l2_ep_ff",
+         dict(opts_override=_opts(remat="none", decode_flash_layout=True,
+                                  moe_impl="ep_ff_exact"),
+              rules_override="serve_moe_eptp")),
+    ],
+    # -------- cell 3: gemma3-12b long-context decode (serving / KV tiering) ---
+    "gemma_decode": [
+        # H1: 40/48 layers are sliding-window; ring caches cut their per-step KV
+        # reads from O(context) to O(window) — the dominant memory term.
+        ("gemma3-12b", "decode_32k", "l1_sliding_ring",
+         dict(opts_override=_opts(remat="none", sliding_ring=True))),
+        # H2: + flash layout for the remaining global-layer caches (K=8 < tp).
+        ("gemma3-12b", "decode_32k", "l2_ring_flash",
+         dict(opts_override=_opts(remat="none", sliding_ring=True,
+                                  decode_flash_layout=True))),
+        ("gemma3-12b", "long_500k", "l1_sliding_ring",
+         dict(opts_override=_opts(remat="none", sliding_ring=True))),
+        ("gemma3-12b", "long_500k", "l2_ring_flash",
+         dict(opts_override=_opts(remat="none", sliding_ring=True,
+                                  decode_flash_layout=True))),
+    ],
+}
+
+
+def run_variant(arch, shape, label, kw) -> None:
+    kw = dict(kw)
+    cap = kw.pop("capacity_factor", None)
+    if cap is not None:
+        # capacity-factor change rides through a config patch
+        import repro.configs.base as cb
+
+        cfg = cb.get_config(arch)
+        cb._REGISTRY[arch] = dataclasses.replace(cfg, moe_capacity_factor=cap)
+    res = analyze_cell(arch, shape, label=label, **kw)
+    if cap is not None:
+        cb._REGISTRY[arch] = cfg
+    if res is None:
+        print(f"[hillclimb] {arch} x {shape} [{label}]: skip")
+        return
+    cell_path(arch, shape, label).write_text(
+        json.dumps(dataclasses.asdict(res), indent=1))
+    print(f"[hillclimb] {arch} x {shape} [{label}]: {res.bottleneck}-bound "
+          f"frac={res.roofline_fraction:.4f} "
+          f"compute={res.t_compute:.3f}s memory={res.t_memory:.3f}s "
+          f"coll={res.t_collective:.3f}s host={res.t_hostdma:.3f}s")
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(VARIANTS) + [None])
+    ap.add_argument("--label", default=None)
+    args = ap.parse_args()
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    for cell, variants in VARIANTS.items():
+        if args.cell and cell != args.cell:
+            continue
+        for arch, shape, label, kw in variants:
+            if args.label and label != args.label:
+                continue
+            if cell_path(arch, shape, label).exists():
+                print(f"[hillclimb] {arch} x {shape} [{label}]: cached")
+                continue
+            run_variant(arch, shape, label, kw)
+
+
+if __name__ == "__main__":
+    main()

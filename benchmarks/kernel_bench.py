@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks: wall time of the XLA production paths on this host +
+derived GFLOP/s (the Pallas kernels are TPU-target; interpret mode timings are not
+meaningful, so we bench their XLA equivalents and the ref oracles)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba2_ssd.ops import ssd
+from repro.kernels.rwkv6_scan.ops import wkv6
+from repro.models.attention import _chunked_attention
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench() -> List[str]:
+    rng = np.random.default_rng(0)
+    out = []
+
+    # chunked attention vs naive at 4k (the long-context XLA baseline)
+    B, S, N, hd = 1, 2048, 4, 64
+    q, k, v = (jnp.asarray(rng.standard_normal((B, S, N, hd)), jnp.float32)
+               for _ in range(3))
+    win = jnp.int32(1 << 30)
+    naive = jax.jit(lambda q, k, v: attention_ref(q, k, v, win, scale=0.125))
+    chunked = jax.jit(lambda q, k, v: _chunked_attention(
+        q, k, v, window=win, causal=True, scale=0.125, q_block=256))
+    t_naive = _time(naive, q, k, v)
+    t_chunk = _time(chunked, q, k, v)
+    flops = 2 * 2 * B * S * S * N * hd / 2
+    out.append(f"attn_naive_2k,{1e6*t_naive:.0f},gflops={flops/t_naive/1e9:.1f}")
+    out.append(f"attn_chunked_2k,{1e6*t_chunk:.0f},gflops={flops/t_chunk/1e9:.1f}")
+
+    # wkv6 chunked vs ref scan
+    B, T, H, K = 1, 1024, 4, 64
+    r, kk, vv = (jnp.asarray(rng.standard_normal((B, T, H, K)), jnp.float32)
+                 for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.5, 0.999, (B, T, H, K)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, K)) * 0.1, jnp.float32)
+    s0 = jnp.zeros((B, H, K, K))
+    ref_fn = jax.jit(lambda *a: wkv6(*a, impl="ref"))
+    chk_fn = jax.jit(lambda *a: wkv6(*a, impl="chunked"))
+    t_ref = _time(ref_fn, r, kk, vv, w, u, s0)
+    t_chk = _time(chk_fn, r, kk, vv, w, u, s0)
+    out.append(f"wkv6_refscan_1k,{1e6*t_ref:.0f},speedup=1.0")
+    out.append(f"wkv6_chunked_1k,{1e6*t_chk:.0f},speedup={t_ref/t_chk:.2f}")
+
+    # ssd chunked vs ref scan
+    P, Nst = 64, 64
+    x = jnp.asarray(rng.standard_normal((B, T, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.5, (B, T, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 4.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, T, Nst)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((B, T, Nst)), jnp.float32)
+    D = jnp.asarray(rng.standard_normal((H,)) * 0.1, jnp.float32)
+    h0 = jnp.zeros((B, H, P, Nst))
+    ref_fn = jax.jit(lambda *a: ssd(*a, impl="ref"))
+    chk_fn = jax.jit(lambda *a: ssd(*a, impl="chunked"))
+    t_ref = _time(ref_fn, x, dt, A, Bm, C, D, h0)
+    t_chk = _time(chk_fn, x, dt, A, Bm, C, D, h0)
+    out.append(f"ssd_refscan_1k,{1e6*t_ref:.0f},speedup=1.0")
+    out.append(f"ssd_chunked_1k,{1e6*t_chk:.0f},speedup={t_ref/t_chk:.2f}")
+    return out

@@ -1,0 +1,46 @@
+"""Optimizer-offload ledger: per-arch host-DMA budget for the paper's technique.
+
+For every arch whose optimizer state is offloaded to the emulated-CXL tier, report
+the per-step DMA bytes/chip, the modeled transfer time at the host-link bandwidth,
+and the compute time it must overlap with (the roofline compute term) — i.e.
+whether the offload is FREE (hidden behind compute) or becomes the bottleneck.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core.hw import V5E
+
+ROOF_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "roofline"
+
+
+def bench() -> List[str]:
+    from repro.launch.dryrun import default_hp
+    from repro.launch.specs import offload_manifest
+
+    out = []
+    shape = SHAPES["train_4k"]
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        hp = default_hp(cfg)
+        man = offload_manifest(cfg, hp)
+        if not hp.offload_state:
+            out.append(f"offload_{arch},0,offloaded=no")
+            continue
+        per_chip = man.dma_bytes_per_step() / 256
+        t_dma = per_chip / V5E.host_link_bandwidth
+        t_comp = ""
+        roof = ROOF_DIR / f"{arch}__train_4k__baseline.json"
+        if roof.exists():
+            r = json.loads(roof.read_text())
+            t_comp = f",compute_s={r['t_compute']:.3f}" \
+                     f",hidden={'yes' if t_dma < r['t_compute'] else 'NO'}"
+        out.append(
+            f"offload_{arch},0,bytes_per_chip={per_chip/2**30:.2f}GiB,"
+            f"dma_s={t_dma:.3f}{t_comp}"
+        )
+    return out

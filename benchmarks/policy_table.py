@@ -1,0 +1,80 @@
+"""Paper Table IV reproduction — EXACT experimental protocol.
+
+Setup (paper §IV-B): local tier bounded at 300 objects, 1000 objects total, LRU
+demotion. 1000 PUTs then 50000 GETs where 90% of requests target the hottest x% of
+objects, x in {10..90}, plus a uniform-random row. Reported: % of GETs served from
+local memory under Policy1 (optimistic promote) vs Policy2 (no movement).
+
+Paper values for reference (Policy1 / Policy2 / diff):
+  10%: 81.37 / 3.29 / 78.08     50%: 14.87 / 5.94 / 8.93     90%: 30.43/29.95/0.48
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.emucxl import EmuCXL
+from repro.core.kvstore import KVStore
+from repro.core.policy import Policy1, Policy2
+
+PAPER_TABLE_IV = {
+    0.10: (81.37, 3.29), 0.20: (50.95, 3.77), 0.30: (28.59, 4.28),
+    0.40: (18.03, 4.94), 0.50: (14.87, 5.94), 0.60: (12.67, 7.57),
+    0.70: (12.68, 10.00), 0.80: (22.22, 21.17), 0.90: (30.43, 29.95),
+    "random": (29.79, 30.01),
+}
+
+
+def run_policy_experiment(
+    hot_frac, policy, n_objects=1000, local_cap=300, n_puts=1000, n_gets=50000,
+    seed=0,
+) -> float:
+    lib = EmuCXL()
+    lib.init(local_capacity=1 << 26, remote_capacity=1 << 27)
+    kv = KVStore(lib=lib, local_capacity_objects=local_cap, policy=policy)
+    for i in range(n_puts):
+        kv.put(f"k{i % n_objects}", f"value-{i}".encode())
+    kv.stats.reset()
+    g = np.random.default_rng(seed)
+    # pre-draw for speed
+    coins = g.random(n_gets)
+    hot_n = n_objects if hot_frac == "random" else max(int(hot_frac * n_objects), 1)
+    hot_ids = g.integers(0, hot_n, n_gets)
+    all_ids = g.integers(0, n_objects, n_gets)
+    for c, h, a in zip(coins, hot_ids, all_ids):
+        if hot_frac != "random" and c < 0.9:
+            kv.get(f"k{h}")
+        else:
+            kv.get(f"k{a}")
+    pct = kv.stats.percent_local
+    lib.exit()
+    return pct
+
+
+def full_table(n_gets: int = 50000) -> List[Dict]:
+    rows = []
+    for frac in list(np.round(np.arange(0.1, 1.0, 0.1), 2)) + ["random"]:
+        p1 = run_policy_experiment(frac, Policy1(), n_gets=n_gets)
+        p2 = run_policy_experiment(frac, Policy2(), n_gets=n_gets)
+        key = float(frac) if frac != "random" else "random"
+        paper = PAPER_TABLE_IV.get(key, (None, None))
+        rows.append({
+            "hot_frac": frac, "policy1_pct_local": p1, "policy2_pct_local": p2,
+            "diff": p1 - p2, "paper_policy1": paper[0], "paper_policy2": paper[1],
+        })
+    return rows
+
+
+def bench() -> List[str]:
+    rows = full_table(n_gets=5000)  # scaled for CI; run.py --full uses 50000
+    out = []
+    for r in rows:
+        out.append(
+            f"policy_table_{r['hot_frac']},0,"
+            f"p1={r['policy1_pct_local']:.2f}%,p2={r['policy2_pct_local']:.2f}%,"
+            f"diff={r['diff']:.2f},paper_p1={r['paper_policy1']},"
+            f"paper_p2={r['paper_policy2']}"
+        )
+    return out

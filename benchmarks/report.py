@@ -1,0 +1,124 @@
+"""Render EXPERIMENTS.md tables from the dry-run / roofline artifacts."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List
+
+from repro.configs import ARCH_IDS, SHAPES
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun"
+ROOF = ROOT / "experiments" / "roofline"
+
+
+def _gib(x) -> str:
+    return f"{x / 2**30:.2f}"
+
+
+def dryrun_table() -> str:
+    lines = [
+        "| arch | shape | mesh | rules | ga | args GiB/dev | host-tier GiB/dev | "
+        "temp GiB/dev | collectives (counts) | link GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                p = DRYRUN / f"{arch}__{shape}__{mesh}.json"
+                if not p.exists():
+                    continue
+                d = json.loads(p.read_text())
+                if d["status"] == "skip":
+                    lines.append(
+                        f"| {arch} | {shape} | {mesh} | — | — | — | — | — | "
+                        f"SKIP: {d['skip_reason']} | — |"
+                    )
+                    continue
+                if d["status"] != "ok":
+                    lines.append(f"| {arch} | {shape} | {mesh} | FAIL | | | | | {d['error'][:60]} | |")
+                    continue
+                mem = d["memory"]
+                coll = d["collectives"]
+                chips = 512 if mesh == "2x16x16" else 256
+                offload = d["offload_bytes"] if shape.startswith("train") else 0
+                host_gib = offload / chips / 2**30
+                counts = ",".join(f"{k.split('-')[0][:2]}{k.split('-')[1][:1] if '-' in k else ''}:{v}"
+                                  for k, v in sorted(coll["counts"].items()))
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | {d['rules']} | {d['grad_accum']} "
+                    f"| {_gib(mem['argument_bytes'] - offload/chips)} "
+                    f"| {host_gib:.2f} "
+                    f"| {_gib(mem['temp_bytes'])} "
+                    f"| {counts} "
+                    f"| {coll['link_bytes']/1e9:.2f} |"
+                )
+    return "\n".join(lines)
+
+
+def roofline_table(label: str = "baseline") -> str:
+    lines = [
+        "| arch | shape | bottleneck | compute s | memory s | collective s | "
+        "host-DMA s | MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            p = ROOF / f"{arch}__{shape}__{label}.json"
+            if not p.exists():
+                continue
+            d = json.loads(p.read_text())
+            lines.append(
+                f"| {arch} | {shape} | **{d['bottleneck']}** "
+                f"| {d['t_compute']:.3f} | {d['t_memory']:.3f} "
+                f"| {d['t_collective']:.3f} | {d['t_hostdma']:.3f} "
+                f"| {d['model_flops']:.2e} | {d['useful_ratio']:.3f} "
+                f"| {d['roofline_fraction']:.4f} |"
+            )
+    return "\n".join(lines)
+
+
+def perf_table(arch: str, shape: str) -> str:
+    """Before/after rows for one hillclimbed cell (baseline + labeled variants)."""
+    rows = [
+        "| variant | bottleneck | compute s | memory s | collective s | host s | "
+        "roofline frac | Δfrac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    base = None
+    for p in sorted(ROOF.glob(f"{arch}__{shape}__*.json")):
+        d = json.loads(p.read_text())
+        label = p.stem.split("__")[-1]
+        if label == "baseline":
+            base = d
+    order = ["baseline"] + sorted(
+        p.stem.split("__")[-1] for p in ROOF.glob(f"{arch}__{shape}__*.json")
+        if not p.stem.endswith("baseline")
+    )
+    for label in order:
+        p = ROOF / f"{arch}__{shape}__{label}.json"
+        if not p.exists():
+            continue
+        d = json.loads(p.read_text())
+        delta = ""
+        if base and label != "baseline" and base["roofline_fraction"] > 0:
+            delta = f"{(d['roofline_fraction']/base['roofline_fraction']-1)*100:+.0f}%"
+        rows.append(
+            f"| {label} | {d['bottleneck']} | {d['t_compute']:.3f} "
+            f"| {d['t_memory']:.3f} | {d['t_collective']:.3f} | {d['t_hostdma']:.3f} "
+            f"| {d['roofline_fraction']:.4f} | {delta} |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
+    if which == "dryrun":
+        print(dryrun_table())
+    elif which == "perf":
+        print(perf_table(sys.argv[2], sys.argv[3]))
+    else:
+        print(roofline_table(sys.argv[2] if len(sys.argv) > 2 else "baseline"))

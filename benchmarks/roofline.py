@@ -1,0 +1,259 @@
+"""Roofline term extraction with while-loop-corrected HLO costs.
+
+PROBLEM: XLA's HloCostAnalysis counts a while body ONCE, but production steps scan
+over layers / chunks / microbatches — reported FLOPs under the scanned lowering are
+~L x too small (verified empirically: scan-of-4-matmuls reports 1/4 the unrolled
+flops).
+
+METHOD: lower each cell a handful of times at small (num_layers L, seq_len T) with
+EVERY lax.scan fully unrolled (ModelOptions.unroll_scans) so costs are exact, then
+fit the exact polynomial structure
+
+    cost(L, T) = L * (a + b T + c T^2) + (d + e T + f T^2)
+
+(attention is quadratic in T; SSM/sliding layers land in the linear term; embed/
+unembed/loss live in the intercept) and evaluate at the production (L, T). Six
+points (2 L x 3 T) determine the six coefficients exactly; decode cells have no
+T-loop in the graph, so they use a 2-point linear fit in L at the production T.
+The same correction applies to bytes and collective link traffic. memory_analysis
+comes from the TRUE production compile (launch/dryrun.py artifacts).
+
+Validation: the fitted HLO FLOPs are cross-checked against analytic 6ND/2ND model
+FLOPs — the MODEL_FLOPS ratio reported per cell (EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+from typing import Dict, List, Optional, Tuple
+
+# must precede any jax initialization (the analysis lowers build production meshes)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core.hw import V5E
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "roofline"
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+# --------------------------------------------------------------------- fit points
+def layer_period(cfg) -> int:
+    if cfg.attention_kind == "sliding_global" and cfg.global_every:
+        return cfg.global_every
+    if cfg.ssm_attn_every:
+        return cfg.ssm_attn_every
+    return 1
+
+
+def cost_degree(cfg, shape) -> int:
+    """Polynomial degree of per-layer cost in T. Attention-free families are exactly
+    linear (chunked scans: T/c blocks of constant work); attention families are
+    exactly quadratic (causal masked scores) — so extrapolating the fitted
+    polynomial from small T to production T is exact, not approximate."""
+    if shape.kind == "decode":
+        return 0
+    if cfg.family in ("ssm", "hybrid"):
+        return 1
+    return 2
+
+
+def analysis_points(cfg, shape) -> Tuple[List[int], List[int]]:
+    """(L points, T points) for the fit, respecting pattern periods, window regime
+    (T >= 2*window so sliding layers are in their linear piece), and chunk sizes.
+    Points stay SMALL — the polynomial structure is exact, so small-T lowers
+    (fast unrolled compiles) determine the production-T cost exactly."""
+    p = layer_period(cfg)
+    base = max(p, 2 if cfg.moe_first_dense else p)
+    Ls = [cfg.moe_first_dense + base, cfg.moe_first_dense + 2 * base]
+    if shape.kind == "decode":
+        return Ls, [shape.seq_len]
+    deg = cost_degree(cfg, shape)
+    floor_t = 512
+    if cfg.attention_kind == "sliding_global":
+        floor_t = max(floor_t, 2 * cfg.sliding_window)
+    t1 = max(min(floor_t, shape.seq_len), 256)
+    Ts = [t1 * (1 << i) for i in range(deg + 1)]
+    Ts = [min(t, shape.seq_len) for t in Ts]
+    Ts = sorted(set(Ts))
+    return Ls, Ts
+
+
+def _design_row(L_var: float, T: float, degree: int) -> List[float]:
+    row = []
+    for d in range(degree + 1):
+        row.append(L_var * T**d)
+    for d in range(degree + 1):
+        row.append(float(T**d))
+    return row
+
+
+def fit_and_eval(points: List[Tuple[int, int, float]], L_full: int, T_full: int,
+                 L_off: int, degree: int) -> float:
+    """points: [(num_layers, T, value)]; L_off = layers absorbed in the intercept."""
+    # degenerate T spread: drop degree to what the points support
+    n_t = len({t for _, t, _ in points})
+    degree = min(degree, n_t - 1)
+    A = np.array([_design_row(L - L_off, T, degree) for L, T, _ in points])
+    y = np.array([v for _, _, v in points])
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    pred = float(np.dot(_design_row(L_full - L_off, T_full, degree), coef))
+    return max(pred, 0.0)
+
+
+# --------------------------------------------------------------------- measurement
+def measure(arch: str, shape_name: str, num_layers: int, seq_len: int,
+            rules_override: Optional[str] = None, grad_accum: int = 1,
+            opts_override=None) -> Dict[str, float]:
+    """One unrolled analysis lower+compile; returns per-device cost terms."""
+    from repro.launch.dryrun import build_cell, parse_collectives
+
+    lowered, meta = build_cell(
+        arch, shape_name, multi_pod=False, num_layers=num_layers,
+        seq_len=seq_len, unroll=True, rules_override=rules_override,
+        grad_accum=grad_accum, opts_override=opts_override,
+    )
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "link_bytes": float(coll["link_bytes"]),
+    }
+
+
+@dataclasses.dataclass
+class RooflineResult:
+    arch: str
+    shape: str
+    rules: str
+    chips: int
+    # corrected per-device totals
+    flops_dev: float
+    bytes_dev: float
+    link_bytes_dev: float
+    host_dma_bytes_dev: float
+    # terms (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    t_hostdma: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float      # MODEL_FLOPS / (flops_dev * chips)
+    roofline_fraction: float  # useful-compute-time / bottleneck-time
+    fit_points: int
+    seconds: float
+    label: str = "baseline"
+
+
+def analyze_cell(arch: str, shape_name: str,
+                 rules_override: Optional[str] = None,
+                 opts_override=None, grad_accum: int = 1,
+                 label: str = "baseline",
+                 chips: int = 256) -> Optional[RooflineResult]:
+    from repro.models.transformer import model_flops
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, _reason = cfg.supports_shape(shape)
+    if not ok:
+        return None
+    t0 = time.time()
+    Ls, Ts = analysis_points(cfg, shape)
+    degree = cost_degree(cfg, shape)
+    pts = []
+    for L in Ls:
+        for T in Ts:
+            m = measure(arch, shape_name, L, T, rules_override, grad_accum,
+                        opts_override)
+            pts.append((L, T, m))
+    L_off = cfg.moe_first_dense
+    terms = {}
+    for key in ("flops", "bytes", "link_bytes"):
+        terms[key] = fit_and_eval(
+            [(L, T, m[key]) for L, T, m in pts], cfg.num_layers, shape.seq_len,
+            L_off, degree,
+        )
+
+    # host-DMA ledger from the offload manifest (CPU cannot place host buffers)
+    from repro.launch.dryrun import default_hp
+    from repro.launch.specs import offload_manifest
+
+    man = offload_manifest(cfg, default_hp(cfg))
+    host_bytes_dev = man.dma_bytes_per_step() / chips if shape.kind == "train" else 0.0
+
+    t_compute = terms["flops"] / V5E.peak_flops_bf16
+    t_memory = terms["bytes"] / V5E.hbm_bandwidth
+    t_collective = terms["link_bytes"] / V5E.ici_link_bandwidth
+    t_hostdma = host_bytes_dev / V5E.host_link_bandwidth
+    named = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective, "host_dma": t_hostdma}
+    bottleneck = max(named, key=named.get)
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mf = model_flops(cfg, tokens, "train")
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mf = model_flops(cfg, tokens, "inference")
+    else:
+        mf = model_flops(cfg, shape.global_batch, "inference")
+
+    total_hlo = terms["flops"] * chips
+    useful_ratio = mf / total_hlo if total_hlo else 0.0
+    t_useful = mf / chips / V5E.peak_flops_bf16
+    frac = t_useful / max(max(named.values()), 1e-30)
+
+    return RooflineResult(
+        arch=arch, shape=shape_name,
+        rules=rules_override or "", chips=chips,
+        flops_dev=terms["flops"], bytes_dev=terms["bytes"],
+        link_bytes_dev=terms["link_bytes"], host_dma_bytes_dev=host_bytes_dev,
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_collective,
+        t_hostdma=t_hostdma, bottleneck=bottleneck,
+        model_flops=mf, useful_ratio=useful_ratio, roofline_fraction=frac,
+        fit_points=len(pts), seconds=time.time() - t0, label=label,
+    )
+
+
+def cell_path(arch: str, shape_name: str, label: str = "baseline") -> pathlib.Path:
+    return OUT_DIR / f"{arch}__{shape_name}__{label}.json"
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for arch in archs:
+        for shape_name in shapes:
+            path = cell_path(arch, shape_name)
+            if path.exists() and not args.force:
+                print(f"[roofline] {arch} x {shape_name}: cached")
+                continue
+            res = analyze_cell(arch, shape_name)
+            if res is None:
+                print(f"[roofline] {arch} x {shape_name}: skip")
+                continue
+            path.write_text(json.dumps(dataclasses.asdict(res), indent=1))
+            print(f"[roofline] {arch} x {shape_name}: {res.bottleneck}-bound "
+                  f"frac={res.roofline_fraction:.3f} useful={res.useful_ratio:.3f} "
+                  f"({res.seconds:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Benchmark entry point: one function per paper table + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--full`` uses the paper's exact
+workload sizes (50k GETs, 15k queue ops); default is scaled for wall-clock.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale workloads (slower)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: queue,policy,kernels,offload,serving")
+    args = ap.parse_args()
+    selected = set(args.only.split(",")) if args.only else None
+
+    rows = ["name,us_per_call,derived"]
+
+    def want(name: str) -> bool:
+        return selected is None or name in selected
+
+    if want("queue"):
+        from benchmarks import queue_latency
+        if args.full:
+            for r in queue_latency.run_queue_experiment(15000, 3):
+                for op in ("enqueue", "dequeue"):
+                    rows.append(
+                        f"queue_{op}_{r['tier']},"
+                        f"{1e3*r[f'{op}_ms_measured_mean']/r['n_ops']:.2f},"
+                        f"measured_ms={r[f'{op}_ms_measured_mean']:.1f}"
+                        f"+-{r[f'{op}_ms_measured_std']:.1f},"
+                        f"modeled_v5e_ms={r[f'{op}_ms_modeled_v5e']:.3f}"
+                    )
+        else:
+            rows += queue_latency.bench()
+
+    if want("policy"):
+        from benchmarks import policy_table
+        if args.full:
+            for r in policy_table.full_table(50000):
+                rows.append(
+                    f"policy_table_{r['hot_frac']},0,"
+                    f"p1={r['policy1_pct_local']:.2f}%,"
+                    f"p2={r['policy2_pct_local']:.2f}%,diff={r['diff']:.2f},"
+                    f"paper_p1={r['paper_policy1']},paper_p2={r['paper_policy2']}"
+                )
+        else:
+            rows += policy_table.bench()
+
+    if want("kernels"):
+        from benchmarks import kernel_bench
+        rows += kernel_bench.bench()
+
+    if want("serving"):
+        from benchmarks import serving_bench
+        rows += serving_bench.bench()
+
+    if want("offload"):
+        from benchmarks import offload_bench
+        rows += offload_bench.bench()
+
+    print("\n".join(rows))
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

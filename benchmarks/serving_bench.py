@@ -1,0 +1,47 @@
+"""Serving-path benchmark: paged decode throughput + tier-policy hit rates under a
+prefix-reuse workload (the paper's KV-store use case on real model traffic)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import emucxl as ecxl
+from repro.core.policy import Policy1, Policy2
+from repro.models import transformer as tf
+from repro.serving.engine import ServingEngine
+
+
+def bench() -> List[str]:
+    out = []
+    cfg = get_config("gemma3-1b").reduced()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    for policy, name in ((Policy1(), "policy1"), (Policy2(), "policy2")):
+        lib = ecxl.EmuCXL()
+        lib.init(local_capacity=1 << 26, remote_capacity=1 << 28)
+        eng = ServingEngine(params, cfg, num_slots=4, page_size=8, max_batch=2,
+                            max_pages_per_seq=2, policy=policy)
+        eng.pool.lib = lib
+        eng.pool.slab.lib = lib
+        for _ in range(4):
+            eng.submit(list(rng.integers(0, cfg.vocab_size, 5)), max_new_tokens=6)
+        t0 = time.perf_counter()
+        results = eng.run(max_steps=400)
+        dt = time.perf_counter() - t0
+        n_tokens = sum(len(v) for v in results.values())
+        stats = eng.tier_stats()
+        out.append(
+            f"serving_decode_{name},{1e6*dt/max(n_tokens,1):.0f},"
+            f"tokens={n_tokens},pct_local={stats['percent_local']:.1f}%,"
+            f"preemptions={stats['preemptions']},"
+            f"remote_bytes={stats['remote_bytes']}"
+        )
+        lib.exit()
+    return out

@@ -1,0 +1,65 @@
+"""End-to-end driver: train a ~100M-param gemma3-family model for a few hundred
+steps on synthetic data, with checkpointing, restart, and (ZeRO-1) sharded
+optimizer state — exercising the full training substrate on CPU.
+
+Run: PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.data.loader import PrefetchLoader
+from repro.data.synthetic import SyntheticTokens
+from repro.launch.steps import make_train_step
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.runtime.train_loop import TrainLoopConfig, run
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train100m")
+    args = ap.parse_args()
+
+    # ~100M params: gemma3-1b family, narrowed
+    cfg = dataclasses.replace(
+        get_config("gemma3-1b"),
+        num_layers=6, d_model=512, num_heads=4, num_kv_heads=1, head_dim=64,
+        d_ff=2048, vocab_size=32768, sliding_window=128, global_every=3,
+        dtype="float32", param_dtype="float32",
+    )
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(int(x.size) for x in jax.tree.leaves(params))
+    print(f"model: {n/1e6:.1f}M params ({cfg.num_layers}L d={cfg.d_model})")
+
+    hp = adamw.OptimizerConfig(learning_rate=3e-3, warmup_steps=20,
+                               decay_steps=args.steps)
+    opt = adamw.init_state(params, hp)
+    step = jax.jit(make_train_step(cfg, tf.ModelOptions(), hp))
+    src = SyntheticTokens(cfg, batch=8, seq_len=128, seed=0)
+    loader = PrefetchLoader(src)
+
+    def log(step_idx, metrics):
+        print(f"step {step_idx:4d}  loss={metrics['loss']:.4f}  "
+              f"ce={metrics['ce']:.4f}  gnorm={metrics['grad_norm']:.2f}")
+
+    result = run(
+        step, params, opt, loader,
+        TrainLoopConfig(total_steps=args.steps, ckpt_every=100,
+                        ckpt_dir=args.ckpt_dir, log_every=20),
+        metrics_cb=log,
+    )
+    loader.close()
+    first = result["history"][0].loss
+    last = result["history"][-1].loss
+    print(f"loss {first:.4f} -> {last:.4f} over {args.steps} steps "
+          f"({result['restarts']} restarts)")
+    assert last < first, "training failed to reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Fault-tolerant sharded checkpointing: atomic step dirs, async save, resume.
+
+Layout: <dir>/step_<n>/<flat.param.path>.npy + manifest.json. Writes go to a tmp
+dir renamed into place (atomic on POSIX), so a preempted save never corrupts the
+latest checkpoint; ``latest_step`` simply picks the highest complete step. Saves can
+run on a background thread (training continues; the next save joins the previous).
+Restore accepts a target sharding tree so a checkpoint written on one mesh reshapes
+onto another (the elastic-restart path — runtime/elastic.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "__"
+
+
+def _flatten(tree: Any) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Dict[str, Any], extra: Optional[Dict] = None,
+             block: bool = False) -> None:
+        """Snapshot to host (cheap) then persist atomically (optionally async)."""
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+        self.wait()
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_state, extra or {}), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host_state, extra or {})
+
+    def _write(self, step: int, host_state: Dict[str, Any], extra: Dict) -> None:
+        final = self.dir / f"step_{step:09d}"
+        tmp = self.dir / f".tmp_step_{step:09d}_{os.getpid()}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten(host_state)
+        manifest = {"step": step, "extra": extra, "keys": sorted(flat),
+                    "time": time.time()}
+        for key, arr in flat.items():
+            np.save(tmp / f"{key}.npy", arr)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)          # atomic publish
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self) -> None:
+        steps = sorted(self.steps())
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # ------------------------------------------------------------------ restore
+    def steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template: Any,
+                shardings: Optional[Any] = None) -> Any:
+        """Load into the structure of `template`; place per `shardings` if given
+        (which may describe a different mesh than the one that saved — elastic)."""
+        src = self.dir / f"step_{step:09d}"
+        flat_t = _flatten(template)
+        flat_s = _flatten(shardings) if shardings is not None else {}
+        loaded = {}
+        for key, leaf in flat_t.items():
+            arr = np.load(src / f"{key}.npy")
+            if hasattr(leaf, "dtype"):
+                arr = arr.astype(leaf.dtype)
+            if key in flat_s:
+                loaded[key] = jax.device_put(arr, flat_s[key])
+            else:
+                loaded[key] = jax.numpy.asarray(arr)
+        # unflatten by rebuilding along the template treedef
+        leaves_order = [
+            _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in jax.tree_util.tree_leaves_with_path(template)
+        ]
+        treedef = jax.tree_util.tree_structure(template)
+        return jax.tree_util.tree_unflatten(
+            treedef, [loaded[k] for k in leaves_order]
+        )
+
+    def extra(self, step: int) -> Dict:
+        src = self.dir / f"step_{step:09d}" / "manifest.json"
+        return json.loads(src.read_text()).get("extra", {})

@@ -1,0 +1,14 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ArchConfig,
+    ShapeConfig,
+    all_configs,
+    get_config,
+    register,
+)
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "ArchConfig", "ShapeConfig", "all_configs", "get_config",
+    "register",
+]

@@ -1,0 +1,47 @@
+"""repro.core — the paper's contribution: emucxl-style two-tier disaggregated memory.
+
+Public surface mirrors paper Table II (``emucxl_*``) plus the middleware the paper
+demonstrates (KV store, slab allocator, direct-access queue) and the training/serving
+integration helpers (offload).
+"""
+
+from repro.core.emucxl import (
+    LOCAL_MEMORY,
+    REMOTE_MEMORY,
+    Allocation,
+    EmuCXL,
+    EmuCXLError,
+    OutOfTierMemory,
+    default_instance,
+    emucxl_alloc,
+    emucxl_exit,
+    emucxl_free,
+    emucxl_get_numa_node,
+    emucxl_get_size,
+    emucxl_init,
+    emucxl_is_local,
+    emucxl_memcpy,
+    emucxl_memmove,
+    emucxl_memset,
+    emucxl_migrate,
+    emucxl_read,
+    emucxl_resize,
+    emucxl_stats,
+    emucxl_write,
+)
+from repro.core.hw import V5E, HardwareModel
+from repro.core.kvstore import KVStore
+from repro.core.policy import AccessStats, Policy1, Policy2, Tier, make_policy
+from repro.core.pool import LRUTier
+from repro.core.queue import EmuQueue
+from repro.core.slab import SlabAllocator, SlabPtr
+
+__all__ = [
+    "LOCAL_MEMORY", "REMOTE_MEMORY", "Allocation", "EmuCXL", "EmuCXLError",
+    "OutOfTierMemory", "default_instance", "emucxl_alloc", "emucxl_exit", "emucxl_free",
+    "emucxl_get_numa_node", "emucxl_get_size", "emucxl_init", "emucxl_is_local",
+    "emucxl_memcpy", "emucxl_memmove", "emucxl_memset", "emucxl_migrate", "emucxl_read",
+    "emucxl_resize", "emucxl_stats", "emucxl_write", "V5E", "HardwareModel", "KVStore",
+    "AccessStats", "Policy1", "Policy2", "Tier", "make_policy", "LRUTier", "EmuQueue",
+    "SlabAllocator", "SlabPtr",
+]

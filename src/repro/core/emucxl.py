@@ -1,0 +1,383 @@
+"""The emucxl standardized API (paper Table II), adapted from x86-NUMA to JAX memory spaces.
+
+The paper's library hands out virtual addresses backed by `kmalloc_node` on NUMA node 0
+(local) or node 1 (the emulated CXL pool). Here the two tiers are XLA memory spaces:
+
+  node 0 (LOCAL)  -> ``memory_kind="device"``      (TPU HBM; CPU default space in tests)
+  node 1 (REMOTE) -> ``memory_kind="pinned_host"`` (host DRAM behind PCIe, the CXL.mem proxy)
+
+Allocations are byte-granular ``uint8`` buffers, faithful to the paper's ``void*``/``size_t``
+API; tensor views are layered on top for framework use. Every allocation carries metadata
+(address, size, node) in a registry backing ``is_local / get_numa_node / get_size / stats``,
+exactly like the paper's user-space metadata structure.
+
+Differences from the paper, per DESIGN.md §2: accesses are DMA'd slices rather than
+cache-line loads (TPU cores cannot load from host memory), and ``memmove`` is identical to
+``memcpy`` because functional arrays never alias.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hw import V5E, HardwareModel
+
+LOCAL_MEMORY = 0
+REMOTE_MEMORY = 1
+_VALID_NODES = (LOCAL_MEMORY, REMOTE_MEMORY)
+
+_MEMORY_KINDS = {LOCAL_MEMORY: "device", REMOTE_MEMORY: "pinned_host"}
+
+# Fake virtual-address space: page-aligned, monotonically increasing. Gives the API the
+# paper's void*-shaped surface while remaining a pure lookup key.
+_PAGE = 4096
+
+
+class EmuCXLError(RuntimeError):
+    pass
+
+
+class OutOfTierMemory(EmuCXLError):
+    def __init__(self, node: int, requested: int, free: int):
+        super().__init__(
+            f"tier {node} ({'local/HBM' if node == 0 else 'remote/host'}) cannot serve "
+            f"{requested} bytes ({free} free)"
+        )
+        self.node, self.requested, self.free = node, requested, free
+
+
+@dataclasses.dataclass
+class Allocation:
+    """Registry record: the paper's per-allocation metadata (address, size, node)."""
+
+    address: int
+    size: int
+    node: int
+    data: jax.Array
+    clock: int = 0  # LRU touch counter, maintained by the library
+
+    @property
+    def nbytes(self) -> int:
+        return self.size
+
+
+def _sharding_for(node: int, device=None):
+    dev = device if device is not None else jax.devices()[0]
+    return jax.sharding.SingleDeviceSharding(dev, memory_kind=_MEMORY_KINDS[node])
+
+
+class EmuCXL:
+    """A two-tier disaggregated-memory manager with the paper's standardized API.
+
+    One instance == one "process" in the paper's single-process model. The module-level
+    functions below delegate to a default instance for drop-in, C-style usage.
+    """
+
+    def __init__(self, hw: HardwareModel = V5E):
+        self.hw = hw
+        self._lock = threading.RLock()
+        self._initialized = False
+        self._allocs: Dict[int, Allocation] = {}
+        self._next_addr = _PAGE
+        self._clock = 0
+        self._capacity = {LOCAL_MEMORY: 0, REMOTE_MEMORY: 0}
+        self._used = {LOCAL_MEMORY: 0, REMOTE_MEMORY: 0}
+        self._device = None
+        # Modeled elapsed DMA time per tier (seconds) — the Table III analogue on the
+        # target HW; the CPU runtime cannot exhibit real HBM-vs-PCIe gaps.
+        self.modeled_time = {LOCAL_MEMORY: 0.0, REMOTE_MEMORY: 0.0}
+
+    # ------------------------------------------------------------------ lifecycle
+    def init(
+        self,
+        local_capacity: Optional[int] = None,
+        remote_capacity: Optional[int] = None,
+        device=None,
+    ) -> None:
+        """``emucxl_init``: open the (emulated) CXL device, size the tiers."""
+        with self._lock:
+            if self._initialized:
+                raise EmuCXLError("emucxl_init called twice without emucxl_exit")
+            self._device = device if device is not None else jax.devices()[0]
+            self._capacity[LOCAL_MEMORY] = (
+                local_capacity if local_capacity is not None else self.hw.hbm_capacity
+            )
+            self._capacity[REMOTE_MEMORY] = (
+                remote_capacity if remote_capacity is not None else self.hw.host_capacity
+            )
+            self._initialized = True
+
+    def exit(self) -> None:
+        """``emucxl_exit``: free all allocations, close the device."""
+        with self._lock:
+            self._require_init()
+            self._allocs.clear()
+            self._used = {LOCAL_MEMORY: 0, REMOTE_MEMORY: 0}
+            self._initialized = False
+
+    def _require_init(self) -> None:
+        if not self._initialized:
+            raise EmuCXLError("emucxl not initialized (call emucxl_init first)")
+
+    def _check_node(self, node: int) -> None:
+        if node not in _VALID_NODES:
+            raise EmuCXLError(f"invalid node {node}; 0=local, 1=remote")
+
+    def _resolve(self, address: Union[int, Allocation]) -> Allocation:
+        if isinstance(address, Allocation):
+            address = address.address
+        rec = self._allocs.get(address)
+        if rec is None:
+            raise EmuCXLError(f"invalid address {address:#x} (not an emucxl allocation)")
+        return rec
+
+    def _touch(self, rec: Allocation) -> None:
+        self._clock += 1
+        rec.clock = self._clock
+
+    # ------------------------------------------------------------------ allocation
+    def alloc(self, size: int, node: int) -> int:
+        """``emucxl_alloc``: allocate `size` bytes on tier `node`; returns the address.
+
+        The paper overloads mmap()'s offset field to smuggle the node id into the kernel
+        backend; our equivalent side channel is the memory kind on the target sharding.
+        """
+        with self._lock:
+            self._require_init()
+            self._check_node(node)
+            if size <= 0:
+                raise EmuCXLError(f"invalid allocation size {size}")
+            free = self._capacity[node] - self._used[node]
+            if size > free:
+                raise OutOfTierMemory(node, size, free)
+            data = jax.device_put(
+                jnp.zeros((size,), jnp.uint8), _sharding_for(node, self._device)
+            )
+            addr = self._next_addr
+            self._next_addr += -(-size // _PAGE) * _PAGE  # next page boundary
+            rec = Allocation(address=addr, size=size, node=node, data=data)
+            self._touch(rec)
+            self._allocs[addr] = rec
+            self._used[node] += size
+            self.modeled_time[node] += self.hw.tier_latency(node)
+            return addr
+
+    def free(self, address: Union[int, Allocation], size: Optional[int] = None) -> None:
+        """``emucxl_free``: release the block. `size` is accepted for API fidelity and
+        validated against the registry (the paper trusts the caller; we do not)."""
+        with self._lock:
+            rec = self._resolve(address)
+            if size is not None and size != rec.size:
+                raise EmuCXLError(
+                    f"emucxl_free size mismatch: allocation is {rec.size} bytes, caller "
+                    f"passed {size}"
+                )
+            del self._allocs[rec.address]
+            self._used[rec.node] -= rec.size
+
+    def resize(self, address: Union[int, Allocation], size: int) -> int:
+        """``emucxl_resize``: allocate `size` on the same node, copy, free old, return new."""
+        with self._lock:
+            rec = self._resolve(address)
+            new_addr = self.alloc(size, rec.node)
+            new_rec = self._allocs[new_addr]
+            n = min(size, rec.size)
+            new_rec.data = new_rec.data.at[:n].set(rec.data[:n])
+            self.modeled_time[rec.node] += self.hw.transfer_time(n, rec.node)
+            self.free(rec.address)
+            return new_addr
+
+    def migrate(self, address: Union[int, Allocation], node: int) -> int:
+        """``emucxl_migrate``: move the block to `node`, return the new address."""
+        with self._lock:
+            rec = self._resolve(address)
+            self._check_node(node)
+            if node == rec.node:
+                self._touch(rec)
+                return rec.address
+            new_addr = self.alloc(rec.size, node)
+            new_rec = self._allocs[new_addr]
+            # Cross-tier DMA: device_put re-homes the buffer into the other memory space.
+            new_rec.data = jax.device_put(rec.data, _sharding_for(node, self._device))
+            self.modeled_time[REMOTE_MEMORY] += self.hw.migrate_time(rec.size)
+            self.free(rec.address)
+            return new_addr
+
+    # ------------------------------------------------------------------ introspection
+    def is_local(self, address: Union[int, Allocation]) -> bool:
+        with self._lock:
+            return self._resolve(address).node == LOCAL_MEMORY
+
+    def get_numa_node(self, address: Union[int, Allocation]) -> int:
+        with self._lock:
+            return self._resolve(address).node
+
+    def get_size(self, address: Union[int, Allocation]) -> int:
+        with self._lock:
+            return self._resolve(address).size
+
+    def stats(self, node: int) -> int:
+        """``emucxl_stats``: total bytes currently allocated on `node`."""
+        with self._lock:
+            self._check_node(node)
+            return self._used[node]
+
+    def capacity(self, node: int) -> int:
+        with self._lock:
+            self._check_node(node)
+            return self._capacity[node]
+
+    def allocations(self) -> Dict[int, Allocation]:
+        with self._lock:
+            return dict(self._allocs)
+
+    # ------------------------------------------------------------------ data movement
+    def read(self, address: Union[int, Allocation], offset: int, buf_size: int) -> np.ndarray:
+        """``emucxl_read``: DMA `buf_size` bytes at `offset` out of the allocation."""
+        with self._lock:
+            rec = self._resolve(address)
+            self._bounds(rec, offset, buf_size)
+            self._touch(rec)
+            self.modeled_time[rec.node] += self.hw.transfer_time(buf_size, rec.node)
+            return np.asarray(rec.data[offset : offset + buf_size])
+
+    def write(self, buf: np.ndarray, offset: int, address: Union[int, Allocation],
+              buf_size: Optional[int] = None) -> bool:
+        """``emucxl_write``: DMA bytes from `buf` into the allocation at `offset`."""
+        with self._lock:
+            rec = self._resolve(address)
+            flat = np.asarray(buf, dtype=np.uint8).reshape(-1)
+            n = buf_size if buf_size is not None else flat.size
+            self._bounds(rec, offset, n)
+            rec.data = rec.data.at[offset : offset + n].set(flat[:n])
+            self._touch(rec)
+            self.modeled_time[rec.node] += self.hw.transfer_time(n, rec.node)
+            return True
+
+    def memset(self, address: Union[int, Allocation], value: int, size: int) -> int:
+        """``emucxl_memset``: fill `size` bytes with `value` (paper: 0 or -1)."""
+        with self._lock:
+            rec = self._resolve(address)
+            self._bounds(rec, 0, size)
+            byte = np.uint8(value & 0xFF)
+            rec.data = rec.data.at[:size].set(byte)
+            self._touch(rec)
+            self.modeled_time[rec.node] += self.hw.transfer_time(size, rec.node)
+            return rec.address
+
+    def memcpy(self, dst: Union[int, Allocation], src: Union[int, Allocation],
+               size: int) -> int:
+        with self._lock:
+            drec, srec = self._resolve(dst), self._resolve(src)
+            self._bounds(srec, 0, size)
+            self._bounds(drec, 0, size)
+            chunk = srec.data[:size]
+            if drec.node != srec.node:
+                chunk = jax.device_put(chunk, _sharding_for(drec.node, self._device))
+                self.modeled_time[REMOTE_MEMORY] += self.hw.migrate_time(size)
+            else:
+                self.modeled_time[drec.node] += self.hw.transfer_time(size, drec.node)
+            drec.data = drec.data.at[:size].set(chunk)
+            self._touch(drec)
+            self._touch(srec)
+            return drec.address
+
+    def memmove(self, dst, src, size: int) -> int:
+        """Identical to memcpy under functional arrays (no aliasing) — see module docs."""
+        return self.memcpy(dst, src, size)
+
+    # ------------------------------------------------------------------ tensor views
+    def alloc_array(self, shape, dtype, node: int) -> int:
+        """Framework convenience: allocate bytes sized for `shape`/`dtype` on `node`."""
+        nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        addr = self.alloc(max(nbytes, 1), node)
+        return addr
+
+    def read_array(self, address, shape, dtype) -> np.ndarray:
+        nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        raw = self.read(address, 0, nbytes)
+        return raw.view(np.dtype(dtype)).reshape(shape)
+
+    def write_array(self, array, address) -> bool:
+        raw = np.ascontiguousarray(array).view(np.uint8).reshape(-1)
+        return self.write(raw, 0, address)
+
+    def _bounds(self, rec: Allocation, offset: int, n: int) -> None:
+        if offset < 0 or n < 0 or offset + n > rec.size:
+            raise EmuCXLError(
+                f"out-of-bounds access [{offset}, {offset + n}) on {rec.size}-byte block"
+            )
+
+
+# --------------------------------------------------------------------- C-style facade
+_default = EmuCXL()
+
+
+def default_instance() -> EmuCXL:
+    return _default
+
+
+def emucxl_init(local_capacity=None, remote_capacity=None, device=None) -> None:
+    _default.init(local_capacity, remote_capacity, device)
+
+
+def emucxl_exit() -> None:
+    _default.exit()
+
+
+def emucxl_alloc(size: int, node: int) -> int:
+    return _default.alloc(size, node)
+
+
+def emucxl_free(address, size=None) -> None:
+    _default.free(address, size)
+
+
+def emucxl_resize(address, size: int) -> int:
+    return _default.resize(address, size)
+
+
+def emucxl_migrate(address, node: int) -> int:
+    return _default.migrate(address, node)
+
+
+def emucxl_is_local(address) -> bool:
+    return _default.is_local(address)
+
+
+def emucxl_get_numa_node(address) -> int:
+    return _default.get_numa_node(address)
+
+
+def emucxl_get_size(address) -> int:
+    return _default.get_size(address)
+
+
+def emucxl_stats(node: int) -> int:
+    return _default.stats(node)
+
+
+def emucxl_read(address, offset: int, buf_size: int) -> np.ndarray:
+    return _default.read(address, offset, buf_size)
+
+
+def emucxl_write(buf, offset: int, address, buf_size=None) -> bool:
+    return _default.write(buf, offset, address, buf_size)
+
+
+def emucxl_memset(address, value: int, size: int) -> int:
+    return _default.memset(address, value, size)
+
+
+def emucxl_memcpy(dst, src, size: int) -> int:
+    return _default.memcpy(dst, src, size)
+
+
+def emucxl_memmove(dst, src, size: int) -> int:
+    return _default.memmove(dst, src, size)

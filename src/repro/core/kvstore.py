@@ -1,0 +1,102 @@
+"""Key-value store middleware over the emucxl API (paper §IV-B, Listings 2-4).
+
+Semantics follow the paper exactly:
+  * PUT inserts the object in the *local* tier at the MRU position; if the local tier
+    exceeds its bound, the LRU object is migrated to the remote tier (assumed large).
+  * GET searches local, then remote. A remote hit is handled by the configured policy —
+    Policy1 promotes (optimistic caching), Policy2 leaves it remote.
+  * DELETE frees the object from whichever tier holds it.
+
+Objects are real emucxl allocations (bytes in the device or host memory space), not
+Python dict entries — every migration is an actual cross-memory-space DMA.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import emucxl as ecxl
+from repro.core.policy import AccessStats, PromotionPolicy, Policy1
+from repro.core.pool import LRUTier
+
+
+class KVStore:
+    def __init__(
+        self,
+        lib: Optional[ecxl.EmuCXL] = None,
+        local_capacity_objects: int = 300,
+        policy: PromotionPolicy = Policy1(),
+    ):
+        self.lib = lib if lib is not None else ecxl.default_instance()
+        self.local = LRUTier(local_capacity_objects, name="kv-local")
+        self.policy = policy
+        self.stats = AccessStats()
+        self._addr: Dict[str, int] = {}     # key -> emucxl address
+        self._node: Dict[str, int] = {}     # key -> tier (0 local / 1 remote)
+        self._size: Dict[str, int] = {}     # key -> payload bytes
+
+    # ------------------------------------------------------------------ operations
+    def put(self, key: str, value: bytes) -> None:
+        """Paper Listing 2: allocate local, MRU-insert, LRU-demote on overflow."""
+        if key in self._addr:
+            self.delete(key)
+        addr = self.lib.alloc(max(len(value), 1), ecxl.LOCAL_MEMORY)
+        self.lib.write(np.frombuffer(value, np.uint8), 0, addr)
+        self._addr[key] = addr
+        self._node[key] = ecxl.LOCAL_MEMORY
+        self._size[key] = len(value)
+        for victim in self.local.add(key):
+            self._demote(victim)
+
+    def get(self, key: str) -> Optional[bytes]:
+        """Paper Listing 3: local search, remote search, policy on remote hit."""
+        if key not in self._addr:
+            self.stats.misses += 1
+            return None
+        if self._node[key] == ecxl.LOCAL_MEMORY:
+            self.stats.local_hits += 1
+            self.local.touch(key)
+        else:
+            self.stats.remote_hits += 1
+            if self.policy.promote_on_hit(key):
+                self._promote(key)
+        return self._read(key)
+
+    def delete(self, key: str) -> bool:
+        """Paper Listing 4."""
+        if key not in self._addr:
+            return False
+        if self._node[key] == ecxl.LOCAL_MEMORY:
+            self.local.remove(key)
+        self.lib.free(self._addr[key])
+        del self._addr[key], self._node[key], self._size[key]
+        return True
+
+    # ------------------------------------------------------------------ tier moves
+    def _demote(self, key: str) -> None:
+        self._addr[key] = self.lib.migrate(self._addr[key], ecxl.REMOTE_MEMORY)
+        self._node[key] = ecxl.REMOTE_MEMORY
+
+    def _promote(self, key: str) -> None:
+        self._addr[key] = self.lib.migrate(self._addr[key], ecxl.LOCAL_MEMORY)
+        self._node[key] = ecxl.LOCAL_MEMORY
+        for victim in self.local.add(key):
+            self._demote(victim)
+
+    def _read(self, key: str) -> bytes:
+        return self.lib.read(self._addr[key], 0, self._size[key]).tobytes()
+
+    # ------------------------------------------------------------------ introspection
+    def tier_of(self, key: str) -> Optional[int]:
+        return self._node.get(key)
+
+    def local_count(self) -> int:
+        return len(self.local)
+
+    def remote_count(self) -> int:
+        return sum(1 for n in self._node.values() if n == ecxl.REMOTE_MEMORY)
+
+    def __len__(self) -> int:
+        return len(self._addr)

@@ -1,0 +1,94 @@
+"""Placement / promotion policies for two-tier disaggregated memory (paper §IV-B).
+
+Policy1 — optimistic: a remote hit promotes the object to the local tier (caching for
+subsequent access), possibly demoting the local LRU victim.
+Policy2 — conservative: remote hits are served in place; nothing moves.
+
+The paper evaluates these on its KV-store middleware (Table IV); here the same policy
+objects also drive the serving-time paged KV-cache manager, so the comparison carries
+over to a real workload (hot KV pages in HBM, cold pages in host memory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Hashable, List, Optional, Protocol
+
+
+class Tier(enum.IntEnum):
+    LOCAL = 0
+    REMOTE = 1
+
+
+class PromotionPolicy(Protocol):
+    """Decides whether a remote hit should be promoted to the local tier."""
+
+    name: str
+
+    def promote_on_hit(self, key: Hashable) -> bool: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy1:
+    """Optimistic promotion (paper Policy1): every remote hit moves the object local."""
+
+    name: str = "policy1-optimistic"
+
+    def promote_on_hit(self, key: Hashable) -> bool:
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy2:
+    """Conservative (paper Policy2): serve remote hits in place, never move."""
+
+    name: str = "policy2-conservative"
+
+    def promote_on_hit(self, key: Hashable) -> bool:
+        return False
+
+
+@dataclasses.dataclass
+class AccessStats:
+    """Hit accounting used to reproduce the paper's Table IV ("% local")."""
+
+    local_hits: int = 0
+    remote_hits: int = 0
+    misses: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.local_hits + self.remote_hits + self.misses
+
+    @property
+    def percent_local(self) -> float:
+        hits = self.local_hits + self.remote_hits
+        return 100.0 * self.local_hits / hits if hits else 0.0
+
+    def reset(self) -> None:
+        self.local_hits = self.remote_hits = self.misses = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class WriteBackPolicy:
+    """Demotion batching for dirty pages (beyond-paper: used by the KV-cache manager).
+
+    batch_pages > 1 coalesces demotions into fewer, larger host DMAs — the TPU analogue
+    of write-combining on the CXL link.
+    """
+
+    batch_pages: int = 1
+
+
+def make_policy(name: str) -> PromotionPolicy:
+    table = {
+        "policy1": Policy1(),
+        "policy1-optimistic": Policy1(),
+        "policy2": Policy2(),
+        "policy2-conservative": Policy2(),
+    }
+    key = name.lower()
+    if key not in table:
+        raise ValueError(f"unknown policy {name!r}; options: {sorted(table)}")
+    return table[key]

@@ -1,0 +1,80 @@
+"""Tier-pool accounting with LRU ordering — the bookkeeping layer middleware builds on.
+
+The paper's middleware (KV store, slab allocator) tracks which objects sit in the bounded
+local tier and which have been demoted to the large remote tier. ``LRUTier`` is that
+bookkeeping, factored out so both the paper-faithful KV store and the serving-time paged
+KV-cache manager share one implementation.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Hashable, Iterable, List, Optional, Tuple
+
+
+class LRUTier:
+    """A bounded tier holding (key -> cost) with least-recently-used eviction.
+
+    `capacity` is in arbitrary cost units (object count if every add uses cost=1,
+    bytes if costs are sizes) — the paper's KV store bounds object *count*, the paged
+    KV manager bounds *bytes*.
+    """
+
+    def __init__(self, capacity: float, name: str = "tier"):
+        if capacity < 0:
+            raise ValueError("capacity must be >= 0")
+        self.capacity = capacity
+        self.name = name
+        self._items: "OrderedDict[Hashable, float]" = OrderedDict()
+        self._used = 0.0
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._items
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    @property
+    def used(self) -> float:
+        return self._used
+
+    @property
+    def free(self) -> float:
+        return self.capacity - self._used
+
+    def keys(self) -> Iterable[Hashable]:
+        return self._items.keys()
+
+    def touch(self, key: Hashable) -> None:
+        """Mark `key` most-recently-used."""
+        self._items.move_to_end(key)
+
+    def add(self, key: Hashable, cost: float = 1.0) -> List[Hashable]:
+        """Insert `key`; returns the LRU keys evicted to make room (possibly empty).
+
+        The caller owns acting on evictions (e.g. migrating the objects to the remote
+        tier) — this class only decides *what* leaves.
+        """
+        if key in self._items:
+            raise KeyError(f"{key!r} already in {self.name}")
+        if cost > self.capacity:
+            raise ValueError(f"cost {cost} exceeds tier capacity {self.capacity}")
+        evicted: List[Hashable] = []
+        while self._used + cost > self.capacity:
+            old_key, old_cost = self._items.popitem(last=False)
+            self._used -= old_cost
+            evicted.append(old_key)
+        self._items[key] = cost
+        self._used += cost
+        return evicted
+
+    def remove(self, key: Hashable) -> float:
+        cost = self._items.pop(key)
+        self._used -= cost
+        return cost
+
+    def lru_key(self) -> Optional[Hashable]:
+        return next(iter(self._items), None)
+
+    def as_ordered(self) -> List[Tuple[Hashable, float]]:
+        return list(self._items.items())

@@ -1,0 +1,79 @@
+"""Direct-access usage demo: a linked-list queue in emucxl memory (paper §IV-A, Listing 1).
+
+Faithful to the paper: each node is its own ``emucxl_alloc`` on the queue's configured
+tier, and the list is threaded through the emulated address space — `next` pointers are
+emucxl addresses stored *inside* node payloads, so every traversal is a real read from
+the (possibly remote) memory space. The queue-level policy (`node=0` all-local or
+`node=1` all-remote) mirrors the paper's initialization-time choice.
+
+Node layout (16 bytes): int64 data | int64 next-address (0 == NULL).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import emucxl as ecxl
+
+_NODE_BYTES = 16
+_NULL = 0
+
+
+def _pack(data: int, next_addr: int) -> np.ndarray:
+    return np.array([data, next_addr], dtype=np.int64).view(np.uint8)
+
+
+def _unpack(raw: np.ndarray):
+    vals = raw.view(np.int64)
+    return int(vals[0]), int(vals[1])
+
+
+class EmuQueue:
+    """Singly linked FIFO queue whose nodes live in emucxl-managed memory."""
+
+    def __init__(self, policy: int, lib: Optional[ecxl.EmuCXL] = None):
+        if policy not in (ecxl.LOCAL_MEMORY, ecxl.REMOTE_MEMORY):
+            raise ValueError("policy must be 0 (local) or 1 (remote)")
+        self.policy = policy
+        self.lib = lib if lib is not None else ecxl.default_instance()
+        self.front = _NULL
+        self.rear = _NULL
+        self.count = 0
+
+    # -- Listing 1: createNode --------------------------------------------------
+    def _create_node(self, data: int) -> int:
+        addr = self.lib.alloc(_NODE_BYTES, self.policy)
+        self.lib.write(_pack(data, _NULL), 0, addr)
+        return addr
+
+    def enqueue(self, data: int) -> bool:
+        newnode = self._create_node(data)
+        if self.front == _NULL and self.rear == _NULL:
+            self.front = self.rear = newnode
+        else:
+            rdata, _ = _unpack(self.lib.read(self.rear, 0, _NODE_BYTES))
+            self.lib.write(_pack(rdata, newnode), 0, self.rear)
+            self.rear = newnode
+        self.count += 1
+        return True
+
+    def dequeue(self) -> Optional[int]:
+        if self.front == _NULL and self.rear == _NULL:
+            return None
+        data, nxt = _unpack(self.lib.read(self.front, 0, _NODE_BYTES))
+        temp = self.front
+        self.front = nxt
+        if self.front == _NULL:
+            self.rear = _NULL
+        self.lib.free(temp, _NODE_BYTES)
+        self.count -= 1
+        return data
+
+    def destroy(self) -> None:
+        while self.dequeue() is not None:
+            pass
+
+    def __len__(self) -> int:
+        return self.count

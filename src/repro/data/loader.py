@@ -1,0 +1,90 @@
+"""Sharded, double-buffered host->device pipeline staged through the remote tier.
+
+The paper's *direct access* usage model applied to input data: staging buffers are
+emucxl allocations in the remote (host) tier; the loader writes the next batch into
+the inactive buffer while the device consumes the current one, then DMAs it across.
+On a multi-host pod each process would stage only its batch shard — here the shard
+math is identical with a process count of 1.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.core import emucxl as ecxl
+from repro.data.synthetic import SyntheticTokens
+
+
+class PrefetchLoader:
+    """Wraps a batch source with remote-tier staging + background prefetch."""
+
+    def __init__(
+        self,
+        source: SyntheticTokens,
+        lib: Optional[ecxl.EmuCXL] = None,
+        prefetch: int = 2,
+        sharding: Optional[jax.sharding.Sharding] = None,
+        start_step: int = 0,
+    ):
+        self.source = source
+        self.lib = lib
+        self.sharding = sharding
+        self.step = start_step
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._stage_addrs: Dict[str, int] = {}
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------------ producer
+    def _stage(self, name: str, arr: np.ndarray) -> np.ndarray:
+        """Write through an emucxl remote-tier staging buffer (double-buffered)."""
+        if self.lib is None:
+            return arr
+        key = f"{name}:{self.step % 2}"
+        nbytes = arr.nbytes
+        if key not in self._stage_addrs:
+            self._stage_addrs[key] = self.lib.alloc(nbytes, ecxl.REMOTE_MEMORY)
+        addr = self._stage_addrs[key]
+        if self.lib.get_size(addr) < nbytes:
+            self.lib.free(addr)
+            self._stage_addrs[key] = addr = self.lib.alloc(nbytes, ecxl.REMOTE_MEMORY)
+        self.lib.write_array(arr, addr)
+        return self.lib.read_array(addr, arr.shape, arr.dtype)
+
+    def _producer(self) -> None:
+        while not self._stop.is_set():
+            batch = self.source.batch_at(self.step)
+            staged = {k: self._stage(k, v) for k, v in batch.items()}
+            if self.sharding is not None:
+                staged = {
+                    k: jax.device_put(v, self.sharding) for k, v in staged.items()
+                }
+            try:
+                self._q.put((self.step, staged), timeout=1.0)
+                self.step += 1
+            except queue.Full:
+                continue
+
+    # ------------------------------------------------------------------ consumer
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        while True:
+            yield self.get()
+
+    def get(self):
+        step, batch = self._q.get()
+        return batch
+
+    def state(self) -> Dict[str, int]:
+        """Checkpointable iterator state."""
+        return {"step": self.step - self._q.qsize()}
+
+    def close(self) -> None:
+        self._stop.set()
+        while not self._q.empty():
+            self._q.get_nowait()

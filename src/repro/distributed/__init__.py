@@ -1,0 +1,16 @@
+from repro.distributed.sharding import (
+    AxisRules,
+    RULE_SETS,
+    axis_rules,
+    constrain,
+    current_mesh,
+    current_rules,
+    logical_to_spec,
+    mesh_context,
+    named_sharding,
+)
+
+__all__ = [
+    "AxisRules", "RULE_SETS", "axis_rules", "constrain", "current_mesh",
+    "current_rules", "logical_to_spec", "mesh_context", "named_sharding",
+]

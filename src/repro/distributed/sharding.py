@@ -1,0 +1,227 @@
+"""Logical-axis sharding rules (MaxText-style) mapping model axes onto the mesh.
+
+Model code never names mesh axes; it tags tensors with *logical* axes
+(``constrain(x, ("batch", "seq", "embed"))``) and parameters carry logical-axis
+metadata. A rule set maps logical axes -> mesh axes; swapping rule sets re-shards the
+whole model (train FSDP+TP vs serve TP vs sequence-parallel variants) without touching
+model code — this is the knob the §Perf hillclimbs turn.
+
+Rules resolve inside an ``axis_rules(mesh, rules)`` context. With no context active,
+``constrain`` is a no-op so single-device smoke tests run unmodified.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# A logical axis maps to: a mesh axis name, a tuple of mesh axes (joint sharding),
+# or None (replicated).
+MeshAxes = Union[str, Tuple[str, ...], None]
+AxisRules = Dict[str, MeshAxes]
+
+_state = threading.local()
+
+
+# --------------------------------------------------------------------------- rule sets
+def _rules(**kw: MeshAxes) -> AxisRules:
+    base: AxisRules = {
+        "batch": ("pod", "data"),   # missing mesh axes are dropped at resolve time
+        "seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_ff": None,
+        "layers": None,
+        "fsdp": None,               # weight dim co-sharded with the data axis
+        "state": None,              # SSM/RWKV recurrent state feature dims
+        "cache_seq": None,          # KV-cache sequence dim (SP decode shards this)
+        "conv": None,
+        # fallback: shard the attention query sequence over `model` when the head
+        # count cannot divide it (e.g. 56 or 14 heads on a 16-way axis) — context-
+        # parallel attention instead of replicated scores. Resolved AFTER `heads`
+        # (see _PRIORITY in logical_to_spec).
+        "seq_attn": "model",
+    }
+    base.update(kw)
+    return base
+
+
+RULE_SETS: Dict[str, AxisRules] = {
+    # Training: FSDP over data (weights sharded on their 'fsdp'-tagged dim) + TP over
+    # model. The paper-faithful baseline for big archs.
+    "train_fsdp": _rules(fsdp=("pod", "data")),
+    # Training without FSDP (small archs where replicated weights are cheaper than
+    # per-layer all-gathers).
+    "train_dp": _rules(),
+    # Training with Megatron-style sequence parallelism: residual stream sequence-
+    # sharded over the model axis between blocks (activation-memory hillclimb).
+    "train_fsdp_sp": _rules(fsdp=("pod", "data"), seq="model"),
+    # Small archs: pure data parallelism over EVERY mesh axis (model axis carries
+    # batch, weights replicated) — TP would replicate tiny head counts anyway.
+    "train_dp_all": _rules(
+        batch=("pod", "data", "model"), heads=None, kv_heads=None, ff=None,
+        vocab=None, experts=None,
+    ),
+    # ZeRO-1 companion to train_dp_all: optimizer state sharded over all axes on the
+    # fsdp-tagged dims; params/grads stay replicated, update all-gathers params.
+    "train_zero1": _rules(
+        batch=("pod", "data", "model"), heads=None, kv_heads=None, ff=None,
+        vocab=None, experts=None, fsdp=("pod", "data", "model"),
+    ),
+    # Serving: pure TP, weights replicated over data, batch over data. The KV cache
+    # seq dim shards over `model` when kv_heads cannot (GQA K < tp).
+    "serve_tp": _rules(cache_seq="model"),
+    # Serving for models too big for TP-only: weights also sharded over data.
+    "serve_fsdp_tp": _rules(fsdp=("pod", "data"), cache_seq="model"),
+    # MoE serving without per-layer weight gathers: expert weights shard their ff
+    # dim over data (TP-within-expert, moe_impl="ep_ff"); dense weights replicate
+    # over data (they are small once heads/ff shard over model).
+    "serve_moe_eptp": _rules(expert_ff=("pod", "data"), cache_seq="model"),
+    # Long-context decode: KV cache sequence-sharded over the data axis
+    # (flash-decoding style), batch replicated (batch=1 cells).
+    "serve_sp_cache": _rules(batch=None, cache_seq=("pod", "data")),
+}
+
+
+# --------------------------------------------------------------------------- context
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Union[str, AxisRules, None]):
+    """Activate (mesh, rules) for model code in this thread."""
+    if isinstance(rules, str):
+        rules = RULE_SETS[rules]
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def current_rules() -> Optional[AxisRules]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[1] if ctx else None
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules: Union[str, AxisRules] = "train_fsdp"):
+    """Convenience: activate both the jax mesh and the axis rules."""
+    with mesh, axis_rules(mesh, rules):
+        yield
+
+
+# --------------------------------------------------------------------------- resolution
+def logical_to_spec(
+    logical: Sequence[Optional[str]],
+    rules: Optional[AxisRules] = None,
+    mesh: Optional[Mesh] = None,
+    shape: Optional[Sequence[int]] = None,
+    priority: Optional[Sequence[str]] = None,
+) -> P:
+    """Resolve a tuple of logical axis names to a PartitionSpec on the current mesh.
+
+    Mesh axes named by a rule but absent from the mesh are dropped (so the same rule
+    set serves the single-pod and multi-pod meshes). A mesh axis may shard at most one
+    tensor dim; later duplicates resolve to replicated. When `shape` is given, axes
+    that do not divide the dim are dropped (e.g. kv_heads=8 on a 16-way model axis
+    falls back to replicated KV — standard GQA TP behaviour).
+    """
+    rules = rules if rules is not None else (current_rules() or {})
+    mesh = mesh if mesh is not None else current_mesh()
+    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    used: set = set()
+    out: list = [None] * len(logical)
+
+    def resolve(i: int, name: str) -> None:
+        target: MeshAxes = rules.get(name)
+        if isinstance(target, str):
+            target = (target,)
+        if not target:
+            return
+        picked = []
+        dim = shape[i] if shape is not None and i < len(shape) else None
+        for a in target:
+            if mesh_axes is not None and a not in mesh_axes:
+                continue
+            if a in used:
+                continue
+            if dim is not None and mesh is not None:
+                size = mesh.shape[a]
+                if dim % (size * _prod(mesh.shape[b] for b in picked)) != 0:
+                    continue
+            picked.append(a)
+        used.update(picked)
+        if len(picked) == 1:
+            out[i] = picked[0]
+        elif picked:
+            out[i] = tuple(picked)
+
+    # two passes: model-owning axes claim mesh axes before positional fallbacks
+    # (seq_attn/cache_seq only take `model` if heads could not). A caller-supplied
+    # `priority` promotes named axes to resolve FIRST (e.g. decode attention keeps
+    # the cache sequence sharding through the score computation).
+    low_priority = {"seq_attn", "cache_seq"} - set(priority or ())
+    for name in priority or ():
+        for i, n in enumerate(logical):
+            if n == name:
+                resolve(i, n)
+    for i, name in enumerate(logical):
+        if name is not None and name not in low_priority and name not in (priority or ()):
+            resolve(i, name)
+    for i, name in enumerate(logical):
+        if name is not None and name in low_priority:
+            resolve(i, name)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _prod(it) -> int:
+    r = 1
+    for v in it:
+        r *= v
+    return r
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]],
+              priority: Optional[Sequence[str]] = None) -> jax.Array:
+    """Apply a logical sharding constraint; no-op outside an axis_rules context."""
+    mesh, rules = current_mesh(), current_rules()
+    if mesh is None or rules is None:
+        return x
+    spec = logical_to_spec(logical, rules, mesh, x.shape, priority)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(
+    logical: Sequence[Optional[str]],
+    mesh: Optional[Mesh] = None,
+    rules: Union[str, AxisRules, None] = None,
+    memory_kind: Optional[str] = None,
+    shape: Optional[Sequence[int]] = None,
+) -> NamedSharding:
+    """Build a NamedSharding for a logical-axis tuple (for in/out_shardings)."""
+    if isinstance(rules, str):
+        rules = RULE_SETS[rules]
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None:
+        raise ValueError("named_sharding requires a mesh (argument or context)")
+    spec = logical_to_spec(logical, rules, mesh, shape)
+    if memory_kind is None:
+        return NamedSharding(mesh, spec)
+    from repro.core.offload import resolve_memory_kind
+
+    return NamedSharding(mesh, spec, memory_kind=resolve_memory_kind(memory_kind))

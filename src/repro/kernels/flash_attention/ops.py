@@ -1,0 +1,42 @@
+"""jit'd wrapper: model-facing flash attention with GQA head handling.
+
+On CPU the kernel runs in interpret mode (Python execution of the kernel body) —
+set ``REPRO_PALLAS_INTERPRET=0`` only on a real TPU.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bnh
+
+
+def _interpret_default() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET"):
+        return os.environ["REPRO_PALLAS_INTERPRET"] != "0"
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, window, scale: float, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B,S,N,hd); k,v: (B,T,K,hd) -> (B,S,N,hd)."""
+    B, S, N, hd = q.shape
+    K = k.shape[2]
+    if K != N:
+        rep = N // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    T = k.shape[1]
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * N, S, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * N, T, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * N, T, hd)
+    out = flash_attention_bnh(
+        qf, kf, vf, window, causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k,
+        interpret=_interpret_default() if interpret is None else interpret,
+    )
+    return jnp.moveaxis(out.reshape(B, N, S, hd), 1, 2)

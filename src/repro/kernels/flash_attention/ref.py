@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (causal / sliding window, GQA)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def attention_ref(q, k, v, window, *, causal: bool = True, scale: float = 1.0):
+    """q: (B,S,N,hd); k,v: (B,T,K,hd); window: int32 scalar. Returns (B,S,N,hd)."""
+    B, S, N, hd = q.shape
+    K = k.shape[2]
+    if K != N:
+        rep = N // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    T = k.shape[1]
+    scores = jnp.einsum("bsnh,btnh->bnst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = qpos - kpos < window
+    if causal:
+        mask = mask & (qpos >= kpos)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnst,btnh->bsnh", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the Mamba2 SSD recurrence (scalar-per-head decay).
+
+Per head h with state H in R^{P x N} (P = head dim, N = d_state):
+    a_t = exp(A_h * dt_t)                       (A_h < 0, dt_t > 0)
+    H_t = a_t * H_{t-1} + (dt_t * x_t) outer B_t
+    y_t = H_t @ C_t + D_h * x_t
+
+Shapes: x: (B,T,H,P); dt: (B,T,H); A,D: (H,); Bm,C: (B,T,N) (single group);
+state: (B,H,P,N).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, C, D, state) -> Tuple[jax.Array, jax.Array]:
+    x, dt, Bm, C = (t.astype(jnp.float32) for t in (x, dt, Bm, C))
+    A, D = A.astype(jnp.float32), D.astype(jnp.float32)
+    state = state.astype(jnp.float32)
+
+    def step(H, inputs):
+        x_t, dt_t, B_t, C_t = inputs             # (B,H,P), (B,H), (B,N), (B,N)
+        a_t = jnp.exp(A[None, :] * dt_t)         # (B,H)
+        upd = (dt_t[..., None] * x_t)[..., None] * B_t[:, None, None, :]  # (B,H,P,N)
+        H_new = a_t[..., None, None] * H + upd
+        y = jnp.einsum("bhpn,bn->bhp", H_new, C_t) + D[None, :, None] * x_t
+        return H_new, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bm, 1, 0),
+        jnp.moveaxis(C, 1, 0),
+    )
+    final, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), final

@@ -1,0 +1,140 @@
+"""Paged-attention decode kernel: one new token against a slab-allocated KV pool.
+
+This is the compute side of the paper's slab-allocator middleware (core/slab.py):
+KV pages are fixed-size chunks handed out by the slab allocator; hot pages live in
+HBM, cold pages are demoted to the host tier by the KV-cache manager
+(serving/kv_manager.py) using the paper's Policy1/Policy2. The kernel consumes the
+HBM-resident pool + a per-sequence block table.
+
+Layout: q (B, K, G, hd) — query heads grouped under their kv head; pages
+(P, page_size, K, hd). Grid = (B, K, max_pages); the page axis is innermost with
+flash-style running max/normalizer in VMEM scratch. The *index map reads the block
+table from scalar-prefetch SMEM* — a data-dependent gather of pages straight into
+VMEM, which is exactly the TPU-native replacement for the paper's pointer-chasing
+remote reads. Pages past a sequence's length are skipped (@pl.when), so decode cost
+tracks the true context length, not max_pages.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _paged_kernel(
+    table_ref,            # scalar prefetch: (B, max_pages) int32
+    len_ref,              # scalar prefetch: (B,) int32
+    window_ref,           # scalar prefetch: (1,) int32
+    q_ref,                # (1, 1, G, hd)
+    k_ref,                # (1, page_size, 1, hd)  — page selected by index map
+    v_ref,
+    o_ref,                # (1, 1, G, hd)
+    m_scr, l_scr, acc_scr,
+    *,
+    page_size: int,
+    scale: float,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    np_ = pl.num_programs(2)
+    length = len_ref[b]
+    window = window_ref[0]
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    page_start = p * page_size
+    q_pos = length - 1
+    live = jnp.logical_and(page_start < length,
+                           page_start + page_size - 1 > q_pos - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)               # (page_size, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                            # (G, page_size)
+        pos = page_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (pos < length) & (q_pos - pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        pexp = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(pexp, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(p == np_ - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "interpret")
+)
+def paged_attention(
+    q: jax.Array,            # (B, N, hd) — one token per sequence
+    k_pages: jax.Array,      # (P, page_size, K, hd)
+    v_pages: jax.Array,
+    block_table: jax.Array,  # (B, max_pages) int32 page ids
+    lengths: jax.Array,      # (B,) int32
+    window: jax.Array,       # () int32
+    *,
+    scale: float,
+    interpret: bool = True,
+) -> jax.Array:
+    B, N, hd = q.shape
+    P, page_size, K, _ = k_pages.shape
+    G = N // K
+    max_pages = block_table.shape[1]
+    qg = q.reshape(B, K, G, hd)
+
+    kernel = functools.partial(_paged_kernel, page_size=page_size, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, K, max_pages),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), lambda b, k, p, *_: (b, k, 0, 0)),
+                # data-dependent page fetch: the block table IS the index map
+                pl.BlockSpec(
+                    (1, page_size, 1, hd),
+                    lambda b, k, p, table, lens, win: (table[b, p], 0, k, 0),
+                ),
+                pl.BlockSpec(
+                    (1, page_size, 1, hd),
+                    lambda b, k, p, table, lens, win: (table[b, p], 0, k, 0),
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, k, p, *_: (b, k, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      jnp.asarray(window, jnp.int32).reshape(1), qg, k_pages, v_pages)
+    return out.reshape(B, N, hd)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for paged decode attention: gather pages, mask, softmax."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, lengths, window,
+                        *, scale: float):
+    """q: (B,N,hd); pages: (P,page_size,K,hd); table: (B,max_pages)."""
+    B, N, hd = q.shape
+    P, page_size, K, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    T = max_pages * page_size
+    # gather each sequence's pages into a contiguous (B, T, K, hd) cache
+    k = k_pages[block_table].reshape(B, T, K, hd)
+    v = v_pages[block_table].reshape(B, T, K, hd)
+    if K != N:
+        rep = N // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bnh,btnh->bnt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pos = jnp.arange(T)[None, :]
+    q_pos = (lengths - 1)[:, None]
+    mask = (pos < lengths[:, None]) & (q_pos - pos < window)
+    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnt,btnh->bnh", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

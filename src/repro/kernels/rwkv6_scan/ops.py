@@ -1,0 +1,102 @@
+"""WKV6 entry point: impl selection between oracle scan, chunked XLA, and Pallas.
+
+``chunked`` is the production XLA path (used by the dry-run): within a chunk of length
+c the recurrence is an equivalent masked matmul problem —
+    rt~ = r_t * A_{t-1},  ks~ = k_s / A_s,   A = inclusive cumprod of w
+    y_t = rt~ @ S0  +  sum_{s<t} (rt~ . ks~) v_s  +  (r_t.u.k_t) v_t
+    S_c = A_c (*) (S0 + ks~^T V)
+turning O(T) sequential steps into O(T/c) scanned chunks of MXU-friendly matmuls.
+fp32 throughout; chunk=32 bounds the dynamic range of 1/A_s (decay w in (0,1)).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.ref import wkv6_ref
+
+DEFAULT_CHUNK = 16
+
+
+def _wkv6_chunked(r, k, v, w, u, state, chunk: int) -> Tuple[jax.Array, jax.Array]:
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    r, k, v, w = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    state = state.astype(jnp.float32)
+
+    if T % chunk != 0:
+        pad = chunk - T % chunk
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    Tp = r.shape[1]
+    nc = Tp // chunk
+
+    # (nc, B, H, c, *)
+    resh = lambda x: jnp.moveaxis(
+        x.reshape(B, nc, chunk, H, x.shape[-1]), (1, 3), (0, 2)
+    )
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+
+    logw = jnp.log(jnp.maximum(wc, 1e-38))
+    cum = jnp.cumsum(logw, axis=-2)                       # inclusive (.., c, K), <= 0
+    cum_prev = cum - logw                                 # exclusive, <= 0
+    a_prev = jnp.exp(cum_prev)                            # safe: exponent <= 0
+    a_last = jnp.exp(cum[..., -1:, :])                    # (.., 1, K)
+    # state-update decay exp(cum_c - cum_s) <= 0 exponent: safe
+    a_to_end = jnp.exp(cum[..., -1:, :] - cum)            # (.., c, K)
+
+    r_tilde = rc * a_prev
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+
+    def chunk_step(S, inputs):
+        r_t, k_t, v_t, rt_, cp, cm, al, ae, uu_scores = inputs
+        # cross-chunk: r~ @ S0  (r~ = r * exp(cum_prev), exponent <= 0)
+        y_cross = jnp.einsum("bhck,bhkv->bhcv", rt_, S)
+        # intra-chunk strict-lower scores with per-channel pairwise decay
+        # exp(cum_prev_t - cum_s) <= 1 for s <= t-1; clamp the (masked) upper triangle
+        # so exp never overflows before the mask zeroes it.
+        dmat = jnp.exp(jnp.minimum(cp[..., :, None, :] - cm[..., None, :, :], 0.0))
+        scores = jnp.einsum("bhck,bhsk,bhcsk->bhcs", r_t, k_t, dmat)
+        scores = scores * mask[None, None]
+        y_intra = jnp.einsum("bhcs,bhsv->bhcv", scores, v_t)
+        # bonus diagonal
+        y_diag = uu_scores[..., None] * v_t
+        S_new = al[..., 0, :, None] * S + jnp.einsum(
+            "bhsk,bhsv->bhkv", k_t * ae, v_t
+        )
+        return S_new, y_cross + y_intra + y_diag
+
+    u_scores = jnp.einsum("nbhck,hk,nbhck->nbhc", rc, u, kc)
+
+    xs = (rc, kc, vc, r_tilde, cum_prev, cum, a_last, a_to_end, u_scores)
+    final, ys = jax.lax.scan(chunk_step, state, xs)       # ys: (nc, B, H, c, V)
+    y = jnp.moveaxis(ys, (0, 2), (1, 3)).reshape(B, Tp, H, V)
+    return y[:, :T], final
+
+
+def wkv6(r, k, v, w, u, state, impl: str = "chunked", chunk: int = DEFAULT_CHUNK):
+    """Dispatch: 'ref' (oracle scan), 'chunked' (XLA), 'pallas' (TPU kernel)."""
+    if impl == "ref":
+        return wkv6_ref(r, k, v, w, u, state)
+    if impl == "chunked":
+        return _wkv6_chunked(r, k, v, w, u, state, chunk)
+    if impl == "pallas":
+        from repro.kernels.rwkv6_scan.rwkv6_scan import wkv6_pallas
+
+        return wkv6_pallas(r, k, v, w, u, state, chunk=chunk)
+    raise ValueError(f"unknown wkv6 impl {impl!r}")
+
+
+def wkv6_decode_step(r, k, v, w, u, state):
+    """Single-token recurrence for serving: r,k,w:(B,H,K) v:(B,H,V) state:(B,H,K,V)."""
+    r, k, v, w = (x.astype(jnp.float32) for x in (r, k, v, w))
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None].astype(jnp.float32) * kv)
+    new_state = w[..., :, None] * state + kv
+    return y, new_state

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the WKV6 recurrence (RWKV6 "Finch" data-dependent decay).
+
+Per head, with state S in R^{K x V}:
+    y_t[j] = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j])
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+
+Shapes: r,k,w: (B,T,H,K); v: (B,T,H,V); u: (H,K); state: (B,H,K,V).
+All math in fp32. This is the semantic ground truth the chunked XLA path and the
+Pallas kernel are tested against.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, state) -> Tuple[jax.Array, jax.Array]:
+    r, k, v, w = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    state = state.astype(jnp.float32)
+
+    def step(S, inputs):
+        r_t, k_t, v_t, w_t = inputs  # (B,H,K), (B,H,K), (B,H,V), (B,H,K)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S_new = w_t[..., :, None] * S + kv
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, w))  # (T,B,H,*)
+    final, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), final

@@ -1,0 +1,441 @@
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers AND compiles.
+
+MUST set the emulated device count before ANY other import (jax locks the device
+count on first init):
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "").replace(
+        "--xla_force_host_platform_device_count=512", ""
+    )
+).strip()
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.hw import V5E
+from repro.distributed import axis_rules
+from repro.launch import specs as sp
+from repro.launch import steps as st
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# explicit form: replica_groups={{0,1,2,...},{...}}; iota form: [G,N]<=[...] with
+# N members per group (optionally transposed, T(1,0))
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_DEF_RE = re.compile(r"^\s*(%[\w.\-]+)\s*=\s*\(?([a-z0-9]+)\[")
+_FIRST_OPND_RE = re.compile(r"[\w\-]+\((%[\w.\-]+)")
+
+
+def _operands(line: str) -> Tuple[str, ...]:
+    """Operand names of an HLO instruction line (args between the call parens)."""
+    start = line.find("(")
+    if start < 0:
+        return ()
+    end = line.find(")", start)
+    return tuple(re.findall(r"%[\w.\-]+", line[start:end if end > 0 else None]))
+
+
+def _bf16_origin(roots: Tuple[str, ...], defs: Dict[str, Tuple[str, Tuple[str, ...]]],
+                 budget: int = 24) -> bool:
+    """BFS the operand DAG: did this f32 value originate as bf16?
+
+    The XLA CPU backend has no native bf16 dots — it converts operands to f32, so
+    collectives around matmuls carry f32 on CPU where a TPU would move bf16. We
+    count such collectives at their ORIGINAL width (x0.5) so the collective term
+    reflects the target platform, not the CPU lowering artifact.
+    """
+    seen = set()
+    frontier = list(roots)
+    while frontier and budget > 0:
+        name = frontier.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        budget -= 1
+        entry = defs.get(name)
+        if entry is None:
+            continue
+        dtype, operands = entry
+        if dtype == "bf16":
+            return True
+        if dtype == "f32":
+            frontier.extend(operands)
+    return False
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Per-device collective traffic from post-SPMD HLO (result-shape based).
+
+    Bytes-on-link model per op (ring algorithms, group size n):
+      all-reduce: 2(n-1)/n * result; all-gather: (n-1)/n * result;
+      reduce-scatter: (n-1) * result (result is the scattered shard);
+      all-to-all: (n-1)/n * result; collective-permute: 1 * result.
+
+    f32 collectives whose value chain originates in bf16 are counted at bf16 width
+    (CPU-backend upcast artifact — see _bf16_origin).
+
+    NOTE: ops inside while bodies are counted once — the roofline harness corrects
+    by polynomial extrapolation over unrolled analysis lowers (see benchmarks/roofline).
+    """
+    lines = hlo_text.splitlines()
+    defs: Dict[str, Tuple[str, Tuple[str, ...]]] = {}
+    for line in lines:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        defs[dm.group(1)] = (dm.group(2), _operands(line))
+
+    counts: Dict[str, int] = {}
+    bytes_raw: Dict[str, int] = {}
+    link_bytes = 0.0
+    for line in lines:
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(type_str)
+        if "f32" in type_str:
+            if _bf16_origin(_operands(line), defs):
+                nbytes = nbytes // 2
+        g = _GROUPS_IOTA_RE.search(line)
+        if g:
+            n = int(g.group(2))
+        else:
+            g2 = _GROUPS_EXPLICIT_RE.search(line)
+            n = len(g2.group(1).split(",")) if g2 else 1
+        counts[op] = counts.get(op, 0) + 1
+        bytes_raw[op] = bytes_raw.get(op, 0) + nbytes
+        if n <= 1 and op != "collective-permute":
+            continue
+        if op == "all-reduce":
+            link_bytes += 2 * (n - 1) / n * nbytes
+        elif op == "all-gather":
+            link_bytes += (n - 1) / n * nbytes
+        elif op == "reduce-scatter":
+            link_bytes += (n - 1) * nbytes
+        elif op == "all-to-all":
+            link_bytes += (n - 1) / n * nbytes
+        else:  # collective-permute
+            link_bytes += nbytes
+    return {"counts": counts, "result_bytes": bytes_raw, "link_bytes": link_bytes}
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    rules: str = ""
+    seconds: float = 0.0
+    skip_reason: str = ""
+    memory: Optional[Dict[str, float]] = None
+    cost: Optional[Dict[str, float]] = None
+    collectives: Optional[Dict[str, Any]] = None
+    params: int = 0
+    active_params: int = 0
+    offload_bytes: int = 0
+    grad_accum: int = 1
+    error: str = ""
+
+
+def default_options(cfg: ArchConfig, shape: ShapeConfig,
+                    unroll: bool = False) -> tf.ModelOptions:
+    # blocked attention once full scores would exceed ~VMEM-scale working sets;
+    # the Pallas flash kernel replaces this on real TPUs (hillclimb knob).
+    chunked = shape.kind != "decode" and shape.seq_len >= 8192
+    return tf.ModelOptions(
+        attn_impl="xla_chunked" if chunked else "xla",
+        # analysis lowers use the flops-exact MoE variant (see models/moe.py:
+        # CPU ragged_dot lowering overcounts FLOPs by the group count)
+        moe_impl="ep_exact" if unroll else "ep",
+        wkv_impl="chunked",
+        ssd_impl="chunked",
+        remat="full" if shape.kind == "train" else "none",
+        unroll_scans=unroll,
+    )
+
+
+def default_hp(cfg: ArchConfig) -> adamw.OptimizerConfig:
+    # offload optimizer state (the paper's technique) for archs whose fp32 state
+    # cannot fit in HBM: >= ~2 GB/chip of moments+master on the 512-chip mesh.
+    state_bytes = cfg.param_count() * 12
+    offload = state_bytes / 512 > 2 * 2**30
+    return adamw.OptimizerConfig(offload_state=offload)
+
+
+_ACT_BUDGET = 4 * 2**30  # target bytes/device for remat-saved residuals
+
+
+def default_train_plan(cfg: ArchConfig, shape: ShapeConfig, multi_pod: bool):
+    """(rules, grad_accum): sequence-parallel + microbatching heuristics.
+
+    Saved-residual bytes under scanned remat ~= L * S * D * 2 per sequence. When one
+    sequence alone exceeds the budget, shard the sequence over the model axis
+    (train_fsdp_sp); then accumulate gradients so live microbatch residuals fit.
+    """
+    rules = sp.rules_for(cfg, shape)
+    per_seq = cfg.num_layers * shape.seq_len * cfg.d_model * 2
+    # recurrent families: the inner chunk scan saves per-chunk residuals for the
+    # backward on top of the layer carry (~2x measured)
+    if cfg.family in ("ssm", "hybrid"):
+        per_seq *= 2
+    if rules == "train_fsdp" and per_seq > _ACT_BUDGET:
+        rules = "train_fsdp_sp"
+        per_seq //= 16
+    # fp32 logits: replicated vocab under dp_all, model-sharded otherwise
+    vocab_shard = 1 if rules == "train_dp_all" else 16
+    per_seq += shape.seq_len * cfg.padded_vocab * 4 // vocab_shard
+    # actual batch sharding: greedy prefix of (pod, data[, model]) that divides
+    axes = [2, 16] if multi_pod else [16]
+    if rules == "train_dp_all":
+        axes.append(16)  # model axis carries batch too when divisible
+    dp = 1
+    for a in axes:
+        if shape.global_batch % (dp * a) == 0:
+            dp *= a
+    b_loc = max(shape.global_batch // dp, 1)
+    ga = 1
+    while b_loc // ga > 1 and b_loc % (ga * 2) == 0 and (b_loc // ga) * per_seq > _ACT_BUDGET:
+        ga *= 2
+    return rules, ga
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    num_layers: Optional[int] = None,
+    seq_len: Optional[int] = None,
+    unroll: bool = False,
+    rules_override: Optional[str] = None,
+    opts_override: Optional[tf.ModelOptions] = None,
+    grad_accum: Optional[int] = None,   # None = auto from the train plan
+):
+    """Lower one cell. Returns (lowered, meta) — compile is the caller's choice."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cfg.supports_shape(shape)
+    if not ok:
+        return None, {"skip_reason": reason}
+    if num_layers is not None:
+        cfg = dataclasses.replace(cfg, num_layers=num_layers,
+                                  moe_first_dense=min(cfg.moe_first_dense, 1))
+    if seq_len is not None:
+        shape = dataclasses.replace(shape, seq_len=seq_len)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if shape.kind == "train":
+        plan_rules, plan_ga = default_train_plan(cfg, shape, multi_pod)
+        if grad_accum is None:
+            grad_accum = plan_ga
+    else:
+        plan_rules = sp.rules_for(cfg, shape)
+    grad_accum = grad_accum or 1
+    rules = rules_override or plan_rules
+    if opts_override is not None:
+        # analysis mode must still unroll scans regardless of the variant's options
+        opts = (dataclasses.replace(opts_override, unroll_scans=True)
+                if unroll else opts_override)
+    else:
+        opts = default_options(cfg, shape, unroll)
+    hp = default_hp(cfg)
+
+    with mesh, axis_rules(mesh, rules):
+        p_specs = sp.params_specs(cfg)
+        p_sh = sp.param_shardings(cfg, mesh, rules)
+        b_specs = sp.batch_specs(cfg, shape)
+        b_sh = sp.batch_shardings(cfg, shape, mesh, rules)
+
+        if shape.kind == "train":
+            o_specs = sp.opt_state_specs(cfg, hp)
+            o_sh = sp.opt_state_shardings(cfg, hp, mesh, rules)
+            # bf16 accumulation when the fp32 grad tree alone nears HBM (kimi-1T)
+            n_shards = 512 if multi_pod else 256
+            accum_dtype = (
+                jnp.bfloat16
+                if grad_accum > 1 and cfg.param_count() * 4 / n_shards > 8 * 2**30
+                else jnp.float32
+            )
+            step = st.make_train_step(cfg, opts, hp, grad_accum=grad_accum,
+                                      accum_dtype=accum_dtype)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+            ).lower(p_specs, o_specs, b_specs)
+        elif shape.kind == "prefill":
+            step = st.make_prefill_step(cfg, opts)
+            cache_specs = jax.eval_shape(step, p_specs, b_specs["inputs"])[1]
+            cache_sh = sp.tree_shardings(
+                tf.prefill_cache_axes(cfg), cache_specs, mesh, rules
+            )
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, b_sh["inputs"]),
+                out_shardings=(None, cache_sh),
+            ).lower(p_specs, b_specs["inputs"])
+        else:  # decode
+            ring = opts.sliding_ring
+            s_specs = sp.decode_state_specs(cfg, shape, sliding_ring=ring)
+            s_sh = sp.decode_state_shardings(cfg, shape, mesh, rules,
+                                             sliding_ring=ring)
+            step = st.make_serve_step(cfg, opts)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, s_sh, b_sh["inputs"]),
+                out_shardings=(None, s_sh),
+            ).lower(p_specs, s_specs, b_specs["inputs"])
+
+    man = sp.offload_manifest(cfg, hp)
+    meta = {
+        "rules": rules,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        # optimizer state exists only in train steps
+        "offload_bytes": man.resident_bytes if shape.kind == "train" else 0,
+        "grad_accum": grad_accum,
+        "cfg": cfg,
+        "shape": shape,
+    }
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> CellResult:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    try:
+        lowered, meta = build_cell(arch, shape_name, multi_pod)
+        if lowered is None:
+            return CellResult(arch, shape_name, mesh_name, "skip",
+                              skip_reason=meta["skip_reason"])
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": float(ma.argument_size_in_bytes),
+            "output_bytes": float(ma.output_size_in_bytes),
+            "temp_bytes": float(ma.temp_size_in_bytes),
+            "alias_bytes": float(ma.alias_size_in_bytes),
+            "host_argument_bytes": float(ma.host_argument_size_in_bytes),
+            "host_temp_bytes": float(ma.host_temp_size_in_bytes),
+            "code_bytes": float(ma.generated_code_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        cost = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+        }
+        coll = parse_collectives(compiled.as_text())
+        res = CellResult(
+            arch, shape_name, mesh_name, "ok",
+            rules=meta["rules"], seconds=time.time() - t0,
+            memory=mem, cost=cost, collectives=coll,
+            params=meta["params"], active_params=meta["active_params"],
+            offload_bytes=meta["offload_bytes"], grad_accum=meta["grad_accum"],
+        )
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"({res.seconds:.1f}s) args/dev={mem['argument_bytes']/2**30:.2f}GiB "
+              f"temp/dev={mem['temp_bytes']/2**30:.2f}GiB flops/dev={cost['flops']:.3e}")
+        print(f"  memory_analysis: {ma}")
+        print(f"  collectives: {coll['counts']} link_bytes/dev={coll['link_bytes']:.3e}")
+        return res
+    except Exception as e:  # noqa: BLE001 — record failure in the matrix
+        traceback.print_exc()
+        return CellResult(arch, shape_name, mesh_name, "fail",
+                          seconds=time.time() - t0, error=f"{type(e).__name__}: {e}")
+
+
+def cell_path(arch: str, shape_name: str, mesh_name: str) -> pathlib.Path:
+    return OUT_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape name (default: all)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                mesh_name = "2x16x16" if multi_pod else "16x16"
+                path = cell_path(arch, shape_name, mesh_name)
+                if path.exists() and not args.force:
+                    prev = json.loads(path.read_text())
+                    if prev.get("status") in ("ok", "skip"):
+                        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: cached "
+                              f"{prev['status']}")
+                        n_ok += prev["status"] == "ok"
+                        n_skip += prev["status"] == "skip"
+                        continue
+                res = run_cell(arch, shape_name, multi_pod)
+                path.write_text(json.dumps(dataclasses.asdict(res), indent=1))
+                n_ok += res.status == "ok"
+                n_skip += res.status == "skip"
+                n_fail += res.status == "fail"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} documented skips, {n_fail} failures")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

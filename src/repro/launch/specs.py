@@ -1,0 +1,175 @@
+"""ShapeDtypeStruct stand-ins + sharding trees for every (arch x shape) cell.
+
+``input_specs`` provides weak-type-correct, shardable specs with NO device allocation
+— the full configs are only ever lowered, never materialized. For [audio]/[vlm] archs
+the modality frontend is a stub: specs hand the backbone precomputed frame/patch
+embeddings, per the assignment.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed import named_sharding
+from repro.models import transformer as tf
+from repro.models.layers import dtype_of
+from repro.optim import adamw
+
+
+# --------------------------------------------------------------------- rule choice
+def is_small_arch(cfg: ArchConfig) -> bool:
+    """Archs where TP would mostly replicate (few heads / narrow ff): go pure DP."""
+    return cfg.param_count() < 2_000_000_000 and not cfg.moe
+
+
+def rules_for(cfg: ArchConfig, shape: ShapeConfig) -> str:
+    """Default rule set per cell (the §Perf baselines; hillclimbs override)."""
+    if shape.kind == "train":
+        return "train_dp_all" if is_small_arch(cfg) else "train_fsdp"
+    if shape.name == "long_500k":
+        return "serve_sp_cache"
+    # serving: pure TP unless bf16 weights exceed ~half of HBM across the model
+    # axis. Archs whose head count cannot divide the 16-way model axis keep their
+    # attention weights replicated under TP, so size them by their REPLICATED bytes.
+    tp = 16
+    bf16_bytes = cfg.param_count() * 2
+    effective = bf16_bytes / tp
+    if cfg.num_heads % tp != 0 and bf16_bytes > 16 * 2**30:
+        effective = bf16_bytes / 2  # attention weights ~replicated
+    if effective > 8 * 2**30:
+        return "serve_fsdp_tp"
+    return "serve_tp"
+
+
+def opt_rules_for(rules: str) -> str:
+    """Optimizer-state rule set (ZeRO-1 sharding when params are replicated)."""
+    return "train_zero1" if rules == "train_dp_all" else rules
+
+
+# --------------------------------------------------------------------- batch specs
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    act = dtype_of(cfg.dtype)
+    if shape.kind == "train":
+        if cfg.input_mode == "tokens":
+            inp = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        else:
+            inp = jax.ShapeDtypeStruct((B, S, cfg.d_model), act)
+        return {"inputs": inp, "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.input_mode == "tokens":
+            return {"inputs": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        return {"inputs": jax.ShapeDtypeStruct((B, S, cfg.d_model), act)}
+    # decode: one new token against a cache of S
+    if cfg.input_mode == "tokens":
+        return {"inputs": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    return {"inputs": jax.ShapeDtypeStruct((B, 1, cfg.d_model), act)}
+
+
+def batch_axes(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Tuple]:
+    if cfg.input_mode == "tokens":
+        inp_ax = ("batch", "seq")
+    else:
+        inp_ax = ("batch", "seq", None)
+    ax = {"inputs": inp_ax}
+    if shape.kind == "train":
+        ax["targets"] = ("batch", "seq")
+    return ax
+
+
+# --------------------------------------------------------------------- state specs
+def decode_state_specs(cfg: ArchConfig, shape: ShapeConfig,
+                       sliding_ring: bool = False):
+    B, S = shape.global_batch, shape.seq_len
+    params_shapes = params_specs(cfg)
+    return jax.eval_shape(
+        lambda: tf.init_decode_state(params_shapes, cfg, B, S,
+                                     sliding_ring=sliding_ring)
+    )
+
+
+def params_specs(cfg: ArchConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: tf.init_params(k, cfg), key)
+
+
+def opt_state_specs(cfg: ArchConfig, hp: adamw.OptimizerConfig):
+    return jax.eval_shape(lambda p: adamw.init_state(p, hp), params_specs(cfg))
+
+
+# --------------------------------------------------------------------- shardings
+def tree_shardings(axes_tree: Any, shapes_tree: Any, mesh, rules,
+                   memory_kind: Optional[str] = None):
+    """Map (logical-axes tree, shapes tree) -> NamedSharding tree."""
+
+    def one(axes, sds):
+        return named_sharding(axes, mesh, rules, memory_kind=memory_kind,
+                              shape=sds.shape)
+
+    return jax.tree.map(
+        one, axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def param_shardings(cfg: ArchConfig, mesh, rules):
+    return tree_shardings(tf.param_axes(cfg), params_specs(cfg), mesh, rules)
+
+
+def opt_state_shardings(cfg: ArchConfig, hp: adamw.OptimizerConfig, mesh, rules):
+    """Optimizer-state shardings; moments/master go to the host tier when offloaded.
+
+    When params are replicated (train_dp_all) the state still shards ZeRO-1-style
+    over all axes (opt_rules_for), so per-chip optimizer bytes scale down 512x.
+    """
+    if isinstance(rules, str):
+        rules = opt_rules_for(rules)
+    pax = tf.param_axes(cfg)
+    specs = opt_state_specs(cfg, hp)
+    kind = "pinned_host" if hp.offload_state else None
+    out = {
+        "m": tree_shardings(pax, specs["m"], mesh, rules, memory_kind=kind),
+        "v": tree_shardings(pax, specs["v"], mesh, rules, memory_kind=kind),
+        "step": named_sharding((), mesh, rules),
+    }
+    if "master" in specs:
+        out["master"] = tree_shardings(pax, specs["master"], mesh, rules,
+                                       memory_kind=kind)
+    return out
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh, rules):
+    specs = batch_specs(cfg, shape)
+    axes = batch_axes(cfg, shape)
+    return {
+        k: named_sharding(axes[k], mesh, rules, shape=specs[k].shape) for k in specs
+    }
+
+
+def decode_state_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh, rules,
+                           sliding_ring: bool = False):
+    axes = tf.decode_state_axes(cfg, sliding_ring=sliding_ring)
+    specs = decode_state_specs(cfg, shape, sliding_ring=sliding_ring)
+    return tree_shardings(axes, specs, mesh, rules)
+
+
+# --------------------------------------------------------------------- offload manifest
+def offload_manifest(cfg: ArchConfig, hp: adamw.OptimizerConfig):
+    """Ledger of host-tier residency for the roofline's host-DMA term."""
+    from repro.core.offload import OffloadManifest
+
+    man = OffloadManifest()
+    if hp.offload_state:
+        specs = opt_state_specs(cfg, hp)
+        man.add_tree("adamw.m", specs["m"])
+        man.add_tree("adamw.v", specs["v"])
+        if "master" in specs:
+            man.add_tree("adamw.master", specs["master"])
+    return man

@@ -1,0 +1,97 @@
+"""Step functions: train (grad + AdamW), prefill, and decode — the jit roots.
+
+These are what the dry-run lowers and the runtime executes; everything below them
+(model, MoE shard_map, kernels, optimizer) composes under one jit so XLA can overlap
+collectives, DMAs, and compute across the whole step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opts: tf.ModelOptions,
+    hp: adamw.OptimizerConfig,
+    grad_accum: int = 1,
+    accum_dtype: jnp.dtype = jnp.float32,
+) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_accum > 1 splits the global batch into microbatches scanned sequentially —
+    the activation-memory knob for the big archs (each microbatch's activations die
+    before the next starts). accum_dtype=bf16 halves the persistent accumulator for
+    trillion-param archs (update precision is preserved by the fp32 master + moments).
+    """
+
+    def loss_of(params, batch):
+        return tf.loss_fn(params, cfg, batch, opts)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch
+            )
+        else:
+            def resh(x):
+                b = x.shape[0]
+                return x.reshape((grad_accum, b // grad_accum) + x.shape[1:])
+
+            mbatches = jax.tree.map(resh, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+
+            def mb_step(acc, mb):
+                (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b2: a + b2.astype(accum_dtype), acc, g
+                )
+                return acc, (l, m)
+
+            grads, (losses, metrics_all) = jax.lax.scan(mb_step, zero_g, mbatches)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(lambda m: jnp.mean(m), metrics_all)
+
+        new_params, new_opt, om = adamw.apply_update(params, grads, opt_state, hp)
+        out_metrics = {"loss": loss, **metrics, **om}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, opts: tf.ModelOptions,
+                      collect_kv: bool = True) -> Callable:
+    """(params, inputs) -> (last-position logits, caches): the serving prefill pass.
+
+    Returns the populated decode caches (what prefill is *for*) and only the final
+    position's logits — the (B, S, V) logit tensor never exists."""
+
+    def prefill_step(params, inputs):
+        logits, _aux, caches = tf.forward(
+            params, cfg, inputs, opts, collect_kv=collect_kv, last_only=True
+        )
+        return logits[:, 0], caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, opts: tf.ModelOptions) -> Callable:
+    """(params, state, inputs) -> (next_tokens, new_state): one decode step."""
+
+    def serve_step(params, state, inputs):
+        logits, new_state = tf.decode_step(params, cfg, state, inputs, opts)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_state
+
+    return serve_step

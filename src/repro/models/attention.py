@@ -1,0 +1,290 @@
+"""GQA attention: full / sliding-window / bidirectional, with KV-cache decode.
+
+The per-layer window is *data* (an int32 scalar carried through ``lax.scan``), which is
+how gemma3's 5:1 local:global pattern runs under a single scanned layer body: sliding
+layers carry their window, global layers carry window >= seq_len.
+
+Implementations:
+  * ``xla``   — einsum reference; GSPMD-shardable, used by the dry-run baseline.
+  * ``flash`` — Pallas flash-attention kernel (kernels/flash_attention), TPU target,
+                validated in interpret mode; selected via ``attn_impl``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.models.layers import apply_rope, rms_norm, trunc_normal, zeros
+
+NEG_INF = -2.0e38
+
+
+def init_attention(key, L: int, D: int, N: int, K: int, hd: int, qk_norm: bool,
+                   dtype) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": trunc_normal(ks[0], (L, D, N, hd), 1.0, dtype),
+        "wk": trunc_normal(ks[1], (L, D, K, hd), 1.0, dtype),
+        "wv": trunc_normal(ks[2], (L, D, K, hd), 1.0, dtype),
+        "wo": trunc_normal(ks[3], (L, N, hd, D), 1.0, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = zeros((L, hd), dtype)
+        p["k_norm"] = zeros((L, hd), dtype)
+    return p
+
+
+def _project_qkv(p, x, positions, theta, qk_norm):
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"])
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    # "seq" itself is deliberately unsharded here: under SP rules the sequence axis
+    # is only sharded on the residual stream between blocks (Megatron-style).
+    # "seq_attn" is the low-priority fallback: it claims the model axis only when
+    # the head count cannot divide it (context-parallel q; k/v stay full-sequence).
+    q = constrain(q, ("batch", "seq_attn", "heads", "head_dim"))
+    k = constrain(k, ("batch", None, "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", None, "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _gqa_scores_mask_values(q, k, v, mask, scale):
+    """q:(B,S,N,hd) k,v:(B,T,K,hd) mask:(B?,S,T) bool -> (B,S,N,hd).
+
+    KV heads are broadcast up to N rather than grouping q down to (K, G): the
+    (K, G) reshape factorizes the head dim in a way TP sharding (N % tp == 0 but
+    K % tp != 0) cannot follow, which makes GSPMD replicate the full score tensor
+    (24 GiB/device at 96 heads x 4k). The broadcast keeps N intact end-to-end, so
+    head sharding survives; XLA fuses the repeat into the einsum.
+    """
+    B, S, N, hd = q.shape
+    K = k.shape[2]
+    if K != N:
+        G = N // K
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    scores = jnp.einsum("bsnh,btnh->bnst", q, k).astype(jnp.float32) * scale
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnst,btnh->bsnh", probs, v)
+    return out
+
+
+def _auto_q_block(B: int, S: int, N: int) -> int:
+    """Largest power-of-two query block whose global score slab stays ~<=32 GB
+    (~1-2 GB/device once batch or heads or q-seq shard 16-way)."""
+    budget = 32e9
+    qb = 1024
+    while qb > 64 and B * N * qb * S * 4 > budget:
+        qb //= 2
+    return qb
+
+
+def _chunked_attention(q, k, v, *, window, causal: bool, scale: float,
+                       q_block: int = 0, unroll=1):
+    """Blocked attention: scan over query blocks so scores never materialize at
+    (S x S). The XLA stand-in for the Pallas flash kernel at long context."""
+    B, S, N, hd = q.shape
+    qb = min(q_block or _auto_q_block(B, S, N), S)
+    pad = (-S) % qb
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = q.shape[1] // qb
+    qs = jnp.moveaxis(q.reshape(B, nb, qb, N, hd), 1, 0)       # (nb,B,qb,N,hd)
+    kpos = jnp.arange(S, dtype=jnp.int32)[None, None, :]       # (1,1,S)
+
+    def body(_, inputs):
+        qi, qblk = inputs
+        qpos = (qi * qb + jnp.arange(qb, dtype=jnp.int32))[None, :, None]
+        if causal:
+            mask = (qpos >= kpos) & (qpos - kpos < window)
+        else:
+            mask = jnp.ones((1, qb, S), jnp.bool_)
+        out = _gqa_scores_mask_values(qblk, k, v, mask, scale)
+        return 0, out
+
+    _, outs = jax.lax.scan(body, 0, (jnp.arange(nb, dtype=jnp.int32), qs),
+                           unroll=unroll)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nb * qb, N, hd)
+    return out[:, :S]
+
+
+def full_attention(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    *,
+    window: jax.Array,            # int32 scalar; >= S means full attention
+    causal: bool,
+    theta: float,
+    qk_norm: bool,
+    attn_impl: str = "xla",
+    segment_positions: Optional[jax.Array] = None,
+    unroll=1,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Training / prefill attention over the whole sequence. Returns (out, (k, v))."""
+    B, S, D = x.shape
+    positions = (
+        segment_positions if segment_positions is not None
+        else jnp.arange(S, dtype=jnp.int32)[None, :]
+    )
+    q, k, v = _project_qkv(p, x, positions, theta, qk_norm)
+    scale = q.shape[-1] ** -0.5
+
+    if attn_impl == "flash" and causal:
+        from repro.kernels.flash_attention import ops as flash_ops
+
+        out = flash_ops.flash_attention(q, k, v, window=window, scale=scale)
+    elif attn_impl == "xla_chunked":
+        out = _chunked_attention(q, k, v, window=window, causal=causal, scale=scale,
+                                 unroll=unroll)
+    else:
+        qpos = positions[:, :, None]      # (B, S, 1)
+        kpos = positions[:, None, :]      # (B, 1, S)
+        if causal:
+            mask = (qpos >= kpos) & (qpos - kpos < window)
+        else:
+            mask = jnp.abs(qpos - kpos) < jnp.maximum(window, S + 1)  # encoder: all-to-all
+        out = _gqa_scores_mask_values(q, k, v, mask, scale)
+
+    out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    # cache layout for the (k, v) return: prefill caches shard their seq dim when
+    # kv heads cannot (GQA K < tp); no-op in train rules (cache_seq=None there).
+    kv_out = (
+        constrain(k, ("batch", "cache_seq", "kv_heads", "head_dim")),
+        constrain(v, ("batch", "cache_seq", "kv_heads", "head_dim")),
+    )
+    return constrain(out, ("batch", "seq", "embed")), kv_out
+
+
+def decode_attention(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                  # (B, 1, D) current token
+    k_cache: jax.Array,            # (B, T, K, hd)
+    v_cache: jax.Array,
+    lengths: jax.Array,            # (B,) tokens already in cache
+    *,
+    window: jax.Array,
+    theta: float,
+    qk_norm: bool,
+    flash_layout: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against the cache. Returns (out, new_k_cache, new_v_cache)."""
+    B, one, D = x.shape
+    T = k_cache.shape[1]
+    positions = lengths[:, None].astype(jnp.int32)             # (B, 1)
+    q, k_new, v_new = _project_qkv(p, x, positions, theta, qk_norm)
+
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, lengths].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, lengths].set(v_new[:, 0].astype(v_cache.dtype))
+    k_cache = constrain(k_cache, ("batch", "cache_seq", "kv_heads", "head_dim"))
+    v_cache = constrain(v_cache, ("batch", "cache_seq", "kv_heads", "head_dim"))
+
+    jpos = jnp.arange(T, dtype=jnp.int32)[None, :]             # (B?, T)
+    valid = (jpos <= lengths[:, None]) & (lengths[:, None] - jpos < window)
+
+    scale = q.shape[-1] ** -0.5
+    if flash_layout and _cache_seq_sharded(k_cache):
+        # Flash-decoding layout: the cache is sequence-sharded (GQA K < tp), so
+        # keep the WHOLE score/value computation sequence-sharded — the softmax
+        # reductions over sharded T become two tiny all-reduces instead of GSPMD
+        # resharding the multi-GB cache to head sharding and back EVERY layer
+        # (the "involuntary full rematerialization" SPMD path).
+        N = q.shape[2]
+        K = k_cache.shape[2]
+        k = k_cache.astype(q.dtype)
+        v = v_cache.astype(q.dtype)
+        if K != N:
+            G = N // K
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+        k = constrain(k, ("batch", "cache_seq", None, "head_dim"),
+                      priority=("cache_seq",))
+        v = constrain(v, ("batch", "cache_seq", None, "head_dim"),
+                      priority=("cache_seq",))
+        scores = jnp.einsum("bsnh,btnh->bnst", q, k).astype(jnp.float32) * scale
+        scores = constrain(scores, ("batch", None, None, "cache_seq"),
+                           priority=("cache_seq",))
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bnst,btnh->bsnh", probs, v)
+    else:
+        out = _gqa_scores_mask_values(
+            q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+            valid[:, None, :], scale,
+        )
+    out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    return constrain(out, ("batch", "seq", "embed")), k_cache, v_cache
+
+
+def _cache_seq_sharded(k_cache: jax.Array) -> bool:
+    """True when the active rules shard this cache's sequence dim (GQA K < tp)."""
+    from repro.distributed import current_mesh, current_rules
+    from repro.distributed.sharding import logical_to_spec
+
+    mesh, rules = current_mesh(), current_rules()
+    if mesh is None or rules is None:
+        return False
+    spec = logical_to_spec(("batch", "cache_seq", "kv_heads", "head_dim"),
+                           rules, mesh, k_cache.shape)
+    return len(spec) > 1 and spec[1] is not None
+
+
+def decode_attention_ring(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                  # (B, 1, D) current token
+    k_ring: jax.Array,             # (B, W, K, hd) ring buffer, W = window
+    v_ring: jax.Array,
+    lengths: jax.Array,            # (B,)
+    *,
+    theta: float,
+    qk_norm: bool,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sliding-window decode against a window-sized ring cache.
+
+    Slot j holds absolute position p_j = lengths - ((lengths - j) mod W) after the
+    write — only the last W tokens ever exist, so per-step KV traffic is O(window)
+    instead of O(context). RoPE is applied at absolute positions before storing, so
+    ring rotation never re-rotates keys.
+    """
+    B, one, D = x.shape
+    W = k_ring.shape[1]
+    positions = lengths[:, None].astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, positions, theta, qk_norm)
+
+    bidx = jnp.arange(B)
+    slot = lengths % W
+    k_ring = k_ring.at[bidx, slot].set(k_new[:, 0].astype(k_ring.dtype))
+    v_ring = v_ring.at[bidx, slot].set(v_new[:, 0].astype(v_ring.dtype))
+
+    j = jnp.arange(W, dtype=jnp.int32)[None, :]                # (1, W)
+    p_j = lengths[:, None] - ((lengths[:, None] - j) % W)       # absolute positions
+    valid = p_j >= 0                                            # early-fill guard
+
+    scale = q.shape[-1] ** -0.5
+    out = _gqa_scores_mask_values(
+        q, k_ring.astype(q.dtype), v_ring.astype(q.dtype), valid[:, None, :], scale
+    )
+    out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    return constrain(out, ("batch", "seq", "embed")), k_ring, v_ring
+
+
+def attention_flops(S: int, B: int, D: int, N: int, K: int, hd: int,
+                    causal: bool, window: int) -> int:
+    """Model FLOPs for one attention layer (projections + scores/values)."""
+    proj = 2 * B * S * D * (N + 2 * K + N) * hd
+    eff_ctx = min(window, S) if window else S
+    pair = B * S * eff_ctx * (0.5 if causal and eff_ctx == S else 1.0)
+    scores = 2 * pair * N * hd * 2
+    return int(proj + scores)

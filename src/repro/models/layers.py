@@ -1,0 +1,105 @@
+"""Shared building blocks: norms, RoPE, MLP variants, initializers.
+
+All parameters are plain pytrees (nested dicts of jax.Array) with layers STACKED on a
+leading ``L`` axis so the block stack runs under ``jax.lax.scan`` (one compiled layer,
+essential at 96 layers x 512 devices). Parameter logical axes for sharding live in
+``transformer.param_axes``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# ----------------------------------------------------------------------------- init
+def trunc_normal(key, shape, scale: float, dtype=jnp.float32) -> jax.Array:
+    """Fan-in-scaled truncated normal (std = scale / sqrt(fan_in))."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def zeros(shape, dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+# ----------------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32 with (1 + scale) parameterization (gemma-style zero-init safe)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------- rope
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]                        # (..., S, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------- mlps
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "squared_relu":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {name}")
+
+
+def init_mlp(key, L: int, D: int, F: int, activation: str, dtype) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 3)
+    if activation in ("swiglu", "gelu_glu"):
+        return {
+            "w_gate": trunc_normal(ks[0], (L, D, F), 1.0, dtype),
+            "w_up": trunc_normal(ks[1], (L, D, F), 1.0, dtype),
+            "w_down": trunc_normal(ks[2], (L, F, D), 1.0, dtype),
+        }
+    return {
+        "w_up": trunc_normal(ks[0], (L, D, F), 1.0, dtype),
+        "w_down": trunc_normal(ks[1], (L, F, D), 1.0, dtype),
+    }
+
+
+def mlp(p: Dict[str, jax.Array], x: jax.Array, activation: str) -> jax.Array:
+    """Per-layer MLP (params already sliced to this layer, no leading L)."""
+    from repro.distributed import constrain
+
+    if activation in ("swiglu", "gelu_glu"):
+        inner = "silu" if activation == "swiglu" else "gelu"
+        h = _act(inner, x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = _act(activation, x @ p["w_up"])
+    h = constrain(h, ("batch", None, "ff"))
+    return h @ p["w_down"]
+
+
+def mlp_flops(D: int, F: int, activation: str, tokens: int) -> int:
+    mats = 3 if activation in ("swiglu", "gelu_glu") else 2
+    return 2 * mats * D * F * tokens

@@ -1,0 +1,116 @@
+"""Mamba2 block (state-space duality form), used standalone and inside Zamba2's hybrid.
+
+Structure per block (Mamba2 paper): in_proj -> [x | z | B | C | dt], short causal
+conv over (x,B,C), SSD recurrence with scalar-per-head decay, gated by silu(z),
+out_proj. The SSD core lives in kernels/mamba2_ssd (ref | chunked | pallas).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import constrain
+from repro.kernels.mamba2_ssd.ops import ssd, ssd_decode_step
+from repro.models.layers import rms_norm, trunc_normal, zeros, ones
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    N = cfg.ssm_state
+    return d_in, P, H, N
+
+
+def init_mamba2(key, L: int, cfg: ArchConfig, dtype) -> Dict[str, jax.Array]:
+    D = cfg.d_model
+    d_in, P, H, N = _dims(cfg)
+    conv_dim = d_in + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": trunc_normal(ks[0], (L, D, 2 * d_in + 2 * N + H), 1.0, dtype),
+        "conv_w": trunc_normal(ks[1], (L, cfg.ssm_conv, conv_dim), 1.0, dtype),
+        "conv_b": zeros((L, conv_dim), dtype),
+        "A_log": jnp.tile(jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)), (L, 1)),
+        "D": ones((L, H), jnp.float32),
+        "dt_bias": zeros((L, H), jnp.float32),
+        "norm": zeros((L, d_in), dtype),
+        "out_proj": trunc_normal(ks[2], (L, d_in, D), 1.0, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, prev: jax.Array):
+    """Depthwise causal conv1d. x: (B,S,C), w: (k,C), prev: (B,k-1,C) carry."""
+    k = w.shape[0]
+    xp = jnp.concatenate([prev, x], axis=1)                      # (B, S+k-1, C)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_prev = xp[:, -(k - 1) :] if k > 1 else jnp.zeros_like(prev)
+    return jax.nn.silu(out + b[None, None]), new_prev
+
+
+def mamba2_block(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                         # (B, S, D)
+    state: Dict[str, jax.Array],          # {"conv": (B,k-1,C), "ssd": (B,H,P,N)}
+    cfg: ArchConfig,
+    impl: str = "chunked",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, D = x.shape
+    d_in, P, H, N = _dims(cfg)
+
+    proj = x @ p["in_proj"]                                      # (B,S,2*d_in+2N+H)
+    xi, z, Bc, Cc, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"], state["conv"])
+    xi, Bc, Cc = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(B, S, H, P)
+    xh = constrain(xh, ("batch", None, "heads", "head_dim"))
+
+    y, ssd_state = ssd(xh, dt, A, Bc, Cc, p["D"], state["ssd"], impl=impl)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"]
+
+    return constrain(out, ("batch", "seq", "embed")), {"conv": conv_state, "ssd": ssd_state}
+
+
+def mamba2_decode(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                         # (B, 1, D)
+    state: Dict[str, jax.Array],
+    cfg: ArchConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, _, D = x.shape
+    d_in, P, H, N = _dims(cfg)
+    proj = x[:, 0] @ p["in_proj"]
+    xi, z, Bc, Cc, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)[:, None, :]
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"], state["conv"])
+    xi, Bc, Cc = jnp.split(conv_out[:, 0], [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None])
+    A = -jnp.exp(p["A_log"])
+    y, ssd_state = ssd_decode_step(xi.reshape(B, H, P), dt, A, Bc, Cc, p["D"], state["ssd"])
+    y = y.reshape(B, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return (y @ p["out_proj"])[:, None, :], {"conv": conv_state, "ssd": ssd_state}
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    d_in, P, H, N = _dims(cfg)
+    conv_dim = d_in + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, H, P, N), jnp.float32),
+    }

@@ -1,0 +1,309 @@
+"""Mixture-of-Experts: top-k token-choice routing with two implementations.
+
+``dense`` — oracle: every expert computes every token, combined with routing weights.
+            O(E/topk) FLOPs waste; used only by smoke tests as the correctness oracle.
+``ep``    — production: experts sharded over the ``model`` mesh axis inside
+            ``shard_map``. Activations arrive model-replicated (standard TP layout), so
+            dispatch is *local*: each shard sorts its tokens' assignments, keeps those
+            targeting its local experts (capacity-bounded, GShard-style drops), runs
+            ``jax.lax.ragged_dot`` over its expert group, scatter-adds weighted outputs
+            and psums over the EP axis — the same single all-reduce dense TP pays.
+            Falls back to the identical single-shard code path with no mesh context.
+
+The auxiliary load-balance loss (Switch-style) is returned alongside the output and
+accumulated by the scan in transformer.py.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import constrain, current_mesh, current_rules
+from repro.models.layers import trunc_normal
+
+
+def init_moe(key, L: int, cfg: ArchConfig, dtype) -> Dict[str, jax.Array]:
+    D, E, Fm = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": trunc_normal(ks[0], (L, D, E), 1.0, jnp.float32),
+        "w_gate": trunc_normal(ks[1], (L, E, D, Fm), 1.0, dtype),
+        "w_up": trunc_normal(ks[2], (L, E, D, Fm), 1.0, dtype),
+        "w_down": trunc_normal(ks[3], (L, E, Fm, D), 1.0, dtype),
+    }
+    if cfg.num_shared_experts:
+        Fs = Fm * cfg.num_shared_experts
+        p["s_gate"] = trunc_normal(ks[4], (L, D, Fs), 1.0, dtype)
+        p["s_up"] = trunc_normal(ks[5], (L, D, Fs), 1.0, dtype)
+        p["s_down"] = trunc_normal(ks[6], (L, Fs, D), 1.0, dtype)
+    return p
+
+
+def _route(router_w: jax.Array, x: jax.Array, cfg: ArchConfig):
+    """Router in fp32. Returns (weights (T,k), experts (T,k), probs (T,E))."""
+    logits = x.astype(jnp.float32) @ router_w  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.experts_per_token)
+    if cfg.moe_renormalize:
+        top_p = top_p / (jnp.sum(top_p, axis=-1, keepdims=True) + 1e-9)
+    return top_p, top_e, probs
+
+
+def _aux_loss(probs: jax.Array, top_e: jax.Array, E: int) -> jax.Array:
+    """Switch-transformer load-balance loss: E * sum_e f_e * p_e."""
+    T, k = top_e.shape
+    f = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * k)
+    p = jnp.mean(probs, axis=0)
+    return E * jnp.sum(f * p)
+
+
+def _shared_expert(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["s_gate"]) * (x @ p["s_up"])
+    return h @ p["s_down"]
+
+
+def _expert_ffn_dense(w_gate, w_up, w_down, x):
+    """All-experts oracle: x (T, D) -> (T, E, D)."""
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", x, w_gate)) * jnp.einsum(
+        "td,edf->tef", x, w_up
+    )
+    return jnp.einsum("tef,efd->ted", h, w_down)
+
+
+def moe_dense(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle implementation (smoke-test scale only)."""
+    B, S, D = x.shape
+    xt = x.reshape(-1, D)
+    top_p, top_e, probs = _route(p["router"], xt, cfg)
+    ted = _expert_ffn_dense(p["w_gate"], p["w_up"], p["w_down"], xt)  # (T, E, D)
+    onehot = jax.nn.one_hot(top_e, cfg.num_experts, dtype=jnp.float32)  # (T, k, E)
+    w = jnp.einsum("tk,tke->te", top_p, onehot).astype(ted.dtype)
+    out = jnp.einsum("te,ted->td", w, ted)
+    if cfg.num_shared_experts:
+        out = out + _shared_expert(p, xt)
+    aux = _aux_loss(probs, top_e, cfg.num_experts)
+    return out.reshape(B, S, D), aux
+
+
+def _local_expert_pass(xl, router_w, w_gate, w_up, w_down, cfg: ArchConfig,
+                       e_lo, e_local: int, capacity: int,
+                       exact_flops: bool = False):
+    """Tokens xl (T, D) against the local expert group [e_lo, e_lo+e_local).
+
+    exact_flops: ANALYSIS-ONLY variant for the roofline harness — the CPU lowering
+    of ragged_dot expands to dense per-group matmuls, so HloCostAnalysis overcounts
+    its FLOPs by e_local x (verified: 8 groups -> 8.1x). A TPU ragged_dot costs
+    2*C*D*F; this variant swaps each ragged_dot for a single dense dot of identical
+    operand/result shapes (same bytes, same collectives, exact true FLOPs). Never
+    used by production steps.
+    """
+    T, D = xl.shape
+    k = cfg.experts_per_token
+    top_p, top_e, probs = _route(router_w, xl, cfg)
+
+    flat_e = top_e.reshape(-1)                       # (T*k,)
+    flat_p = top_p.reshape(-1)
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    mine = (flat_e >= e_lo) & (flat_e < e_lo + e_local)
+    # Sort my assignments to the front, ordered by expert id (ragged_dot grouping);
+    # assignments beyond `capacity` are dropped (GShard capacity-factor semantics).
+    order = jnp.argsort(jnp.where(mine, flat_e, cfg.num_experts + 1))
+    sel = order[:capacity]
+    sel_valid = mine[sel]
+    sel_e = jnp.where(sel_valid, flat_e[sel] - e_lo, e_local)
+    sel_t = tok[sel]
+    sel_p = jnp.where(sel_valid, flat_p[sel], 0.0)
+
+    group_sizes = jnp.bincount(sel_e, length=e_local + 1)[:e_local].astype(jnp.int32)
+    xe = xl[sel_t]
+    if exact_flops:
+        rdot = lambda x, w, gs: x @ w[0]
+    else:
+        rdot = jax.lax.ragged_dot
+    h = jax.nn.silu(rdot(xe, w_gate, group_sizes)) * rdot(xe, w_up, group_sizes)
+    ye = rdot(h, w_down, group_sizes)  # (C, D)
+    out = jnp.zeros((T, D), ye.dtype).at[sel_t].add(ye * sel_p[:, None].astype(ye.dtype))
+    aux = _aux_loss(probs, top_e, cfg.num_experts)
+    return out, aux
+
+
+def _capacity(tokens: int, cfg: ArchConfig, ep: int) -> int:
+    c = int(tokens * cfg.experts_per_token * cfg.moe_capacity_factor / ep)
+    c = -(-c // 128) * 128
+    return min(max(c, 128), tokens * cfg.experts_per_token)
+
+
+def moe_ep_ff(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig,
+              exact_flops: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """EP over `model` + TP-within-expert over `data` (decode/serving variant).
+
+    Under serve_fsdp_tp the expert weights are data-sharded, so the plain EP path
+    must ALL-GATHER gigabytes of expert weights every layer to process a few hundred
+    decode tokens. Here weights stay sharded on their ff dim; the (tiny) token
+    activations replicate over `data` instead, each data shard computes its ff
+    slice, and one small (C, D) psum over data+model combines — GBs of weight
+    traffic become MBs of activation traffic.
+    """
+    B, S, D = x.shape
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return moe_ep(p, x, cfg, exact_flops)
+    ep = mesh.shape["model"]
+    Fm = cfg.moe_d_ff
+    data_axes: tuple = ()
+    prod = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape and Fm % (prod * mesh.shape[a]) == 0:
+            data_axes += (a,)
+            prod *= mesh.shape[a]
+    if not data_axes or cfg.num_experts % ep != 0:
+        return moe_ep(p, x, cfg, exact_flops)
+
+    from jax.sharding import PartitionSpec as P
+
+    e_local = cfg.num_experts // ep
+    tokens = B * S
+    capacity = _capacity(tokens, cfg, ep)
+
+    @partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(
+            P(None, None, None),                 # x replicated (decode: tiny)
+            P(None, None),                       # router replicated
+            P("model", None, data_axes),         # w_gate: experts x D x ff-shard
+            P("model", None, data_axes),
+            P("model", data_axes, None),         # w_down: experts x ff-shard x D
+        ),
+        out_specs=(P(None, None, None), P()),
+        check_vma=False,
+    )
+    def _ep_ff(xl, router_w, w_gate, w_up, w_down):
+        Bl, Sl, _ = xl.shape
+        xt = xl.reshape(-1, D)
+        j = jax.lax.axis_index("model")
+        e_lo = j * e_local
+        top_p, top_e, probs = _route(router_w, xt, cfg)
+        flat_e = top_e.reshape(-1)
+        flat_p = top_p.reshape(-1)
+        tok = jnp.repeat(jnp.arange(xt.shape[0], dtype=jnp.int32),
+                         cfg.experts_per_token)
+        mine = (flat_e >= e_lo) & (flat_e < e_lo + e_local)
+        order = jnp.argsort(jnp.where(mine, flat_e, cfg.num_experts + 1))
+        sel = order[:capacity]
+        sel_valid = mine[sel]
+        sel_e = jnp.where(sel_valid, flat_e[sel] - e_lo, e_local)
+        sel_t = tok[sel]
+        sel_p = jnp.where(sel_valid, flat_p[sel], 0.0)
+        gs = jnp.bincount(sel_e, length=e_local + 1)[:e_local].astype(jnp.int32)
+        xe = xt[sel_t]
+        rdot = (lambda a, w, g: a @ w[0]) if exact_flops else jax.lax.ragged_dot
+        h = jax.nn.silu(rdot(xe, w_gate, gs)) * rdot(xe, w_up, gs)  # (C, ff_local)
+        ye = rdot(h, w_down, gs)                                    # partial (C, D)
+        out = jnp.zeros((xt.shape[0], D), ye.dtype).at[sel_t].add(
+            ye * sel_p[:, None].astype(ye.dtype))
+        out = jax.lax.psum(out, ("model",) + data_axes)
+        aux = jax.lax.pmean(_aux_loss(probs, top_e, cfg.num_experts),
+                            ("model",) + data_axes)
+        return out.reshape(Bl, Sl, D), aux
+
+    out, aux = _ep_ff(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    if cfg.num_shared_experts:
+        xt = x.reshape(-1, D)
+        out = out + _shared_expert(p, xt).reshape(B, S, D)
+    return constrain(out, ("batch", "seq", "embed")), aux
+
+
+def _prod_axes(mesh, names) -> int:
+    r = 1
+    for a in names:
+        if a in mesh.shape:
+            r *= mesh.shape[a]
+    return r
+
+
+def moe_ep(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig,
+           exact_flops: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel implementation (EP over the ``model`` axis when meshed)."""
+    B, S, D = x.shape
+    mesh = current_mesh()
+    ep = mesh.shape.get("model", 1) if mesh is not None else 1
+
+    if mesh is None or ep == 1 or cfg.num_experts % ep != 0:
+        xt = x.reshape(-1, D)
+        out, aux = _local_expert_pass(
+            xt, p["router"], p["w_gate"], p["w_up"], p["w_down"], cfg,
+            0, cfg.num_experts, _capacity(xt.shape[0], cfg, 1),
+            exact_flops=exact_flops,
+        )
+        if cfg.num_shared_experts:
+            out = out + _shared_expert(p, xt)
+        return out.reshape(B, S, D), aux
+
+    from jax.sharding import PartitionSpec as P
+
+    rules = current_rules() or {}
+    batch_rule = rules.get("batch", ("pod", "data"))
+    if isinstance(batch_rule, str):
+        batch_rule = (batch_rule,)
+    batch_axes: tuple = ()
+    dp = 1
+    for a in batch_rule or ():
+        # "model" is owned by expert parallelism inside this layer
+        if a != "model" and a in mesh.shape and B % (dp * mesh.shape[a]) == 0:
+            batch_axes += (a,)
+            dp *= mesh.shape[a]
+    tokens_local = max((B // dp) * S, 1)
+    e_local = cfg.num_experts // ep
+    capacity = _capacity(tokens_local, cfg, ep)
+
+    @partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(
+            P(batch_axes if batch_axes else None, None, None),  # x: batch-sharded
+            P(None, None),                                      # router: replicated
+            P("model", None, None),                             # experts over model
+            P("model", None, None),
+            P("model", None, None),
+        ),
+        out_specs=(P(batch_axes if batch_axes else None, None, None), P()),
+        check_vma=False,
+    )
+    def _ep(xl, router_w, w_gate, w_up, w_down):
+        Bl, Sl, _ = xl.shape
+        xt = xl.reshape(-1, D)
+        j = jax.lax.axis_index("model")
+        out, aux = _local_expert_pass(
+            xt, router_w, w_gate, w_up, w_down, cfg, j * e_local, e_local, capacity,
+            exact_flops=exact_flops,
+        )
+        out = jax.lax.psum(out, "model")
+        aux = jax.lax.pmean(aux, "model")
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+        return out.reshape(Bl, Sl, D), aux
+
+    out, aux = _ep(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    if cfg.num_shared_experts:
+        xt = x.reshape(-1, D)
+        out = out + _shared_expert(p, xt).reshape(B, S, D)
+    return constrain(out, ("batch", "seq", "embed")), aux
+
+
+def moe_layer(p, x, cfg: ArchConfig, impl: str = "ep"):
+    if impl == "dense":
+        return moe_dense(p, x, cfg)
+    if impl == "ep_exact":
+        return moe_ep(p, x, cfg, exact_flops=True)
+    if impl == "ep_ff":
+        return moe_ep_ff(p, x, cfg)
+    if impl == "ep_ff_exact":
+        return moe_ep_ff(p, x, cfg, exact_flops=True)
+    return moe_ep(p, x, cfg)

@@ -1,0 +1,156 @@
+"""RWKV6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Faithful to the Finch core (arXiv:2404.05892): per-channel decay w_t produced by a
+LoRA on the token-shifted input (``w_t = exp(-exp(w0 + tanh(x_w @ A) @ B))``) — the
+paper's headline "data-dependent decay" — plus the bonus term u. Token-shift
+interpolation uses per-projection learned mu (static lerp; RWKV6's additional ddlerp
+LoRA on the mix coefficients is omitted — noted in DESIGN.md, it does not change the
+recurrence or its cost profile).
+
+The WKV recurrence itself lives in kernels/rwkv6_scan (ref | chunked | pallas).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import constrain
+from repro.kernels.rwkv6_scan.ops import wkv6, wkv6_decode_step
+from repro.models.layers import rms_norm, trunc_normal, zeros, ones
+
+
+def init_rwkv6(key, L: int, cfg: ArchConfig, dtype) -> Dict[str, jax.Array]:
+    D, F = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    lora = cfg.rwkv_decay_lora
+    ks = jax.random.split(key, 12)
+    return {
+        # time-mix
+        "mu": 0.5 * ones((L, 5, D), dtype),            # lerp coefficients r,k,v,g,w
+        "wr": trunc_normal(ks[0], (L, D, D), 1.0, dtype),
+        "wk": trunc_normal(ks[1], (L, D, D), 1.0, dtype),
+        "wv": trunc_normal(ks[2], (L, D, D), 1.0, dtype),
+        "wg": trunc_normal(ks[3], (L, D, D), 1.0, dtype),
+        "wo": trunc_normal(ks[4], (L, D, D), 1.0, dtype),
+        "w0": zeros((L, D), jnp.float32) - 0.6,        # base decay logit
+        "wA": trunc_normal(ks[5], (L, D, lora), 1.0, jnp.float32),
+        "wB": trunc_normal(ks[6], (L, lora, D), 0.1, jnp.float32),
+        "u": trunc_normal(ks[7], (L, H, hd), 1.0, jnp.float32),
+        "ln_x": zeros((L, D), dtype),                  # per-head group-norm scale
+        # channel-mix
+        "cmu": 0.5 * ones((L, 2, D), dtype),           # lerp for k', r'
+        "ck": trunc_normal(ks[8], (L, D, F), 1.0, dtype),
+        "cv": trunc_normal(ks[9], (L, F, D), 1.0, dtype),
+        "cr": trunc_normal(ks[10], (L, D, D), 1.0, dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """xx_t = x_{t-1}; prev is the carry from the previous segment (B, D)."""
+    xx = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return xx, x[:, -1, :]
+
+
+def _decay(p, xw: jax.Array) -> jax.Array:
+    """Data-dependent per-channel decay in (0, 1): exp(-exp(w0 + tanh(xw A) B))."""
+    logit = p["w0"][None, None] + jnp.tanh(xw.astype(jnp.float32) @ p["wA"]) @ p["wB"]
+    return jnp.exp(-jnp.exp(logit))
+
+
+def rwkv6_block(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                       # (B, S, D)
+    state: Dict[str, jax.Array],        # {"tm_x","cm_x": (B,D), "wkv": (B,H,hd,hd)}
+    cfg: ArchConfig,
+    impl: str = "chunked",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+
+    # ---- time mix -----------------------------------------------------------
+    xx, tm_last = _token_shift(x, state["tm_x"])
+    mu = p["mu"]
+    lerp = lambda i: x + (xx - x) * mu[i][None, None]
+    r = (lerp(0) @ p["wr"]).reshape(B, S, H, hd)
+    k = (lerp(1) @ p["wk"]).reshape(B, S, H, hd)
+    v = (lerp(2) @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(lerp(3) @ p["wg"])
+    w = _decay(p, lerp(4)).reshape(B, S, H, hd)
+    r = constrain(r, ("batch", None, "heads", "head_dim"))
+    k = constrain(k, ("batch", None, "heads", "head_dim"))
+    v = constrain(v, ("batch", None, "heads", "head_dim"))
+
+    y, wkv_state = wkv6(r, k, v, w, p["u"], state["wkv"], impl=impl)
+    y = y.reshape(B, S, D).astype(x.dtype)
+    # per-head group norm
+    y = rms_norm(y.reshape(B, S, H, hd), jnp.zeros((hd,), y.dtype)).reshape(B, S, D)
+    y = rms_norm(y, p["ln_x"])
+    out_tm = (y * g) @ p["wo"]
+
+    h = x + out_tm
+
+    # ---- channel mix ----------------------------------------------------------
+    hx, cm_last = _token_shift(h, state["cm_x"])
+    cmu = p["cmu"]
+    xk = h + (hx - h) * cmu[0][None, None]
+    xr = h + (hx - h) * cmu[1][None, None]
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    kk = constrain(kk, ("batch", None, "ff"))
+    out_cm = jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"])
+
+    new_state = {"tm_x": tm_last, "cm_x": cm_last, "wkv": wkv_state}
+    return h + out_cm, new_state
+
+
+def rwkv6_decode(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                       # (B, 1, D)
+    state: Dict[str, jax.Array],
+    cfg: ArchConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token step using the O(1) recurrent state."""
+    B, _, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    xt = x[:, 0]
+    xx = state["tm_x"]
+    mu = p["mu"]
+    lerp = lambda i: xt + (xx - xt) * mu[i][None]
+    r = (lerp(0) @ p["wr"]).reshape(B, H, hd)
+    k = (lerp(1) @ p["wk"]).reshape(B, H, hd)
+    v = (lerp(2) @ p["wv"]).reshape(B, H, hd)
+    g = jax.nn.silu(lerp(3) @ p["wg"])
+    w = _decay(p, lerp(4)[:, None, :])[:, 0].reshape(B, H, hd)
+
+    y, wkv_state = wkv6_decode_step(r, k, v, w, p["u"], state["wkv"])
+    y = y.reshape(B, D).astype(xt.dtype)
+    y = rms_norm(y.reshape(B, H, hd), jnp.zeros((hd,), y.dtype)).reshape(B, D)
+    y = rms_norm(y, p["ln_x"])
+    h = xt + (y * g) @ p["wo"]
+
+    hx = state["cm_x"]
+    cmu = p["cmu"]
+    xk = h + (hx - h) * cmu[0][None]
+    xr = h + (hx - h) * cmu[1][None]
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    out_cm = jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"])
+
+    new_state = {"tm_x": xt, "cm_x": h, "wkv": wkv_state}
+    return (h + out_cm)[:, None, :], new_state
+
+
+def rwkv6_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    return {
+        "tm_x": jnp.zeros((batch, D), dtype),
+        "cm_x": jnp.zeros((batch, D), dtype),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,705 @@
+"""Model assembly: init, sharding metadata, forward/loss, prefill, and decode.
+
+One composable definition covers all ten assigned architectures:
+
+  * attention families (dense / moe / vlm / audio): scanned pre-norm blocks with GQA
+    attention (full / sliding_global / bidirectional) and MLP or MoE feed-forward;
+    MoE archs may carry leading dense layers as a separate scanned stack (kimi).
+  * ssm (rwkv6): scanned RWKV6 blocks (attention-free).
+  * hybrid (zamba2): scanned Mamba2 blocks with a SHARED attention+MLP block invoked
+    every ``ssm_attn_every`` layers (weights shared across invocations; per-invocation
+    KV cache indexed by a scan-carried counter).
+
+Parameters are pytrees with layers stacked on a leading L axis; ``param_axes`` mirrors
+the pytree with logical-axis tuples that the sharding rules resolve per mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import ad_checkpoint
+
+from repro.configs.base import ArchConfig
+from repro.distributed import constrain
+from repro.models import attention as attn
+from repro.models import layers as ll
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_lib
+from repro.models import rwkv6 as rk
+from repro.models.layers import dtype_of
+
+BIG_WINDOW = np.int32(2**30)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOptions:
+    """Implementation knobs (what the §Perf hillclimbs turn)."""
+
+    attn_impl: str = "xla"          # xla | flash
+    moe_impl: str = "ep"            # ep | dense
+    wkv_impl: str = "chunked"       # chunked | ref | pallas
+    ssd_impl: str = "chunked"
+    remat: str = "none"             # none | full | offload
+    offload_names: Tuple[str, ...] = ("residual",)
+    scan_layers: bool = True
+    # Decode optimization for sliding_global archs: sliding layers keep a
+    # window-sized RING cache (O(window) KV reads/step) and only global layers
+    # keep the full-context cache — the KV-tiering idea applied inside the step.
+    sliding_ring: bool = False
+    # Decode optimization: flash-decoding sharding layout — keep seq-sharded KV
+    # caches seq-sharded through the score computation (tiny softmax all-reduces
+    # instead of per-layer cache resharding).
+    decode_flash_layout: bool = False
+    # Analysis mode: fully unroll every lax.scan so HLO cost analysis counts all
+    # iterations (while bodies are otherwise counted ONCE) — used by the roofline
+    # harness's small-(L,T) lowers, never by production steps.
+    unroll_scans: bool = False
+
+
+# ------------------------------------------------------------------------- windows
+def layer_windows(cfg: ArchConfig, stack_size: int, offset: int = 0) -> np.ndarray:
+    """Per-layer attention windows (int32); BIG_WINDOW means full attention."""
+    if cfg.attention_kind == "sliding_global" and cfg.global_every:
+        idx = np.arange(offset, offset + stack_size)
+        return np.where(
+            (idx + 1) % cfg.global_every == 0, BIG_WINDOW, np.int32(cfg.sliding_window)
+        ).astype(np.int32)
+    if cfg.attention_kind == "full" or cfg.family in ("vlm", "audio"):
+        return np.full((stack_size,), BIG_WINDOW, np.int32)
+    if cfg.sliding_window:
+        return np.full((stack_size,), cfg.sliding_window, np.int32)
+    return np.full((stack_size,), BIG_WINDOW, np.int32)
+
+
+# ------------------------------------------------------------------------- init
+def _init_attn_stack(key, cfg: ArchConfig, L: int, use_moe: bool, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    N, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {
+        "ln1": ll.zeros((L, D), dtype),
+        "ln2": ll.zeros((L, D), dtype),
+        "attn": attn.init_attention(ks[0], L, D, N, K, hd, cfg.qk_norm, dtype),
+    }
+    if cfg.post_norms:
+        p["post_ln1"] = ll.zeros((L, D), dtype)
+        p["post_ln2"] = ll.zeros((L, D), dtype)
+    if use_moe:
+        p["moe"] = moe_lib.init_moe(ks[1], L, cfg, dtype)
+    else:
+        p["mlp"] = ll.init_mlp(ks[1], L, D, F, cfg.mlp_activation, dtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.param_dtype)
+    D, V, L = cfg.d_model, cfg.padded_vocab, cfg.num_layers
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+
+    if cfg.input_mode == "tokens":
+        # std 1/sqrt(D): keeps tied logits O(1) and scale_embedding outputs ~N(0,1)
+        params["embed"] = ll.trunc_normal(ks[0], (V, D), np.sqrt(V / D), dtype)
+    if cfg.family == "ssm":
+        params["blocks"] = rk.init_rwkv6(ks[1], L, cfg, dtype)
+    elif cfg.family == "hybrid":
+        params["blocks"] = m2.init_mamba2(ks[1], L, cfg, dtype)
+        params["shared_attn"] = _init_attn_stack(ks[2], cfg, 1, use_moe=False, dtype=dtype)
+    else:
+        L1 = cfg.moe_first_dense if cfg.moe else 0
+        L2 = L - L1
+        if L1:
+            params["dense_stack"] = _init_attn_stack(ks[2], cfg, L1, False, dtype)
+        params["stack"] = _init_attn_stack(ks[3], cfg, L2, cfg.moe, dtype)
+    params["final_norm"] = ll.zeros((D,), dtype)
+    if not (cfg.tie_embeddings and cfg.input_mode == "tokens"):
+        params["unembed"] = ll.trunc_normal(ks[4], (D, V), 1.0, dtype)
+    return params
+
+
+# ------------------------------------------------------------------------- axes
+def _attn_stack_axes(cfg: ArchConfig, use_moe: bool):
+    ax: Dict[str, Any] = {
+        "ln1": ("layers", None),
+        "ln2": ("layers", None),
+        "attn": {
+            "wq": ("layers", "fsdp", "heads", None),
+            "wk": ("layers", "fsdp", "kv_heads", None),
+            "wv": ("layers", "fsdp", "kv_heads", None),
+            "wo": ("layers", "heads", None, "fsdp"),
+        },
+    }
+    if cfg.qk_norm:
+        ax["attn"]["q_norm"] = ("layers", None)
+        ax["attn"]["k_norm"] = ("layers", None)
+    if cfg.post_norms:
+        ax["post_ln1"] = ("layers", None)
+        ax["post_ln2"] = ("layers", None)
+    if use_moe:
+        ax["moe"] = {
+            "router": ("layers", None, None),
+            "w_gate": ("layers", "experts", "fsdp", "expert_ff"),
+            "w_up": ("layers", "experts", "fsdp", "expert_ff"),
+            "w_down": ("layers", "experts", "expert_ff", "fsdp"),
+        }
+        if cfg.num_shared_experts:
+            ax["moe"]["s_gate"] = ("layers", "fsdp", "ff")
+            ax["moe"]["s_up"] = ("layers", "fsdp", "ff")
+            ax["moe"]["s_down"] = ("layers", "ff", "fsdp")
+    else:
+        mats = (
+            {"w_gate", "w_up", "w_down"}
+            if cfg.mlp_activation in ("swiglu", "gelu_glu")
+            else {"w_up", "w_down"}
+        )
+        ax["mlp"] = {
+            m: (("layers", "ff", "fsdp") if m == "w_down" else ("layers", "fsdp", "ff"))
+            for m in mats
+        }
+    return ax
+
+
+def param_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    """Pytree of logical-axis tuples mirroring init_params' structure."""
+    axes: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        axes["embed"] = ("vocab", "fsdp")
+    if cfg.family == "ssm":
+        axes["blocks"] = {
+            "mu": ("layers", None, None),
+            "wr": ("layers", "fsdp", "heads_merged"),
+            "wk": ("layers", "fsdp", "heads_merged"),
+            "wv": ("layers", "fsdp", "heads_merged"),
+            "wg": ("layers", "fsdp", "heads_merged"),
+            "wo": ("layers", "heads_merged", "fsdp"),
+            "w0": ("layers", None),
+            "wA": ("layers", "fsdp", None),
+            "wB": ("layers", None, None),
+            "u": ("layers", "heads", None),
+            "ln_x": ("layers", None),
+            "cmu": ("layers", None, None),
+            "ck": ("layers", "fsdp", "ff"),
+            "cv": ("layers", "ff", "fsdp"),
+            "cr": ("layers", "fsdp", "heads_merged"),
+        }
+    elif cfg.family == "hybrid":
+        axes["blocks"] = {
+            "in_proj": ("layers", "fsdp", "heads_merged"),
+            "conv_w": ("layers", None, "heads_merged"),
+            "conv_b": ("layers", "heads_merged"),
+            "A_log": ("layers", None),
+            "D": ("layers", None),
+            "dt_bias": ("layers", None),
+            "norm": ("layers", "heads_merged"),
+            "out_proj": ("layers", "heads_merged", "fsdp"),
+        }
+        axes["shared_attn"] = _attn_stack_axes(cfg, use_moe=False)
+    else:
+        if cfg.moe and cfg.moe_first_dense:
+            axes["dense_stack"] = _attn_stack_axes(cfg, use_moe=False)
+        axes["stack"] = _attn_stack_axes(cfg, cfg.moe)
+    axes["final_norm"] = (None,)
+    if not (cfg.tie_embeddings and cfg.input_mode == "tokens"):
+        axes["unembed"] = ("fsdp", "vocab")
+    return axes
+
+
+# ------------------------------------------------------------------------- embed
+def embed_inputs(params, cfg: ArchConfig, inputs: jax.Array) -> jax.Array:
+    dtype = dtype_of(cfg.dtype)
+    if cfg.input_mode == "tokens":
+        from repro.distributed import current_mesh, current_rules
+
+        rules = current_rules() or {}
+        sharded_vocab = current_mesh() is not None and rules.get("vocab") is not None
+        if sharded_vocab:
+            # one-hot matmul lookup: a gather against a 2D-sharded table would force
+            # GSPMD to all-gather the whole embedding; the one-hot dot stays
+            # vocab-sharded and reduces with one small all-reduce.
+            V = params["embed"].shape[0]
+            oh = jax.nn.one_hot(inputs, V, dtype=params["embed"].dtype)
+            oh = constrain(oh, ("batch", None, "vocab"))
+            h = (oh @ params["embed"]).astype(dtype)
+        else:
+            h = jnp.take(params["embed"], inputs, axis=0).astype(dtype)
+    else:
+        h = inputs.astype(dtype)
+    if cfg.scale_embedding:
+        h = h * np.sqrt(cfg.d_model).astype(dtype)
+    return constrain(h, ("batch", "seq", "embed"))
+
+
+def unembed(params, cfg: ArchConfig, h: jax.Array) -> jax.Array:
+    h = ll.rms_norm(h, params["final_norm"])
+    tied = cfg.tie_embeddings and cfg.input_mode == "tokens"
+    w = params["embed"].T if tied else params["unembed"]
+    logits = (h @ w.astype(h.dtype)).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+# ------------------------------------------------------------------------- blocks
+def _attn_block_body(p, h, window, cfg: ArchConfig, opts: ModelOptions, use_moe: bool):
+    """One pre-norm block over the full sequence. Returns (h, aux, (k, v))."""
+    a_out, kv = attn.full_attention(
+        p["attn"], ll.rms_norm(h, p["ln1"]),
+        window=window, causal=cfg.causal, theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm, attn_impl=opts.attn_impl,
+        unroll=opts.unroll_scans or 1,
+    )
+    if cfg.post_norms:
+        a_out = ll.rms_norm(a_out, p["post_ln1"])
+    h = h + a_out
+    x = ll.rms_norm(h, p["ln2"])
+    if use_moe:
+        f_out, aux = moe_lib.moe_layer(p["moe"], x, cfg, impl=opts.moe_impl)
+    else:
+        f_out, aux = ll.mlp(p["mlp"], x, cfg.mlp_activation), jnp.zeros((), jnp.float32)
+    if cfg.post_norms:
+        f_out = ll.rms_norm(f_out, p["post_ln2"])
+    return h + f_out, aux, kv
+
+
+def _scan_stack(params_stack, h, windows, body, opts: ModelOptions, collect_kv: bool):
+    """Scan `body` over stacked layer params. Returns (h, aux_sum, kvs or None)."""
+
+    def scan_body(carry, xs):
+        p, win = xs
+        hh, aux, kv = body(p, carry, win)
+        return hh, (aux, kv if collect_kv else None)
+
+    if opts.remat != "none":
+        policy = None
+        if opts.remat == "offload":
+            from repro.core.offload import offload_checkpoint_policy
+
+            policy = offload_checkpoint_policy(opts.offload_names)
+        scan_body = jax.checkpoint(scan_body, policy=policy, prevent_cse=False)
+
+    windows = jnp.asarray(windows)
+    h, (auxes, kvs) = jax.lax.scan(
+        scan_body, h, (params_stack, windows), unroll=opts.unroll_scans or 1
+    )
+    return h, jnp.sum(auxes), kvs
+
+
+# ------------------------------------------------------------------------- forward
+def forward(
+    params, cfg: ArchConfig, inputs: jax.Array, opts: ModelOptions = ModelOptions(),
+    collect_kv: bool = False, last_only: bool = False,
+):
+    """Full-sequence forward. Returns (logits, aux_loss, caches) — caches is a dict
+    of per-family prefill state when collect_kv (decode bootstrap). ``last_only``
+    computes logits for the final position only (serving prefill: avoids the
+    (B, S, V) logit tensor entirely)."""
+    h = embed_inputs(params, cfg, inputs)
+    h = ad_checkpoint.checkpoint_name(h, "residual")
+    caches: Dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+    B, S = h.shape[0], h.shape[1]
+
+    if cfg.family == "ssm":
+        state = rk.rwkv6_init_state(cfg, B, h.dtype)
+        state = jax.tree.map(lambda s: jnp.broadcast_to(s, s.shape), state)
+
+        def body(p, hh, _win):
+            out, _st = rk.rwkv6_block(p, hh, state, cfg, impl=opts.wkv_impl)
+            return out, jnp.zeros((), jnp.float32), _st if collect_kv else None
+
+        h, aux, states = _scan_stack(
+            params["blocks"], h, np.zeros((cfg.num_layers,), np.int32), body, opts,
+            collect_kv,
+        )
+        if collect_kv:
+            caches["rwkv"] = states
+
+    elif cfg.family == "hybrid":
+        h, aux, caches = _hybrid_forward(params, cfg, h, opts, collect_kv)
+
+    else:
+        if cfg.moe and cfg.moe_first_dense:
+            w1 = layer_windows(cfg, cfg.moe_first_dense, 0)
+            body1 = lambda p, hh, win: _attn_block_body(p, hh, win, cfg, opts, False)
+            h, aux1, kv1 = _scan_stack(params["dense_stack"], h, w1, body1, opts, collect_kv)
+            aux = aux + aux1
+            if collect_kv:
+                caches["dense_kv"] = kv1
+        L1 = cfg.moe_first_dense if cfg.moe else 0
+        w2 = layer_windows(cfg, cfg.num_layers - L1, L1)
+        body2 = lambda p, hh, win: _attn_block_body(p, hh, win, cfg, opts, cfg.moe)
+        h, aux2, kv2 = _scan_stack(params["stack"], h, w2, body2, opts, collect_kv)
+        aux = aux + aux2
+        if collect_kv:
+            caches["kv"] = kv2
+
+    if last_only:
+        h = h[:, -1:]
+    logits = unembed(params, cfg, h)
+    return logits, aux, caches
+
+
+def _hybrid_forward(params, cfg: ArchConfig, h, opts: ModelOptions, collect_kv: bool):
+    """Zamba2: scanned Mamba2 layers; shared attention block every ssm_attn_every."""
+    B, S, D = h.shape
+    state = m2.mamba2_init_state(cfg, B, h.dtype)
+    k_every = cfg.ssm_attn_every
+    use_attn = np.array(
+        [(i + 1) % k_every == 0 for i in range(cfg.num_layers)], np.bool_
+    )
+    shared = jax.tree.map(lambda a: a[0], params["shared_attn"])  # strip L=1
+    window = jnp.asarray(BIG_WINDOW)
+    n_inv = int(use_attn.sum())
+
+    def body(carry, xs):
+        hh, inv_idx, kbuf, vbuf = carry
+        p, flag = xs
+        out, _st = m2.mamba2_block(p, hh, state, cfg, impl=opts.ssd_impl)
+        hh = hh + out
+
+        def with_attn(hh, inv_idx, kbuf, vbuf):
+            a_out, aux2, kv = _attn_block_body(shared, hh, window, cfg, opts, False)
+            if collect_kv:
+                kbuf = jax.lax.dynamic_update_index_in_dim(kbuf, kv[0], inv_idx, 0)
+                vbuf = jax.lax.dynamic_update_index_in_dim(vbuf, kv[1], inv_idx, 0)
+            return a_out, inv_idx + 1, kbuf, vbuf
+
+        def no_attn(hh, inv_idx, kbuf, vbuf):
+            return hh, inv_idx, kbuf, vbuf
+
+        hh, inv_idx, kbuf, vbuf = jax.lax.cond(
+            flag, with_attn, no_attn, hh, inv_idx, kbuf, vbuf
+        )
+        return (hh, inv_idx, kbuf, vbuf), (_st if collect_kv else None)
+
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    kbuf = jnp.zeros((max(n_inv, 1), B, S, K, hd), h.dtype)
+    vbuf = jnp.zeros_like(kbuf)
+    if opts.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, _, kbuf, vbuf), states = jax.lax.scan(
+        body, (h, jnp.int32(0), kbuf, vbuf), (params["blocks"], jnp.asarray(use_attn)),
+        unroll=opts.unroll_scans or 1,
+    )
+    caches = {}
+    if collect_kv:
+        caches = {"mamba": states, "shared_kv": (kbuf, vbuf)}
+    return h, jnp.zeros((), jnp.float32), caches
+
+
+# ------------------------------------------------------------------------- loss
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            opts: ModelOptions = ModelOptions()) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token (decoder) or frame-target (encoder) cross entropy + MoE aux."""
+    logits, aux, _ = forward(params, cfg, batch["inputs"], opts)
+    labels = batch["targets"]
+    weights = batch.get("weights")
+    # Gather-free CE: a take_along_axis on the vocab-sharded dim would force GSPMD
+    # to all-gather full logits; the iota-mask dot keeps everything vocab-sharded.
+    mx = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - mx), axis=-1)) + mx[..., 0]
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1
+    )
+    nll = lse - label_logit
+    if weights is None:
+        weights = jnp.ones_like(nll)
+    ce = jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+    # z-loss stabilizes the softmax normalizer at scale (reuses lse)
+    zl = 1e-4 * jnp.mean(jnp.square(lse))
+    total = ce + zl + cfg.moe_aux_loss_coef * aux
+    return total, {"ce": ce, "aux": aux, "z_loss": zl}
+
+
+# ------------------------------------------------------------------------- decode
+def init_decode_state(params, cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=None, sliding_ring: bool = False) -> Dict[str, Any]:
+    """Empty caches for decode-from-scratch (the dry-run decode cells)."""
+    dtype = dtype or dtype_of(cfg.dtype)
+    K, hd, L = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+    state: Dict[str, Any] = {"lengths": jnp.zeros((batch,), jnp.int32)}
+    if sliding_ring and cfg.attention_kind == "sliding_global":
+        windows = layer_windows(cfg, L)
+        is_global = windows >= BIG_WINDOW
+        n_global = int(is_global.sum())
+        W = cfg.sliding_window
+        state["kv_ring"] = (
+            jnp.zeros((L, batch, W, K, hd), dtype),
+            jnp.zeros((L, batch, W, K, hd), dtype),
+        )
+        state["kv_global"] = (
+            jnp.zeros((max(n_global, 1), batch, max_len, K, hd), dtype),
+            jnp.zeros((max(n_global, 1), batch, max_len, K, hd), dtype),
+        )
+        return state
+    if cfg.family == "ssm":
+        state["rwkv"] = jax.tree.map(
+            lambda s: jnp.broadcast_to(s[None], (L,) + s.shape),
+            rk.rwkv6_init_state(cfg, batch, dtype),
+        )
+    elif cfg.family == "hybrid":
+        n_inv = cfg.num_layers // cfg.ssm_attn_every
+        state["mamba"] = jax.tree.map(
+            lambda s: jnp.broadcast_to(s[None], (L,) + s.shape),
+            m2.mamba2_init_state(cfg, batch, dtype),
+        )
+        state["shared_kv"] = (
+            jnp.zeros((n_inv, batch, max_len, K, hd), dtype),
+            jnp.zeros((n_inv, batch, max_len, K, hd), dtype),
+        )
+    else:
+        L1 = cfg.moe_first_dense if cfg.moe else 0
+        if L1:
+            state["dense_kv"] = (
+                jnp.zeros((L1, batch, max_len, K, hd), dtype),
+                jnp.zeros((L1, batch, max_len, K, hd), dtype),
+            )
+        state["kv"] = (
+            jnp.zeros((L - L1, batch, max_len, K, hd), dtype),
+            jnp.zeros((L - L1, batch, max_len, K, hd), dtype),
+        )
+    return state
+
+
+def decode_step(params, cfg: ArchConfig, state: Dict[str, Any], inputs: jax.Array,
+                opts: ModelOptions = ModelOptions()):
+    """One decode step. inputs: (B,1) tokens or (B,1,D) embeddings.
+
+    Returns (logits (B, V), new_state)."""
+    h = embed_inputs(params, cfg, inputs)
+    lengths = state["lengths"]
+    new_state: Dict[str, Any] = {"lengths": lengths + 1}
+
+    if cfg.family == "ssm":
+        def body(hh, xs):
+            p, st = xs
+            out, st2 = rk.rwkv6_decode(p, hh, st, cfg)
+            return out, st2
+
+        h, states = jax.lax.scan(body, h, (params["blocks"], state["rwkv"]),
+                                 unroll=opts.unroll_scans or 1)
+        new_state["rwkv"] = states
+
+    elif cfg.family == "hybrid":
+        h, new_state = _hybrid_decode(params, cfg, state, h, new_state, opts)
+
+    elif opts.sliding_ring and "kv_ring" in state:
+        h, new_state = _sliding_ring_decode(params, cfg, state, h, new_state, opts)
+
+    else:
+        windows_all = layer_windows(cfg, cfg.num_layers)
+        L1 = cfg.moe_first_dense if cfg.moe else 0
+
+        def mk_body():
+            def body(hh, xs):
+                p, win, kc, vc = xs
+                x = ll.rms_norm(hh, p["ln1"])
+                a_out, kc2, vc2 = attn.decode_attention(
+                    p["attn"], x, kc, vc, lengths,
+                    window=win, theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                    flash_layout=opts.decode_flash_layout,
+                )
+                if cfg.post_norms:
+                    a_out = ll.rms_norm(a_out, p["post_ln1"])
+                hh = hh + a_out
+                x = ll.rms_norm(hh, p["ln2"])
+                if "moe" in p:
+                    f_out, _ = moe_lib.moe_layer(p["moe"], x, cfg, impl=opts.moe_impl)
+                else:
+                    f_out = ll.mlp(p["mlp"], x, cfg.mlp_activation)
+                if cfg.post_norms:
+                    f_out = ll.rms_norm(f_out, p["post_ln2"])
+                return hh + f_out, (kc2, vc2)
+
+            return body
+
+        if L1:
+            kd, vd = state["dense_kv"]
+            h, dkv = jax.lax.scan(
+                mk_body(), h,
+                (params["dense_stack"], jnp.asarray(windows_all[:L1]), kd, vd),
+                unroll=opts.unroll_scans or 1,
+            )
+            new_state["dense_kv"] = dkv
+        kc, vc = state["kv"]
+        h, kv = jax.lax.scan(
+            mk_body(), h, (params["stack"], jnp.asarray(windows_all[L1:]), kc, vc),
+            unroll=opts.unroll_scans or 1,
+        )
+        new_state["kv"] = kv
+
+    logits = unembed(params, cfg, h)[:, 0]
+    return logits, new_state
+
+
+def _sliding_ring_decode(params, cfg: ArchConfig, state, h, new_state,
+                         opts: ModelOptions):
+    """Decode for sliding_global archs with ring caches on sliding layers and a
+    COMPACT full-context cache holding only the global layers (counter-indexed,
+    like zamba's shared-attention cache)."""
+    lengths = state["lengths"]
+    windows_all = layer_windows(cfg, cfg.num_layers)
+    is_global = jnp.asarray(windows_all >= BIG_WINDOW)
+    rk_buf, rv_buf = state["kv_ring"]
+    gk_buf, gv_buf = state["kv_global"]
+    big = jnp.asarray(BIG_WINDOW)
+
+    def body(carry, xs):
+        hh, g_idx, gk_buf, gv_buf = carry
+        p, flag, kr, vr = xs
+        x = ll.rms_norm(hh, p["ln1"])
+
+        def global_branch(x, g_idx, gk_buf, gv_buf, kr, vr):
+            kc = jax.lax.dynamic_index_in_dim(gk_buf, g_idx, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(gv_buf, g_idx, 0, keepdims=False)
+            a_out, kc2, vc2 = attn.decode_attention(
+                p["attn"], x, kc, vc, lengths,
+                window=big, theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                flash_layout=opts.decode_flash_layout,
+            )
+            gk_buf = jax.lax.dynamic_update_index_in_dim(gk_buf, kc2, g_idx, 0)
+            gv_buf = jax.lax.dynamic_update_index_in_dim(gv_buf, vc2, g_idx, 0)
+            return a_out, g_idx + 1, gk_buf, gv_buf, kr, vr
+
+        def sliding_branch(x, g_idx, gk_buf, gv_buf, kr, vr):
+            a_out, kr2, vr2 = attn.decode_attention_ring(
+                p["attn"], x, kr, vr, lengths,
+                theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+            )
+            return a_out, g_idx, gk_buf, gv_buf, kr2, vr2
+
+        a_out, g_idx, gk_buf, gv_buf, kr, vr = jax.lax.cond(
+            flag, global_branch, sliding_branch, x, g_idx, gk_buf, gv_buf, kr, vr
+        )
+        if cfg.post_norms:
+            a_out = ll.rms_norm(a_out, p["post_ln1"])
+        hh = hh + a_out
+        x2 = ll.rms_norm(hh, p["ln2"])
+        f_out = ll.mlp(p["mlp"], x2, cfg.mlp_activation)
+        if cfg.post_norms:
+            f_out = ll.rms_norm(f_out, p["post_ln2"])
+        return (hh + f_out, g_idx, gk_buf, gv_buf), (kr, vr)
+
+    (h, _, gk_buf, gv_buf), rings = jax.lax.scan(
+        body, (h, jnp.int32(0), gk_buf, gv_buf),
+        (params["stack"], is_global, rk_buf, rv_buf),
+        unroll=opts.unroll_scans or 1,
+    )
+    new_state["kv_ring"] = rings
+    new_state["kv_global"] = (gk_buf, gv_buf)
+    return h, new_state
+
+
+def _hybrid_decode(params, cfg, state, h, new_state, opts: ModelOptions):
+    lengths = state["lengths"]
+    use_attn = np.array(
+        [(i + 1) % cfg.ssm_attn_every == 0 for i in range(cfg.num_layers)], np.bool_
+    )
+    shared = jax.tree.map(lambda a: a[0], params["shared_attn"])
+    kbuf, vbuf = state["shared_kv"]
+    window = jnp.asarray(BIG_WINDOW)
+
+    def body(carry, xs):
+        hh, inv_idx, kbuf, vbuf = carry
+        p, flag, st = xs
+        out, st2 = m2.mamba2_decode(p, hh, st, cfg)
+        hh = hh + out
+
+        def with_attn(hh, inv_idx, kbuf, vbuf):
+            x = ll.rms_norm(hh, shared["ln1"])
+            kc = jax.lax.dynamic_index_in_dim(kbuf, inv_idx, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vbuf, inv_idx, 0, keepdims=False)
+            a_out, kc2, vc2 = attn.decode_attention(
+                shared["attn"], x, kc, vc, lengths,
+                window=window, theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                flash_layout=opts.decode_flash_layout,
+            )
+            hh2 = hh + a_out
+            x2 = ll.rms_norm(hh2, shared["ln2"])
+            hh2 = hh2 + ll.mlp(shared["mlp"], x2, cfg.mlp_activation)
+            kbuf = jax.lax.dynamic_update_index_in_dim(kbuf, kc2, inv_idx, 0)
+            vbuf = jax.lax.dynamic_update_index_in_dim(vbuf, vc2, inv_idx, 0)
+            return hh2, inv_idx + 1, kbuf, vbuf
+
+        hh, inv_idx, kbuf, vbuf = jax.lax.cond(
+            flag, with_attn, lambda *a: a, hh, inv_idx, kbuf, vbuf
+        )
+        return (hh, inv_idx, kbuf, vbuf), st2
+
+    (h, _, kbuf, vbuf), states = jax.lax.scan(
+        body, (h, jnp.int32(0), kbuf, vbuf),
+        (params["blocks"], jnp.asarray(use_attn), state["mamba"]),
+        unroll=opts.unroll_scans or 1,
+    )
+    new_state["mamba"] = states
+    new_state["shared_kv"] = (kbuf, vbuf)
+    return h, new_state
+
+
+# ------------------------------------------------------------------------- axes
+def prefill_cache_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    """Logical axes for the caches returned by forward(collect_kv=True)."""
+    kv_ax = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+    if cfg.family == "ssm":
+        return {
+            "rwkv": {
+                "tm_x": ("layers", "batch", None),
+                "cm_x": ("layers", "batch", None),
+                "wkv": ("layers", "batch", "heads", None, None),
+            }
+        }
+    if cfg.family == "hybrid":
+        return {
+            "mamba": {
+                "conv": ("layers", "batch", None, "heads_merged"),
+                "ssd": ("layers", "batch", "heads", None, "state"),
+            },
+            "shared_kv": (kv_ax, kv_ax),
+        }
+    ax: Dict[str, Any] = {"kv": (kv_ax, kv_ax)}
+    if cfg.moe and cfg.moe_first_dense:
+        ax["dense_kv"] = (kv_ax, kv_ax)
+    return ax
+
+
+def decode_state_axes(cfg: ArchConfig, sliding_ring: bool = False) -> Dict[str, Any]:
+    """Logical axes for the decode state pytree (mirrors init_decode_state)."""
+    kv_ax = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+    ax: Dict[str, Any] = {"lengths": ("batch",)}
+    if sliding_ring and cfg.attention_kind == "sliding_global":
+        ring_ax = ("layers", "batch", None, "kv_heads", "head_dim")
+        ax["kv_ring"] = (ring_ax, ring_ax)
+        ax["kv_global"] = (kv_ax, kv_ax)
+        return ax
+    if cfg.family == "ssm":
+        ax["rwkv"] = {
+            "tm_x": ("layers", "batch", None),
+            "cm_x": ("layers", "batch", None),
+            "wkv": ("layers", "batch", "heads", None, None),
+        }
+    elif cfg.family == "hybrid":
+        ax["mamba"] = {
+            "conv": ("layers", "batch", None, "heads_merged"),
+            "ssd": ("layers", "batch", "heads", None, "state"),
+        }
+        ax["shared_kv"] = (kv_ax, kv_ax)
+    else:
+        if cfg.moe and cfg.moe_first_dense:
+            ax["dense_kv"] = (kv_ax, kv_ax)
+        ax["kv"] = (kv_ax, kv_ax)
+    return ax
+
+
+# ------------------------------------------------------------------------- flops
+def model_flops(cfg: ArchConfig, tokens: int, mode: str = "train") -> float:
+    """MODEL_FLOPS: 6*N*D train / 2*N*D inference (N = active params)."""
+    n = cfg.active_param_count()
+    return (6.0 if mode == "train" else 2.0) * n * tokens

@@ -1,0 +1,199 @@
+"""Two-tier paged KV-cache manager — the paper's middleware, productionized.
+
+Mapping from the paper (§IV-B) to serving:
+  * object        -> a KV page (page_size tokens x K heads x head_dim x 2 (k,v))
+  * local tier    -> slots in the HBM-resident page pool (what paged_attention reads)
+  * remote tier   -> page-sized chunks handed out by the slab allocator (core/slab.py)
+                     over emucxl REMOTE memory — real cross-memory-space DMAs
+  * PUT           -> page allocation during prefill/decode (hot, MRU)
+  * LRU demotion  -> sequence preemption / cold prefixes swap to the remote tier
+  * GET+Policy1   -> swap-in promotes pages back to HBM (optimistic reuse)
+  * GET+Policy2   -> read-through for one-shot access (conservative)
+
+Hit statistics reproduce the paper's Table IV "% local" accounting on real serving
+traffic (benchmarks/policy_table.py runs the paper's original object workload; the
+engine runs this one).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import emucxl as ecxl
+from repro.core.policy import AccessStats, PromotionPolicy, Policy1
+from repro.core.pool import LRUTier
+from repro.core.slab import SlabAllocator, SlabPtr
+
+
+@dataclasses.dataclass
+class PageRef:
+    """Where one logical page currently lives."""
+
+    seq_id: int
+    layer_page: int          # flat (layer, page_index) id within the sequence
+    hot_slot: Optional[int] = None
+    cold_ptr: Optional[SlabPtr] = None
+
+    @property
+    def is_local(self) -> bool:
+        return self.hot_slot is not None
+
+
+class PagedKVPool:
+    """Hot (HBM) page pool + cold (emucxl remote) spill, with promotion policies."""
+
+    def __init__(
+        self,
+        num_layers: int,
+        num_slots: int,
+        page_size: int,
+        kv_heads: int,
+        head_dim: int,
+        dtype=jnp.float32,
+        lib: Optional[ecxl.EmuCXL] = None,
+        policy: PromotionPolicy = Policy1(),
+    ):
+        self.L, self.page, self.K, self.hd = num_layers, page_size, kv_heads, head_dim
+        self.num_slots = num_slots
+        self.dtype = dtype
+        # hot pool: (L, slots, page, K, hd) x {k, v}
+        shape = (num_layers, num_slots, page_size, kv_heads, head_dim)
+        self.k_pool = jnp.zeros(shape, dtype)
+        self.v_pool = jnp.zeros(shape, dtype)
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self.lib = lib if lib is not None else ecxl.default_instance()
+        self.slab = SlabAllocator(self.lib, min_chunk=64,
+                                  max_chunk=self._page_bytes_pow2(), slab_pages=16)
+        self.policy = policy
+        self.stats = AccessStats()
+        self.lru = LRUTier(float(num_slots), name="kv-hot")
+        self._refs: Dict[Tuple[int, int], PageRef] = {}
+
+    # ------------------------------------------------------------------ sizes
+    def _page_bytes(self) -> int:
+        return int(2 * self.L * self.page * self.K * self.hd
+                   * np.dtype(self.dtype).itemsize)
+
+    def _page_bytes_pow2(self) -> int:
+        b = self._page_bytes()
+        c = 64
+        while c < b:
+            c <<= 1
+        return c
+
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    # ------------------------------------------------------------------ alloc
+    def alloc_page(self, seq_id: int, page_idx: int) -> int:
+        """Allocate one hot page (all layers) for (seq, page_idx). PUT semantics."""
+        key = (seq_id, page_idx)
+        if key in self._refs:
+            raise ecxl.EmuCXLError(f"page {key} already allocated")
+        if not self._free:
+            raise ecxl.OutOfTierMemory(0, self._page_bytes(), 0)
+        slot = self._free.pop()
+        self._refs[key] = PageRef(seq_id, page_idx, hot_slot=slot)
+        self.lru.add(key)
+        return slot
+
+    def free_page(self, seq_id: int, page_idx: int) -> None:
+        ref = self._refs.pop((seq_id, page_idx))
+        if ref.hot_slot is not None:
+            self._free.append(ref.hot_slot)
+            self.lru.remove((seq_id, page_idx))
+        if ref.cold_ptr is not None:
+            self.slab.free(ref.cold_ptr)
+
+    def free_sequence(self, seq_id: int) -> None:
+        for key in [k for k in self._refs if k[0] == seq_id]:
+            self.free_page(*key)
+
+    # ------------------------------------------------------------------ tiering
+    def demote(self, seq_id: int, page_idx: int) -> None:
+        """Hot -> cold: DMA the page's bytes into a slab chunk on the remote tier."""
+        ref = self._refs[(seq_id, page_idx)]
+        if ref.hot_slot is None:
+            return
+        slot = ref.hot_slot
+        payload = np.concatenate([
+            np.asarray(self.k_pool[:, slot]).ravel().view(np.uint8),
+            np.asarray(self.v_pool[:, slot]).ravel().view(np.uint8),
+        ])
+        ref.cold_ptr = self.slab.alloc(len(payload), ecxl.REMOTE_MEMORY)
+        self.slab.write(ref.cold_ptr, payload)
+        ref.hot_slot = None
+        self._free.append(slot)
+        self.lru.remove((seq_id, page_idx))
+
+    def promote(self, seq_id: int, page_idx: int) -> int:
+        """Cold -> hot (Policy1 path). Returns the new hot slot."""
+        ref = self._refs[(seq_id, page_idx)]
+        assert ref.cold_ptr is not None
+        if not self._free:
+            victim = self.lru.lru_key()
+            if victim is None:
+                raise ecxl.OutOfTierMemory(0, self._page_bytes(), 0)
+            self.demote(*victim)
+        slot = self._free.pop()
+        raw = np.asarray(self.slab.read(ref.cold_ptr, self._page_bytes()))
+        half = raw.size // 2
+        shape = (self.L, self.page, self.K, self.hd)
+        kd = raw[:half].view(np.dtype(self.dtype)).reshape(shape)
+        vd = raw[half:].view(np.dtype(self.dtype)).reshape(shape)
+        self.k_pool = self.k_pool.at[:, slot].set(jnp.asarray(kd))
+        self.v_pool = self.v_pool.at[:, slot].set(jnp.asarray(vd))
+        self.slab.free(ref.cold_ptr)
+        ref.cold_ptr = None
+        ref.hot_slot = slot
+        self.lru.add((seq_id, page_idx))
+        return slot
+
+    def touch(self, seq_id: int, page_idx: int) -> Optional[int]:
+        """GET semantics: record hit tier, apply the promotion policy."""
+        ref = self._refs.get((seq_id, page_idx))
+        if ref is None:
+            self.stats.misses += 1
+            return None
+        if ref.is_local:
+            self.stats.local_hits += 1
+            self.lru.touch((ref.seq_id, ref.layer_page))
+            return ref.hot_slot
+        self.stats.remote_hits += 1
+        if self.policy.promote_on_hit((seq_id, page_idx)):
+            return self.promote(seq_id, page_idx)
+        return None
+
+    # ------------------------------------------------------------------ queries
+    def hot_table(self, seq_id: int, max_pages: int) -> np.ndarray:
+        """Block table of hot slots for a sequence (-0 for unused; engine
+        guarantees residency of all pages of RUNNING sequences)."""
+        table = np.zeros((max_pages,), np.int32)
+        for (sid, pidx), ref in self._refs.items():
+            if sid == seq_id and pidx < max_pages and ref.hot_slot is not None:
+                table[pidx] = ref.hot_slot
+        return table
+
+    def residency(self, seq_id: int) -> Tuple[int, int]:
+        hot = sum(1 for (s, _), r in self._refs.items() if s == seq_id and r.is_local)
+        cold = sum(1 for (s, _), r in self._refs.items()
+                   if s == seq_id and not r.is_local)
+        return hot, cold
+
+    def write_token(self, seq_id: int, layer_kv: Tuple[jax.Array, jax.Array],
+                    position: int) -> None:
+        """Write one token's K/V (L, K, hd) into the owning hot page."""
+        page_idx, offset = divmod(position, self.page)
+        ref = self._refs[(seq_id, page_idx)]
+        if ref.hot_slot is None:
+            self.promote(seq_id, page_idx)
+        slot = ref.hot_slot
+        k_new, v_new = layer_kv
+        self.k_pool = self.k_pool.at[:, slot, offset].set(k_new.astype(self.dtype))
+        self.v_pool = self.v_pool.at[:, slot, offset].set(v_new.astype(self.dtype))
+        self.lru.touch((seq_id, page_idx))

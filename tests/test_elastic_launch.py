@@ -1,0 +1,82 @@
+"""Elastic re-meshing plans + launch metadata sanity for every assigned cell."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch import specs as sp
+from repro.launch.mesh import make_mesh, single_device_mesh
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.runtime.elastic import replan
+
+
+def test_replan_feasible_on_smaller_mesh():
+    cfg = get_config("gemma3-1b").reduced()
+    mesh = single_device_mesh()
+    plan = replan(cfg, SHAPES["train_4k"], mesh, "train_dp_all")
+    assert plan.feasible, plan.issues
+    assert plan.batch_per_device == SHAPES["train_4k"].global_batch
+    assert plan.param_shardings is not None
+
+
+def test_replan_flags_indivisible_batch():
+    import dataclasses
+
+    cfg = get_config("gemma3-1b").reduced()
+    mesh = make_mesh((1,), ("data",))
+    odd = dataclasses.replace(SHAPES["train_4k"], global_batch=7)
+    plan = replan(cfg, odd, mesh, "train_dp_all")
+    assert plan.feasible  # 7 % 1 == 0 on a 1-device mesh
+    # infeasible memory: full nemotron on one device
+    big = replan(get_config("nemotron-4-340b"), SHAPES["train_4k"], mesh,
+                 "train_fsdp")
+    assert not big.feasible and any("GiB/device" in i for i in big.issues)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_specs_metadata_all_cells(arch, shape_name):
+    """Every runnable cell has coherent specs/rules metadata (no device work)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cfg.supports_shape(shape)
+    if not ok:
+        assert reason
+        return
+    rules = sp.rules_for(cfg, shape)
+    assert rules in ("train_fsdp", "train_dp_all", "train_fsdp_sp", "serve_tp",
+                     "serve_fsdp_tp", "serve_sp_cache", "serve_moe_eptp")
+    batch = sp.batch_specs(cfg, shape)
+    assert batch["inputs"].shape[0] == shape.global_batch
+    if shape.kind == "train":
+        assert batch["targets"].dtype == jnp.int32
+    if shape.kind == "decode":
+        state = sp.decode_state_specs(cfg, shape)
+        assert state["lengths"].shape == (shape.global_batch,)
+    # param specs are eval_shape-only (never materialized)
+    p = sp.params_specs(cfg)
+    n_leaves = len(jax.tree.leaves(p))
+    assert n_leaves > 3
+    hp = adamw.OptimizerConfig()
+    o = sp.opt_state_specs(cfg, hp)
+    assert "m" in o and "master" in o
+
+
+def test_offload_manifest_sizes():
+    from repro.launch.dryrun import default_hp
+    from repro.launch.specs import offload_manifest
+
+    kimi = get_config("kimi-k2-1t-a32b")
+    hp = default_hp(kimi)
+    assert hp.offload_state
+    man = offload_manifest(kimi, hp)
+    # m + v + master = 12 bytes/param
+    assert abs(man.resident_bytes - 12 * kimi.param_count()) / (
+        12 * kimi.param_count()) < 0.01
+    assert man.dma_bytes_per_step() == 2 * man.resident_bytes
+    # small arch: no offload, empty manifest
+    small = get_config("gemma3-1b")
+    assert not default_hp(small).offload_state
+    assert offload_manifest(small, default_hp(small)).resident_bytes == 0

@@ -1,0 +1,73 @@
+"""Unit tests for the roofline harness math (pure numpy — no compiles)."""
+
+import numpy as np
+import pytest
+
+from benchmarks.roofline import analysis_points, cost_degree, fit_and_eval
+from repro.configs import SHAPES, get_config
+
+
+def _synth(points, fn):
+    return [(L, T, fn(L, T)) for L, T in points]
+
+
+def test_fit_recovers_exact_quadratic():
+    fn = lambda L, T: L * (3.0 + 0.5 * T + 0.01 * T * T) + (7.0 + 2.0 * T)
+    pts = _synth([(2, 512), (2, 1024), (2, 2048), (4, 512), (4, 1024), (4, 2048)], fn)
+    got = fit_and_eval(pts, L_full=48, T_full=32768, L_off=0, degree=2)
+    assert abs(got - fn(48, 32768)) / fn(48, 32768) < 1e-9
+
+
+def test_fit_linear_family():
+    fn = lambda L, T: L * (10.0 + 0.25 * T) + 100.0
+    pts = _synth([(2, 512), (2, 1024), (4, 512), (4, 1024)], fn)
+    got = fit_and_eval(pts, L_full=32, T_full=4096, L_off=0, degree=1)
+    assert abs(got - fn(32, 4096)) / fn(32, 4096) < 1e-9
+
+
+def test_fit_decode_l_only():
+    fn = lambda L, T: 5.0 * L + 11.0
+    pts = _synth([(2, 32768), (4, 32768)], fn)
+    got = fit_and_eval(pts, L_full=61, T_full=32768, L_off=0, degree=0)
+    assert abs(got - fn(61, 0)) < 1e-6
+
+
+def test_fit_with_layer_offset():
+    """Leading dense layers (kimi) absorb into the intercept via L_off."""
+    fn = lambda L_moe, T: L_moe * (2.0 + 0.1 * T) + 50.0
+    pts = [(1 + Lm, T, fn(Lm, T)) for Lm in (2, 4) for T in (512, 1024, 2048)]
+    got = fit_and_eval(pts, L_full=61, T_full=4096, L_off=1, degree=2)
+    assert abs(got - fn(60, 4096)) / fn(60, 4096) < 1e-9
+
+
+def test_degree_drops_when_t_points_collapse():
+    fn = lambda L, T: L * T + 3.0
+    pts = _synth([(2, 4096), (4, 4096)], fn)   # single T
+    got = fit_and_eval(pts, L_full=8, T_full=4096, L_off=0, degree=2)
+    assert abs(got - fn(8, 4096)) / fn(8, 4096) < 1e-9
+
+
+@pytest.mark.parametrize("arch,shape,deg", [
+    ("deepseek-coder-33b", "train_4k", 2),
+    ("rwkv6-3b", "train_4k", 1),
+    ("zamba2-1.2b", "prefill_32k", 1),
+    ("gemma3-12b", "decode_32k", 0),
+])
+def test_cost_degree(arch, shape, deg):
+    assert cost_degree(get_config(arch), SHAPES[shape]) == deg
+
+
+def test_analysis_points_regimes():
+    # sliding arch: all T points beyond 2x window; production T bracketed
+    cfg = get_config("gemma3-12b")
+    Ls, Ts = analysis_points(cfg, SHAPES["prefill_32k"])
+    assert all(t >= 2 * cfg.sliding_window for t in Ts)
+    assert Ts[0] <= SHAPES["prefill_32k"].seq_len <= Ts[-1] * 4
+    assert Ls == [cfg.global_every, 2 * cfg.global_every]
+    # kimi: leading dense layer rides along
+    kimi = get_config("kimi-k2-1t-a32b")
+    Ls, _ = analysis_points(kimi, SHAPES["train_4k"])
+    assert Ls == [1 + 2, 1 + 4]
+    # decode: production T only
+    _, Ts = analysis_points(cfg, SHAPES["decode_32k"])
+    assert Ts == [SHAPES["decode_32k"].seq_len]
