@@ -1,0 +1,125 @@
+"""Multi-host pooling benchmark: naive vs congestion-aware placement on the fabric.
+
+Scenario (the CXL-3.0 scenario the single-host paper cannot express): N emulated
+hosts concurrently demote cold KV-sized pages into one shared memory pool reached
+through a switch with P pool ports. Naive placement (`StaticPlacement`) pins every
+pooled allocation to port 0 — the degenerate single-device pooling you get with no
+placement logic — so all N hosts' demotion streams serialize on one link.
+Congestion-aware placement (`CongestionAwarePlacement`) picks the least-occupied
+port at allocation time, spreading concurrent streams across ports.
+
+Reported modeled throughput = total demoted bytes / fabric makespan, both derived
+from the contention model in ``core/fabric.py``; per-link occupancy statistics come
+from the ``emucxl`` stats API (``fabric_stats``). Expected shape: parity at 1 host
+(host uplink is the bottleneck either way), congestion-aware pulling ahead as hosts
+exceed one port's worth of traffic, ~P x at N >= P hosts.
+
+CSV columns: name,us_per_call,derived — consistent with benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+from repro.core.emucxl import EmuCXL, LOCAL_MEMORY, REMOTE_MEMORY
+from repro.core.fabric import Fabric
+from repro.core.policy import CongestionAwarePlacement, StaticPlacement
+
+POOL_PORTS = 4
+
+
+def run_pooling_experiment(
+    num_hosts: int,
+    placement_name: str,
+    pages_per_host: int = 16,
+    page_bytes: int = 2 * 1024 * 1024,
+    pool_ports: int = POOL_PORTS,
+) -> Dict[str, object]:
+    """All hosts demote `pages_per_host` pages concurrently; returns modeled stats."""
+    placement = (CongestionAwarePlacement() if placement_name == "congestion-aware"
+                 else StaticPlacement())
+    fabric = Fabric(num_hosts=num_hosts, pool_ports=pool_ports)
+    lib = EmuCXL()
+    lib.init(
+        local_capacity=2 * pages_per_host * page_bytes,
+        remote_capacity=2 * num_hosts * pages_per_host * page_bytes,
+        num_hosts=num_hosts,
+        fabric=fabric,
+        placement=placement,
+    )
+    # Each host fills local pages, then every host demotes its pages at once:
+    # one migrate_batch == one concurrent burst across the fabric.
+    moves = []
+    for host in range(num_hosts):
+        for _ in range(pages_per_host):
+            addr = lib.alloc(page_bytes, LOCAL_MEMORY, host)
+            moves.append((addr, REMOTE_MEMORY, host))
+    _, makespan = lib.migrate_batch(moves)
+    total_bytes = num_hosts * pages_per_host * page_bytes
+    link_stats = lib.fabric_stats()
+    result = {
+        "num_hosts": num_hosts,
+        "placement": placement.name,
+        "total_bytes": total_bytes,
+        "makespan_s": makespan,
+        "throughput_gbps": total_bytes / makespan / 1e9,
+        "links": link_stats,
+        "ports_used": sum(
+            1 for name, s in link_stats.items()
+            if name.startswith("pool") and s["transfers"] > 0
+        ),
+    }
+    lib.exit()
+    return result
+
+
+def bench(hosts: List[int] = (1, 2, 4, 8), pages_per_host: int = 16,
+          page_bytes: int = 2 * 1024 * 1024) -> List[str]:
+    rows = []
+    for n in hosts:
+        results = {
+            name: run_pooling_experiment(n, name, pages_per_host, page_bytes)
+            for name in ("static", "congestion-aware")
+        }
+        naive, aware = results["static"], results["congestion-aware"]
+        speedup = aware["throughput_gbps"] / naive["throughput_gbps"]
+        for r in (naive, aware):
+            pool_busy = {
+                name: round(s["busy_time"] * 1e6, 1)
+                for name, s in sorted(r["links"].items())
+                if name.startswith("pool")
+            }
+            rows.append(
+                f"fabric_pooling_h{n}_{r['placement']},"
+                f"{1e6 * r['makespan_s'] / (n * pages_per_host):.2f},"
+                f"throughput_gbps={r['throughput_gbps']:.2f},"
+                f"ports_used={r['ports_used']},"
+                f"pool_busy_us={pool_busy}"
+            )
+        rows.append(
+            f"fabric_pooling_h{n}_speedup,0,"
+            f"aware_over_naive={speedup:.2f}x"
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast configuration for CI")
+    ap.add_argument("--hosts", default=None,
+                    help="comma-separated host counts (default 1,2,4,8)")
+    args = ap.parse_args()
+    if args.hosts is not None:
+        hosts = [int(h) for h in args.hosts.split(",")]
+    else:
+        hosts = [1, 4] if args.smoke else [1, 2, 4, 8]
+    pages = 4 if args.smoke else 16
+    page_bytes = 256 * 1024 if args.smoke else 2 * 1024 * 1024
+    print("name,us_per_call,derived")
+    print("\n".join(bench(hosts, pages, page_bytes)))
+
+
+if __name__ == "__main__":
+    main()

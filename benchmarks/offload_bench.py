@@ -12,7 +12,7 @@ import json
 import pathlib
 from typing import List
 
-from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs import ARCH_IDS, get_config
 from repro.core.hw import V5E
 
 ROOF_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "roofline"
@@ -23,7 +23,6 @@ def bench() -> List[str]:
     from repro.launch.specs import offload_manifest
 
     out = []
-    shape = SHAPES["train_4k"]
     for arch in ARCH_IDS:
         cfg = get_config(arch)
         hp = default_hp(cfg)

@@ -67,8 +67,8 @@ def full_table(n_gets: int = 50000) -> List[Dict]:
     return rows
 
 
-def bench() -> List[str]:
-    rows = full_table(n_gets=5000)  # scaled for CI; run.py --full uses 50000
+def bench(n_gets: int = 5000) -> List[str]:
+    rows = full_table(n_gets=n_gets)  # scaled for CI; run.py --full uses 50000
     out = []
     for r in rows:
         out.append(

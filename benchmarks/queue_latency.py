@@ -55,8 +55,8 @@ def run_queue_experiment(n_ops: int = 15000, repeats: int = 3) -> List[Dict]:
     return rows
 
 
-def bench() -> List[str]:
-    rows = run_queue_experiment(n_ops=2000, repeats=2)  # scaled for CI wall time
+def bench(n_ops: int = 2000, repeats: int = 2) -> List[str]:
+    rows = run_queue_experiment(n_ops=n_ops, repeats=repeats)  # scaled for CI wall time
     out = []
     for r in rows:
         per_call_us = 1e3 * r["enqueue_ms_measured_mean"] / r["n_ops"]

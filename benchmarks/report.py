@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import json
 import pathlib
-from typing import Dict, List
 
 from repro.configs import ARCH_IDS, SHAPES
 

@@ -1,7 +1,9 @@
 """Benchmark entry point: one function per paper table + system benches.
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--full`` uses the paper's exact
-workload sizes (50k GETs, 15k queue ops); default is scaled for wall-clock.
+workload sizes (50k GETs, 15k queue ops); default is scaled for wall-clock;
+``--smoke`` is a seconds-scale CI gate that exercises every selected bench at
+tiny size so the benchmark code can never silently rot.
 """
 
 from __future__ import annotations
@@ -14,19 +16,45 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale workloads (slower)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast CI configuration (seconds, CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: queue,policy,kernels,offload,serving")
+                    help="comma-separated subset: queue,policy,fabric,kernels,"
+                         "offload,serving")
     args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
     selected = set(args.only.split(",")) if args.only else None
+    smoke_capable = {"queue", "policy", "fabric"}
+    if args.smoke:
+        if selected is None:
+            # Smoke gates the pure-model benches; kernel/serving compile paths
+            # have their own tier-1 tests and would dominate wall-clock here.
+            selected = set(smoke_capable)
+        elif selected - smoke_capable:
+            ap.error(
+                "--smoke has no fast path for: "
+                + ",".join(sorted(selected - smoke_capable))
+            )
 
     rows = ["name,us_per_call,derived"]
 
     def want(name: str) -> bool:
         return selected is None or name in selected
 
+    if want("fabric"):
+        from benchmarks import fabric_bench
+        if args.smoke:
+            rows += fabric_bench.bench(hosts=[1, 4], pages_per_host=4,
+                                       page_bytes=256 * 1024)
+        else:
+            rows += fabric_bench.bench()
+
     if want("queue"):
         from benchmarks import queue_latency
-        if args.full:
+        if args.smoke:
+            rows += queue_latency.bench(n_ops=100, repeats=1)
+        elif args.full:
             for r in queue_latency.run_queue_experiment(15000, 3):
                 for op in ("enqueue", "dequeue"):
                     rows.append(
@@ -41,7 +69,9 @@ def main() -> None:
 
     if want("policy"):
         from benchmarks import policy_table
-        if args.full:
+        if args.smoke:
+            rows += policy_table.bench(n_gets=500)
+        elif args.full:
             for r in policy_table.full_table(50000):
                 rows.append(
                     f"policy_table_{r['hot_frac']},0,"

@@ -12,10 +12,13 @@ from repro.core.emucxl import (
     EmuCXL,
     EmuCXLError,
     OutOfTierMemory,
+    QuotaExceeded,
     default_instance,
     emucxl_alloc,
     emucxl_exit,
+    emucxl_fabric_stats,
     emucxl_free,
+    emucxl_get_host,
     emucxl_get_numa_node,
     emucxl_get_size,
     emucxl_init,
@@ -24,24 +27,39 @@ from repro.core.emucxl import (
     emucxl_memmove,
     emucxl_memset,
     emucxl_migrate,
+    emucxl_migrate_batch,
+    emucxl_pool_stats,
     emucxl_read,
     emucxl_resize,
     emucxl_stats,
     emucxl_write,
 )
+from repro.core.fabric import Fabric, FabricError, Link, Transfer
 from repro.core.hw import V5E, HardwareModel
 from repro.core.kvstore import KVStore
-from repro.core.policy import AccessStats, Policy1, Policy2, Tier, make_policy
-from repro.core.pool import LRUTier
+from repro.core.policy import (
+    AccessStats,
+    CongestionAwarePlacement,
+    CongestionAwarePromotion,
+    Policy1,
+    Policy2,
+    StaticPlacement,
+    Tier,
+    make_policy,
+)
+from repro.core.pool import LRUTier, SharedPool
 from repro.core.queue import EmuQueue
 from repro.core.slab import SlabAllocator, SlabPtr
 
 __all__ = [
     "LOCAL_MEMORY", "REMOTE_MEMORY", "Allocation", "EmuCXL", "EmuCXLError",
-    "OutOfTierMemory", "default_instance", "emucxl_alloc", "emucxl_exit", "emucxl_free",
+    "OutOfTierMemory", "QuotaExceeded", "default_instance", "emucxl_alloc",
+    "emucxl_exit", "emucxl_fabric_stats", "emucxl_free", "emucxl_get_host",
     "emucxl_get_numa_node", "emucxl_get_size", "emucxl_init", "emucxl_is_local",
-    "emucxl_memcpy", "emucxl_memmove", "emucxl_memset", "emucxl_migrate", "emucxl_read",
-    "emucxl_resize", "emucxl_stats", "emucxl_write", "V5E", "HardwareModel", "KVStore",
-    "AccessStats", "Policy1", "Policy2", "Tier", "make_policy", "LRUTier", "EmuQueue",
-    "SlabAllocator", "SlabPtr",
+    "emucxl_memcpy", "emucxl_memmove", "emucxl_memset", "emucxl_migrate",
+    "emucxl_migrate_batch", "emucxl_pool_stats", "emucxl_read", "emucxl_resize",
+    "emucxl_stats", "emucxl_write", "Fabric", "FabricError", "Link", "Transfer",
+    "V5E", "HardwareModel", "KVStore", "AccessStats", "CongestionAwarePlacement",
+    "CongestionAwarePromotion", "Policy1", "Policy2", "StaticPlacement", "Tier",
+    "make_policy", "LRUTier", "SharedPool", "EmuQueue", "SlabAllocator", "SlabPtr",
 ]

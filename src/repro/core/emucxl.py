@@ -1,4 +1,4 @@
-"""The emucxl standardized API (paper Table II), adapted from x86-NUMA to JAX memory spaces.
+"""The emucxl standardized API (paper Table II), generalized to multi-host pooling.
 
 The paper's library hands out virtual addresses backed by `kmalloc_node` on NUMA node 0
 (local) or node 1 (the emulated CXL pool). Here the two tiers are XLA memory spaces:
@@ -6,10 +6,22 @@ The paper's library hands out virtual addresses backed by `kmalloc_node` on NUMA
   node 0 (LOCAL)  -> ``memory_kind="device"``      (TPU HBM; CPU default space in tests)
   node 1 (REMOTE) -> ``memory_kind="pinned_host"`` (host DRAM behind PCIe, the CXL.mem proxy)
 
+On runtimes whose devices expose neither kind (older jax on CPU), both tiers fall back
+to the device's default memory — tier placement stays fully modeled in the registry and
+the cost model, which is what the tests and benchmarks consume.
+
+Beyond the paper (CXL 3.0 direction): one ``EmuCXL`` instance can emulate **N hosts**
+sharing one remote pool through a switch fabric (``core/fabric.py``). Allocations carry
+a ``(host, node)`` placement; the remote tier is a ``SharedPool`` with per-host quotas;
+cross-tier DMAs route through the fabric so their modeled time reflects live link
+contention instead of the uncontended constants in ``core/hw.py``. With the default
+``num_hosts=1`` and no fabric, behavior is exactly the paper's single-host two-tier
+model.
+
 Allocations are byte-granular ``uint8`` buffers, faithful to the paper's ``void*``/``size_t``
 API; tensor views are layered on top for framework use. Every allocation carries metadata
-(address, size, node) in a registry backing ``is_local / get_numa_node / get_size / stats``,
-exactly like the paper's user-space metadata structure.
+(address, size, node, host, port) in a registry backing ``is_local / get_numa_node /
+get_size / stats``, exactly like the paper's user-space metadata structure.
 
 Differences from the paper, per DESIGN.md §2: accesses are DMA'd slices rather than
 cache-line loads (TPU cores cannot load from host memory), and ``memmove`` is identical to
@@ -20,19 +32,24 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, Optional, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fabric import Fabric, Transfer
 from repro.core.hw import V5E, HardwareModel
+from repro.core.policy import PlacementPolicy, StaticPlacement
+from repro.core.pool import PoolCapacityError, PoolQuotaError, SharedPool
 
 LOCAL_MEMORY = 0
 REMOTE_MEMORY = 1
 _VALID_NODES = (LOCAL_MEMORY, REMOTE_MEMORY)
 
-_MEMORY_KINDS = {LOCAL_MEMORY: "device", REMOTE_MEMORY: "pinned_host"}
+# Preferred tier -> XLA memory-space mapping; resolved against the actual device at
+# init time (see _resolve_memory_kinds).
+_PREFERRED_KINDS = {LOCAL_MEMORY: "device", REMOTE_MEMORY: "pinned_host"}
 
 # Fake virtual-address space: page-aligned, monotonically increasing. Gives the API the
 # paper's void*-shaped surface while remaining a pure lookup key.
@@ -44,39 +61,64 @@ class EmuCXLError(RuntimeError):
 
 
 class OutOfTierMemory(EmuCXLError):
-    def __init__(self, node: int, requested: int, free: int):
+    def __init__(self, node: int, requested: int, free: int, host: Optional[int] = None):
+        where = "local/HBM" if node == 0 else "remote/pool"
+        at = f" on host {host}" if host is not None and node == 0 else ""
         super().__init__(
-            f"tier {node} ({'local/HBM' if node == 0 else 'remote/host'}) cannot serve "
-            f"{requested} bytes ({free} free)"
+            f"tier {node} ({where}){at} cannot serve {requested} bytes ({free} free)"
         )
-        self.node, self.requested, self.free = node, requested, free
+        self.node, self.requested, self.free, self.host = node, requested, free, host
+
+
+class QuotaExceeded(EmuCXLError):
+    """A host hit its pool-partition quota while the pool still had free bytes."""
+
+    def __init__(self, host: int, requested: int, quota: int, used: int):
+        super().__init__(
+            f"host {host} pool quota exceeded: requested {requested} bytes with "
+            f"{used}/{quota} already charged"
+        )
+        self.host, self.requested, self.quota, self.used = host, requested, quota, used
+
+
+def _resolve_memory_kinds(device) -> Dict[int, Optional[str]]:
+    """Map tiers to memory kinds the runtime actually supports."""
+    try:
+        kinds = {m.kind for m in device.addressable_memories()}
+    except Exception:
+        kinds = set()
+    if _PREFERRED_KINDS[LOCAL_MEMORY] in kinds and _PREFERRED_KINDS[REMOTE_MEMORY] in kinds:
+        return dict(_PREFERRED_KINDS)
+    try:
+        default = device.default_memory().kind
+    except Exception:
+        default = None
+    return {LOCAL_MEMORY: default, REMOTE_MEMORY: default}
 
 
 @dataclasses.dataclass
 class Allocation:
-    """Registry record: the paper's per-allocation metadata (address, size, node)."""
+    """Registry record: the paper's metadata plus the pooled (host, port) placement."""
 
     address: int
     size: int
     node: int
     data: jax.Array
-    clock: int = 0  # LRU touch counter, maintained by the library
+    host: int = 0            # owning emulated host
+    port: int = 0            # pool port backing a REMOTE allocation
+    clock: int = 0           # LRU touch counter, maintained by the library
 
     @property
     def nbytes(self) -> int:
         return self.size
 
 
-def _sharding_for(node: int, device=None):
-    dev = device if device is not None else jax.devices()[0]
-    return jax.sharding.SingleDeviceSharding(dev, memory_kind=_MEMORY_KINDS[node])
-
-
 class EmuCXL:
-    """A two-tier disaggregated-memory manager with the paper's standardized API.
+    """A pooled disaggregated-memory manager with the paper's standardized API.
 
-    One instance == one "process" in the paper's single-process model. The module-level
-    functions below delegate to a default instance for drop-in, C-style usage.
+    One instance == one fabric domain: N emulated "hosts" (paper: one process, one
+    host) sharing a remote pool. The module-level functions below delegate to a
+    default instance for drop-in, C-style usage.
     """
 
     def __init__(self, hw: HardwareModel = V5E):
@@ -86,9 +128,14 @@ class EmuCXL:
         self._allocs: Dict[int, Allocation] = {}
         self._next_addr = _PAGE
         self._clock = 0
-        self._capacity = {LOCAL_MEMORY: 0, REMOTE_MEMORY: 0}
-        self._used = {LOCAL_MEMORY: 0, REMOTE_MEMORY: 0}
+        self.num_hosts = 1
+        self.fabric: Optional[Fabric] = None
+        self.placement: PlacementPolicy = StaticPlacement()
+        self._local_capacity = 0
+        self._used_local: Dict[int, int] = {0: 0}
+        self._pool = SharedPool(0)
         self._device = None
+        self._memory_kinds: Dict[int, Optional[str]] = dict(_PREFERRED_KINDS)
         # Modeled elapsed DMA time per tier (seconds) — the Table III analogue on the
         # target HW; the CPU runtime cannot exhibit real HBM-vs-PCIe gaps.
         self.modeled_time = {LOCAL_MEMORY: 0.0, REMOTE_MEMORY: 0.0}
@@ -99,18 +146,41 @@ class EmuCXL:
         local_capacity: Optional[int] = None,
         remote_capacity: Optional[int] = None,
         device=None,
+        num_hosts: int = 1,
+        fabric: Optional[Fabric] = None,
+        host_quota=None,
+        placement: Optional[PlacementPolicy] = None,
     ) -> None:
-        """``emucxl_init``: open the (emulated) CXL device, size the tiers."""
+        """``emucxl_init``: open the (emulated) CXL device, size the tiers.
+
+        `local_capacity` is per host; `remote_capacity` is the total shared pool.
+        `fabric` (optional) routes cross-tier DMAs through contended links;
+        `host_quota` partitions the pool (None, uniform int, or {host: bytes});
+        `placement` picks the pool port backing each REMOTE allocation.
+        """
         with self._lock:
             if self._initialized:
                 raise EmuCXLError("emucxl_init called twice without emucxl_exit")
+            if num_hosts < 1:
+                raise EmuCXLError(f"invalid num_hosts {num_hosts}")
+            if fabric is not None and fabric.num_hosts < num_hosts:
+                raise EmuCXLError(
+                    f"fabric has {fabric.num_hosts} hosts, emucxl needs {num_hosts}"
+                )
             self._device = device if device is not None else jax.devices()[0]
-            self._capacity[LOCAL_MEMORY] = (
+            self._memory_kinds = _resolve_memory_kinds(self._device)
+            self.num_hosts = num_hosts
+            self.fabric = fabric
+            if placement is not None:
+                self.placement = placement
+            self._local_capacity = (
                 local_capacity if local_capacity is not None else self.hw.hbm_capacity
             )
-            self._capacity[REMOTE_MEMORY] = (
+            pool_capacity = (
                 remote_capacity if remote_capacity is not None else self.hw.host_capacity
             )
+            self._used_local = {h: 0 for h in range(num_hosts)}
+            self._pool = SharedPool(pool_capacity, num_hosts, host_quota)
             self._initialized = True
 
     def exit(self) -> None:
@@ -118,7 +188,8 @@ class EmuCXL:
         with self._lock:
             self._require_init()
             self._allocs.clear()
-            self._used = {LOCAL_MEMORY: 0, REMOTE_MEMORY: 0}
+            self._used_local = {h: 0 for h in range(self.num_hosts)}
+            self._pool.reset()
             self._initialized = False
 
     def _require_init(self) -> None:
@@ -128,6 +199,10 @@ class EmuCXL:
     def _check_node(self, node: int) -> None:
         if node not in _VALID_NODES:
             raise EmuCXLError(f"invalid node {node}; 0=local, 1=remote")
+
+    def _check_host(self, host: int) -> None:
+        if not 0 <= host < self.num_hosts:
+            raise EmuCXLError(f"invalid host {host} (instance has {self.num_hosts})")
 
     def _resolve(self, address: Union[int, Allocation]) -> Allocation:
         if isinstance(address, Allocation):
@@ -141,30 +216,72 @@ class EmuCXL:
         self._clock += 1
         rec.clock = self._clock
 
+    def memory_kind(self, node: int) -> Optional[str]:
+        """The XLA memory kind tier `node` resolves to on this runtime."""
+        self._check_node(node)
+        return self._memory_kinds[node]
+
+    def _sharding_for(self, node: int):
+        dev = self._device if self._device is not None else jax.devices()[0]
+        return jax.sharding.SingleDeviceSharding(
+            dev, memory_kind=self._memory_kinds[node]
+        )
+
     # ------------------------------------------------------------------ allocation
-    def alloc(self, size: int, node: int) -> int:
-        """``emucxl_alloc``: allocate `size` bytes on tier `node`; returns the address.
+    def _select_port(self) -> int:
+        if self.fabric is None:
+            return 0
+        port = self.placement.select_port(self.fabric)
+        if not 0 <= port < self.fabric.pool_ports:
+            raise EmuCXLError(f"placement returned invalid pool port {port}")
+        return port
+
+    def alloc(self, size: int, node: int, host: int = 0) -> int:
+        """``emucxl_alloc``: allocate `size` bytes on tier `node` for `host`.
 
         The paper overloads mmap()'s offset field to smuggle the node id into the kernel
         backend; our equivalent side channel is the memory kind on the target sharding.
+        REMOTE allocations are charged to `host`'s pool quota and pinned to a pool
+        port chosen by the placement policy.
         """
         with self._lock:
             self._require_init()
             self._check_node(node)
+            self._check_host(host)
             if size <= 0:
                 raise EmuCXLError(f"invalid allocation size {size}")
-            free = self._capacity[node] - self._used[node]
-            if size > free:
-                raise OutOfTierMemory(node, size, free)
-            data = jax.device_put(
-                jnp.zeros((size,), jnp.uint8), _sharding_for(node, self._device)
-            )
+            port = 0
+            if node == LOCAL_MEMORY:
+                free = self._local_capacity - self._used_local[host]
+                if size > free:
+                    raise OutOfTierMemory(node, size, free, host)
+                self._used_local[host] += size
+            else:
+                port = self._select_port()  # may raise; must precede the charge
+                try:
+                    self._pool.charge(host, size)
+                except PoolQuotaError as e:
+                    raise QuotaExceeded(e.host, e.requested, e.quota, e.used) from e
+                except PoolCapacityError as e:
+                    raise OutOfTierMemory(node, size, e.free) from e
+            try:
+                data = jax.device_put(
+                    jnp.zeros((size,), jnp.uint8), self._sharding_for(node)
+                )
+            except Exception:
+                # Modeled accounting passed but the real runtime refused the
+                # buffer — roll the charge back so the tier isn't leaked.
+                if node == LOCAL_MEMORY:
+                    self._used_local[host] -= size
+                else:
+                    self._pool.release(host, size)
+                raise
             addr = self._next_addr
             self._next_addr += -(-size // _PAGE) * _PAGE  # next page boundary
-            rec = Allocation(address=addr, size=size, node=node, data=data)
+            rec = Allocation(address=addr, size=size, node=node, data=data,
+                             host=host, port=port)
             self._touch(rec)
             self._allocs[addr] = rec
-            self._used[node] += size
             self.modeled_time[node] += self.hw.tier_latency(node)
             return addr
 
@@ -179,35 +296,123 @@ class EmuCXL:
                     f"passed {size}"
                 )
             del self._allocs[rec.address]
-            self._used[rec.node] -= rec.size
+            if rec.node == LOCAL_MEMORY:
+                self._used_local[rec.host] -= rec.size
+            else:
+                self._pool.release(rec.host, rec.size)
 
     def resize(self, address: Union[int, Allocation], size: int) -> int:
         """``emucxl_resize``: allocate `size` on the same node, copy, free old, return new."""
         with self._lock:
             rec = self._resolve(address)
-            new_addr = self.alloc(size, rec.node)
+            new_addr = self.alloc(size, rec.node, rec.host)
             new_rec = self._allocs[new_addr]
             n = min(size, rec.size)
             new_rec.data = new_rec.data.at[:n].set(rec.data[:n])
-            self.modeled_time[rec.node] += self.hw.transfer_time(n, rec.node)
+            self.modeled_time[rec.node] += self._dma_time(rec, n)
             self.free(rec.address)
             return new_addr
 
-    def migrate(self, address: Union[int, Allocation], node: int) -> int:
-        """``emucxl_migrate``: move the block to `node`, return the new address."""
+    # ------------------------------------------------------------------ migration
+    def _fabric_path(self, rec: Allocation, node: int, host: int,
+                     port: int) -> Optional[Tuple[str, ...]]:
+        """Fabric links a (rec -> node/host/port) move crosses; None if no data moves
+        over the fabric (same placement, or a pure ownership transfer in the pool)."""
+        if self.fabric is None:
+            return None
+        if rec.node == LOCAL_MEMORY and node == REMOTE_MEMORY:
+            return self.fabric.pool_path(host, port)       # demote over owner's uplink
+        if rec.node == REMOTE_MEMORY and node == LOCAL_MEMORY:
+            return self.fabric.pool_path(host, rec.port)   # promote from backing port
+        if rec.node == LOCAL_MEMORY and node == LOCAL_MEMORY and rec.host != host:
+            return self.fabric.host_path(rec.host, host)
+        return None  # REMOTE -> REMOTE: quota re-charge, data stays in the pool
+
+    def migrate(self, address: Union[int, Allocation], node: int,
+                host: Optional[int] = None) -> int:
+        """``emucxl_migrate``: move the block to (`node`, `host`), return the new address.
+
+        With a fabric attached the DMA routes through it synchronously: the modeled
+        time reflects whatever else is in flight on the shared links at that moment.
+        """
         with self._lock:
             rec = self._resolve(address)
             self._check_node(node)
-            if node == rec.node:
+            target_host = rec.host if host is None else host
+            self._check_host(target_host)
+            if node == rec.node and target_host == rec.host:
                 self._touch(rec)
                 return rec.address
-            new_addr = self.alloc(rec.size, node)
+            new_addr = self.alloc(rec.size, node, target_host)
             new_rec = self._allocs[new_addr]
+            path = self._fabric_path(rec, node, target_host, new_rec.port)
+            if path is not None:
+                self.modeled_time[REMOTE_MEMORY] += self.fabric.transfer(path, rec.size)
+            elif node != rec.node or node == LOCAL_MEMORY:
+                # No fabric: cross-tier DMA, or a host-to-host copy of local
+                # memory (REMOTE->REMOTE host changes are metadata-only).
+                self.modeled_time[REMOTE_MEMORY] += self.hw.migrate_time(rec.size)
             # Cross-tier DMA: device_put re-homes the buffer into the other memory space.
-            new_rec.data = jax.device_put(rec.data, _sharding_for(node, self._device))
-            self.modeled_time[REMOTE_MEMORY] += self.hw.migrate_time(rec.size)
+            new_rec.data = jax.device_put(rec.data, self._sharding_for(node))
             self.free(rec.address)
             return new_addr
+
+    def migrate_batch(
+        self, moves: Sequence[Union[Tuple[int, int], Tuple[int, int, Optional[int]]]]
+    ) -> Tuple[Dict[int, int], float]:
+        """Concurrent ``emucxl_migrate``: all moves are in flight on the fabric at once.
+
+        This is the multi-host hot path — N hosts demoting/promoting simultaneously
+        contend for host uplinks and pool ports. Returns ({old_addr: new_addr},
+        modeled makespan). Without a fabric, falls back to serial uncontended moves.
+        """
+        with self._lock:
+            self._require_init()
+            start_clock = self.fabric.clock if self.fabric is not None else 0.0
+            staged: List[Tuple[Allocation, Allocation, int, Optional[Transfer]]] = []
+            addr_map: Dict[int, int] = {}
+            serial_time = 0.0
+            try:
+                for move in moves:
+                    addr, node = move[0], move[1]
+                    host = move[2] if len(move) > 2 else None
+                    rec = self._resolve(addr)
+                    self._check_node(node)
+                    target_host = rec.host if host is None else host
+                    self._check_host(target_host)
+                    if node == rec.node and target_host == rec.host:
+                        self._touch(rec)
+                        addr_map[rec.address] = rec.address
+                        continue
+                    new_addr = self.alloc(rec.size, node, target_host)
+                    new_rec = self._allocs[new_addr]
+                    path = self._fabric_path(rec, node, target_host, new_rec.port)
+                    transfer = None
+                    if path is not None:
+                        transfer = self.fabric.begin(path, rec.size)
+                    elif node != rec.node or node == LOCAL_MEMORY:
+                        serial_time += self.hw.migrate_time(rec.size)
+                    staged.append((rec, new_rec, node, transfer))
+                    addr_map[rec.address] = new_addr
+            except Exception:
+                # A mid-batch alloc failure (quota/capacity) must not leak the
+                # moves staged so far: release their destination allocations and
+                # deregister their in-flight fabric transfers, leaving sources
+                # untouched.
+                for _, new_rec, _, transfer in staged:
+                    if transfer is not None:
+                        self.fabric.cancel(transfer)
+                    self.free(new_rec.address)
+                raise
+            if self.fabric is not None:
+                makespan = self.fabric.drain() - start_clock
+            else:
+                makespan = serial_time
+            self.modeled_time[REMOTE_MEMORY] += makespan
+            for rec, new_rec, node, _ in staged:
+                new_rec.data = jax.device_put(rec.data, self._sharding_for(node))
+                self.free(rec.address)
+            return addr_map, makespan
 
     # ------------------------------------------------------------------ introspection
     def is_local(self, address: Union[int, Allocation]) -> bool:
@@ -218,33 +423,85 @@ class EmuCXL:
         with self._lock:
             return self._resolve(address).node
 
+    def get_host(self, address: Union[int, Allocation]) -> int:
+        with self._lock:
+            return self._resolve(address).host
+
     def get_size(self, address: Union[int, Allocation]) -> int:
         with self._lock:
             return self._resolve(address).size
 
-    def stats(self, node: int) -> int:
-        """``emucxl_stats``: total bytes currently allocated on `node`."""
+    def stats(self, node: int, host: Optional[int] = None) -> int:
+        """``emucxl_stats``: bytes allocated on `node` (optionally for one host)."""
         with self._lock:
             self._check_node(node)
-            return self._used[node]
+            if node == LOCAL_MEMORY:
+                if host is None:
+                    return sum(self._used_local.values())
+                self._check_host(host)
+                return self._used_local[host]
+            if host is None:
+                return self._pool.used
+            self._check_host(host)
+            return self._pool.used_by_host[host]
 
-    def capacity(self, node: int) -> int:
+    def capacity(self, node: int, host: Optional[int] = None) -> int:
         with self._lock:
             self._check_node(node)
-            return self._capacity[node]
+            if node == LOCAL_MEMORY:
+                return self._local_capacity if host is not None \
+                    else self._local_capacity * self.num_hosts
+            return self._pool.capacity
+
+    def host_quota(self, host: int) -> Optional[int]:
+        with self._lock:
+            self._check_host(host)
+            return self._pool.quota(host)
+
+    def pool_stats(self) -> Dict[str, object]:
+        """Shared-pool partition view: total + per-host usage and quotas."""
+        with self._lock:
+            return {
+                "capacity": self._pool.capacity,
+                "used": self._pool.used,
+                "per_host": {
+                    h: {"used": self._pool.used_by_host[h],
+                        "quota": self._pool.quota(h)}
+                    for h in range(self.num_hosts)
+                },
+            }
+
+    def fabric_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-link occupancy/utilization stats (empty without a fabric)."""
+        with self._lock:
+            return self.fabric.stats() if self.fabric is not None else {}
 
     def allocations(self) -> Dict[int, Allocation]:
         with self._lock:
             return dict(self._allocs)
 
     # ------------------------------------------------------------------ data movement
+    def _dma_time(self, rec: Allocation, nbytes: int) -> float:
+        """Modeled time for a compute <-> tier DMA on `rec`'s placement.
+
+        Remote DMAs with a fabric attached route over (host uplink, pool port) and
+        therefore see live contention; otherwise the uncontended hw constants apply.
+        """
+        if nbytes <= 0:
+            return 0.0
+        if rec.node == REMOTE_MEMORY and self.fabric is not None:
+            return self.fabric.transfer(
+                self.fabric.pool_path(rec.host, rec.port), nbytes
+            )
+        return self.hw.transfer_time(nbytes, rec.node)
+
     def read(self, address: Union[int, Allocation], offset: int, buf_size: int) -> np.ndarray:
         """``emucxl_read``: DMA `buf_size` bytes at `offset` out of the allocation."""
         with self._lock:
             rec = self._resolve(address)
             self._bounds(rec, offset, buf_size)
             self._touch(rec)
-            self.modeled_time[rec.node] += self.hw.transfer_time(buf_size, rec.node)
+            self.modeled_time[rec.node] += self._dma_time(rec, buf_size)
             return np.asarray(rec.data[offset : offset + buf_size])
 
     def write(self, buf: np.ndarray, offset: int, address: Union[int, Allocation],
@@ -257,7 +514,7 @@ class EmuCXL:
             self._bounds(rec, offset, n)
             rec.data = rec.data.at[offset : offset + n].set(flat[:n])
             self._touch(rec)
-            self.modeled_time[rec.node] += self.hw.transfer_time(n, rec.node)
+            self.modeled_time[rec.node] += self._dma_time(rec, n)
             return True
 
     def memset(self, address: Union[int, Allocation], value: int, size: int) -> int:
@@ -268,8 +525,24 @@ class EmuCXL:
             byte = np.uint8(value & 0xFF)
             rec.data = rec.data.at[:size].set(byte)
             self._touch(rec)
-            self.modeled_time[rec.node] += self.hw.transfer_time(size, rec.node)
+            self.modeled_time[rec.node] += self._dma_time(rec, size)
             return rec.address
+
+    def _copy_path(self, srec: Allocation, drec: Allocation) -> Optional[Tuple[str, ...]]:
+        """Fabric links a src -> dst copy crosses (None = stays off the fabric)."""
+        if self.fabric is None:
+            return None
+        if srec.node == LOCAL_MEMORY and drec.node == LOCAL_MEMORY:
+            if srec.host == drec.host:
+                return None
+            return self.fabric.host_path(srec.host, drec.host)
+        if srec.node == LOCAL_MEMORY:
+            return self.fabric.pool_path(srec.host, drec.port)
+        if drec.node == LOCAL_MEMORY:
+            return self.fabric.pool_path(drec.host, srec.port)
+        if srec.port == drec.port:
+            return (self.fabric.pool_link(srec.port),)
+        return (self.fabric.pool_link(srec.port), self.fabric.pool_link(drec.port))
 
     def memcpy(self, dst: Union[int, Allocation], src: Union[int, Allocation],
                size: int) -> int:
@@ -278,9 +551,15 @@ class EmuCXL:
             self._bounds(srec, 0, size)
             self._bounds(drec, 0, size)
             chunk = srec.data[:size]
+            path = self._copy_path(srec, drec)
             if drec.node != srec.node:
-                chunk = jax.device_put(chunk, _sharding_for(drec.node, self._device))
-                self.modeled_time[REMOTE_MEMORY] += self.hw.migrate_time(size)
+                chunk = jax.device_put(chunk, self._sharding_for(drec.node))
+                if path is not None:
+                    self.modeled_time[REMOTE_MEMORY] += self.fabric.transfer(path, size)
+                else:
+                    self.modeled_time[REMOTE_MEMORY] += self.hw.migrate_time(size)
+            elif path is not None:
+                self.modeled_time[drec.node] += self.fabric.transfer(path, size)
             else:
                 self.modeled_time[drec.node] += self.hw.transfer_time(size, drec.node)
             drec.data = drec.data.at[:size].set(chunk)
@@ -293,10 +572,10 @@ class EmuCXL:
         return self.memcpy(dst, src, size)
 
     # ------------------------------------------------------------------ tensor views
-    def alloc_array(self, shape, dtype, node: int) -> int:
+    def alloc_array(self, shape, dtype, node: int, host: int = 0) -> int:
         """Framework convenience: allocate bytes sized for `shape`/`dtype` on `node`."""
         nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
-        addr = self.alloc(max(nbytes, 1), node)
+        addr = self.alloc(max(nbytes, 1), node, host)
         return addr
 
     def read_array(self, address, shape, dtype) -> np.ndarray:
@@ -323,16 +602,19 @@ def default_instance() -> EmuCXL:
     return _default
 
 
-def emucxl_init(local_capacity=None, remote_capacity=None, device=None) -> None:
-    _default.init(local_capacity, remote_capacity, device)
+def emucxl_init(local_capacity=None, remote_capacity=None, device=None,
+                num_hosts: int = 1, fabric=None, host_quota=None,
+                placement=None) -> None:
+    _default.init(local_capacity, remote_capacity, device, num_hosts, fabric,
+                  host_quota, placement)
 
 
 def emucxl_exit() -> None:
     _default.exit()
 
 
-def emucxl_alloc(size: int, node: int) -> int:
-    return _default.alloc(size, node)
+def emucxl_alloc(size: int, node: int, host: int = 0) -> int:
+    return _default.alloc(size, node, host)
 
 
 def emucxl_free(address, size=None) -> None:
@@ -343,8 +625,12 @@ def emucxl_resize(address, size: int) -> int:
     return _default.resize(address, size)
 
 
-def emucxl_migrate(address, node: int) -> int:
-    return _default.migrate(address, node)
+def emucxl_migrate(address, node: int, host: Optional[int] = None) -> int:
+    return _default.migrate(address, node, host)
+
+
+def emucxl_migrate_batch(moves) -> Tuple[Dict[int, int], float]:
+    return _default.migrate_batch(moves)
 
 
 def emucxl_is_local(address) -> bool:
@@ -355,12 +641,24 @@ def emucxl_get_numa_node(address) -> int:
     return _default.get_numa_node(address)
 
 
+def emucxl_get_host(address) -> int:
+    return _default.get_host(address)
+
+
 def emucxl_get_size(address) -> int:
     return _default.get_size(address)
 
 
-def emucxl_stats(node: int) -> int:
-    return _default.stats(node)
+def emucxl_stats(node: int, host: Optional[int] = None) -> int:
+    return _default.stats(node, host)
+
+
+def emucxl_pool_stats() -> Dict[str, object]:
+    return _default.pool_stats()
+
+
+def emucxl_fabric_stats() -> Dict[str, Dict[str, float]]:
+    return _default.fabric_stats()
 
 
 def emucxl_read(address, offset: int, buf_size: int) -> np.ndarray:

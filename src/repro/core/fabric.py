@@ -1,0 +1,296 @@
+"""CXL fabric model: hosts, switch ports, and links with bandwidth contention.
+
+CXL 3.0 turns the paper's single-host two-tier picture into a *pooled* one: N
+hosts reach a shared memory pool through a switch, and every DMA crosses two
+links (host <-> switch, switch <-> pool port) with finite bandwidth. This module
+models that topology with a fluid-flow ("progressive filling") contention model:
+
+  * every in-flight transfer owns a path of links;
+  * concurrent transfers crossing the same link share its bandwidth equally;
+  * a transfer's instantaneous rate is the minimum share across its path;
+  * path latency (link + switch) elapses before data starts flowing.
+
+Time here is *modeled* (virtual seconds), continuous with `EmuCXL.modeled_time`:
+the emulation runs on whatever host executes it, while the fabric accounts what
+the transfers would cost on the modeled topology. Contention only appears when
+transfers overlap in virtual time — `begin()` several, then `drain()` — which is
+how `EmuCXL.migrate_batch` models N hosts acting concurrently. A lone
+`transfer()` reduces exactly to latency + bytes/bandwidth, matching the old
+uncontended constants in `core/hw.py`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.hw import V5E, HardwareModel
+
+_EPS = 1e-15
+
+
+class FabricError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class LinkStats:
+    """Cumulative per-link accounting (virtual time)."""
+
+    bytes_carried: int = 0
+    transfers: int = 0
+    busy_time: float = 0.0       # virtual seconds with >= 1 flowing transfer
+    peak_concurrency: int = 0
+
+
+class Link:
+    """One full-duplex-modeled-as-one-lane fabric link."""
+
+    def __init__(self, name: str, bandwidth: float, latency: float):
+        if bandwidth <= 0:
+            raise FabricError(f"link {name}: bandwidth must be > 0")
+        self.name = name
+        self.bandwidth = bandwidth
+        self.latency = latency
+        self.active: set = set()          # tids currently routed over this link
+        self.stats = LinkStats()
+
+    @property
+    def occupancy(self) -> int:
+        """Live number of in-flight transfers crossing this link."""
+        return len(self.active)
+
+
+@dataclasses.dataclass
+class Transfer:
+    """One in-flight (or completed) DMA across the fabric."""
+
+    tid: int
+    path: Tuple[str, ...]
+    nbytes: int
+    start: float                  # virtual time begin() was called
+    ready_at: float               # start + path latency; data flows after this
+    remaining: float              # bytes left to move
+    completed_at: Optional[float] = None
+
+    @property
+    def elapsed(self) -> float:
+        if self.completed_at is None:
+            raise FabricError(f"transfer {self.tid} still in flight")
+        return self.completed_at - self.start
+
+
+class Fabric:
+    """N hosts and P pool ports around one switch, with contended links.
+
+    Link names: ``host0..host{N-1}`` (host uplinks) and ``pool0..pool{P-1}``
+    (switch-to-pool-device ports). A host-to-pool path is (host_i, pool_j); a
+    host-to-host path is (host_a, host_b). The switch adds fixed latency per
+    traversal but is not itself a bandwidth bottleneck (its fabric ports are).
+    """
+
+    def __init__(
+        self,
+        num_hosts: int = 1,
+        pool_ports: int = 1,
+        hw: HardwareModel = V5E,
+        host_bandwidth: Optional[float] = None,
+        pool_port_bandwidth: Optional[float] = None,
+        link_latency: Optional[float] = None,
+        switch_latency: Optional[float] = None,
+    ):
+        if num_hosts < 1 or pool_ports < 1:
+            raise FabricError("need >= 1 host and >= 1 pool port")
+        self.hw = hw
+        self.num_hosts = num_hosts
+        self.pool_ports = pool_ports
+        self.switch_latency = (
+            switch_latency if switch_latency is not None else hw.switch_latency
+        )
+        host_bw = host_bandwidth if host_bandwidth is not None else hw.host_link_bandwidth
+        pool_bw = (
+            pool_port_bandwidth
+            if pool_port_bandwidth is not None
+            else hw.pool_port_bandwidth
+        )
+        lat = link_latency if link_latency is not None else hw.remote_access_latency / 2
+        self.links: Dict[str, Link] = {}
+        for i in range(num_hosts):
+            self._add_link(Link(f"host{i}", host_bw, lat))
+        for j in range(pool_ports):
+            self._add_link(Link(f"pool{j}", pool_bw, lat))
+        self.clock = 0.0
+        self._tids = itertools.count()
+        self._active: Dict[int, Transfer] = {}
+
+    def _add_link(self, link: Link) -> None:
+        self.links[link.name] = link
+
+    # ------------------------------------------------------------------ topology
+    def host_link(self, host: int) -> str:
+        self._check_host(host)
+        return f"host{host}"
+
+    def pool_link(self, port: int) -> str:
+        if not 0 <= port < self.pool_ports:
+            raise FabricError(f"invalid pool port {port} (have {self.pool_ports})")
+        return f"pool{port}"
+
+    def pool_path(self, host: int, port: int) -> Tuple[str, str]:
+        """Path for a host <-> shared-pool DMA."""
+        return (self.host_link(host), self.pool_link(port))
+
+    def host_path(self, src: int, dst: int) -> Tuple[str, ...]:
+        """Path for a direct host <-> host move (CXL 3.0 peer sharing)."""
+        if src == dst:
+            return (self.host_link(src),)
+        return (self.host_link(src), self.host_link(dst))
+
+    def _check_host(self, host: int) -> None:
+        if not 0 <= host < self.num_hosts:
+            raise FabricError(f"invalid host {host} (fabric has {self.num_hosts})")
+
+    def path_latency(self, path: Iterable[str]) -> float:
+        return sum(self.links[n].latency for n in path) + self.switch_latency
+
+    # ------------------------------------------------------------------ transfers
+    def begin(self, path: Iterable[str], nbytes: int) -> Transfer:
+        """Register an in-flight transfer starting at the current virtual time."""
+        path = tuple(path)
+        if not path:
+            raise FabricError("empty path")
+        for name in path:
+            if name not in self.links:
+                raise FabricError(f"unknown link {name!r}")
+        if nbytes <= 0:
+            raise FabricError(f"invalid transfer size {nbytes}")
+        t = Transfer(
+            tid=next(self._tids),
+            path=path,
+            nbytes=nbytes,
+            start=self.clock,
+            ready_at=self.clock + self.path_latency(path),
+            remaining=float(nbytes),
+        )
+        self._active[t.tid] = t
+        for name in path:
+            link = self.links[name]
+            link.active.add(t.tid)
+            link.stats.transfers += 1
+            link.stats.bytes_carried += nbytes
+            link.stats.peak_concurrency = max(link.stats.peak_concurrency,
+                                              link.occupancy)
+        return t
+
+    def _flow_rates(self, flowing: List[Transfer]) -> Dict[int, float]:
+        """Equal-share progressive filling: rate = min over path of bw / users."""
+        users: Dict[str, int] = {}
+        for t in flowing:
+            for name in t.path:
+                users[name] = users.get(name, 0) + 1
+        return {
+            t.tid: min(self.links[n].bandwidth / users[n] for n in t.path)
+            for t in flowing
+        }
+
+    def _step(self) -> bool:
+        """Advance virtual time to the next event; returns False when idle."""
+        if not self._active:
+            return False
+        active = list(self._active.values())
+        flowing = [t for t in active if t.ready_at <= self.clock + _EPS]
+        waiting = [t for t in active if t.ready_at > self.clock + _EPS]
+        rates = self._flow_rates(flowing)
+        dt = min(
+            [t.remaining / rates[t.tid] for t in flowing if rates[t.tid] > 0]
+            + [t.ready_at - self.clock for t in waiting]
+        )
+        dt = max(dt, 0.0)
+        busy_links = {name for t in flowing for name in t.path}
+        for name in busy_links:
+            self.links[name].stats.busy_time += dt
+        self.clock += dt
+        for t in flowing:
+            t.remaining -= rates[t.tid] * dt
+            if t.remaining <= _EPS * max(t.nbytes, 1):
+                t.remaining = 0.0
+                t.completed_at = self.clock
+                del self._active[t.tid]
+                for name in t.path:
+                    self.links[name].active.discard(t.tid)
+        return True
+
+    def cancel(self, transfer: Transfer) -> None:
+        """Abort an in-flight transfer without advancing time (rollback path).
+
+        Reverses begin()'s registration and stats so a failed multi-part
+        operation doesn't leave the fabric permanently occupied. No-op if the
+        transfer already completed. peak_concurrency is intentionally left as
+        observed.
+        """
+        t = self._active.pop(transfer.tid, None)
+        if t is None:
+            return
+        for name in t.path:
+            link = self.links[name]
+            link.active.discard(t.tid)
+            link.stats.transfers -= 1
+            link.stats.bytes_carried -= t.nbytes
+
+    def drain(self, transfer: Optional[Transfer] = None) -> float:
+        """Advance virtual time until `transfer` (or everything) completes.
+
+        Other in-flight transfers make proportional progress; contention is the
+        whole point. Returns the completion time of `transfer`, or the final
+        clock when draining everything.
+        """
+        if transfer is None:
+            while self._step():
+                pass
+            return self.clock
+        while transfer.completed_at is None:
+            if not self._step():
+                raise FabricError(f"transfer {transfer.tid} never completed")
+        return transfer.completed_at
+
+    def transfer(self, path: Iterable[str], nbytes: int) -> float:
+        """Synchronous transfer: begin + drain; returns modeled elapsed seconds.
+
+        If other transfers are in flight they contend with this one (and advance
+        alongside it) — a lone call is exactly latency + nbytes/bandwidth.
+        """
+        t = self.begin(path, nbytes)
+        self.drain(t)
+        return t.elapsed
+
+    # ------------------------------------------------------------------ queries
+    def idle(self) -> bool:
+        return not self._active
+
+    def in_flight(self) -> int:
+        return len(self._active)
+
+    def link_occupancy(self, name: str) -> int:
+        return self.links[name].occupancy
+
+    def least_loaded_port(self) -> int:
+        """Pool port whose link has the fewest in-flight transfers (ties: lowest)."""
+        return min(range(self.pool_ports),
+                   key=lambda j: (self.links[self.pool_link(j)].occupancy, j))
+
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-link occupancy/utilization snapshot (the `emucxl_stats` extension)."""
+        out: Dict[str, Dict[str, float]] = {}
+        for name, link in self.links.items():
+            out[name] = {
+                "bandwidth": link.bandwidth,
+                "occupancy": float(link.occupancy),
+                "bytes_carried": float(link.stats.bytes_carried),
+                "transfers": float(link.stats.transfers),
+                "busy_time": link.stats.busy_time,
+                "peak_concurrency": float(link.stats.peak_concurrency),
+                "utilization": (link.stats.busy_time / self.clock
+                                if self.clock > 0 else 0.0),
+            }
+        return out

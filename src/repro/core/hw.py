@@ -25,6 +25,11 @@ class HardwareModel:
     # Host tier ("node 1") — the emulated CXL.mem pool behind PCIe.
     host_link_bandwidth: float = 32e9    # B/s (PCIe5 x16-class, matches CXL.mem spec rates)
     host_capacity: int = 512 * 2**30     # bytes of pooled DRAM per host
+    # CXL-3.0-style fabric terms (core/fabric.py): each pool device hangs off the
+    # switch on its own port; the switch adds latency but fabric ports are the
+    # bandwidth bottleneck.
+    pool_port_bandwidth: float = 32e9    # B/s per switch<->pool-device port
+    switch_latency: float = 250e-9       # per-traversal switch latency
     # Latency floors (seconds). remote_access_latency mirrors the paper's NUMA-hop /
     # CXL.mem extra latency class (~150-250ns load; DMA setup is larger).
     local_access_latency: float = 100e-9

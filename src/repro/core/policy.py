@@ -1,4 +1,4 @@
-"""Placement / promotion policies for two-tier disaggregated memory (paper §IV-B).
+"""Placement / promotion policies for pooled disaggregated memory (paper §IV-B).
 
 Policy1 — optimistic: a remote hit promotes the object to the local tier (caching for
 subsequent access), possibly demoting the local LRU victim.
@@ -7,13 +7,19 @@ Policy2 — conservative: remote hits are served in place; nothing moves.
 The paper evaluates these on its KV-store middleware (Table IV); here the same policy
 objects also drive the serving-time paged KV-cache manager, so the comparison carries
 over to a real workload (hot KV pages in HBM, cold pages in host memory).
+
+Beyond the paper, the multi-host fabric (core/fabric.py) adds a *congestion* axis:
+``CongestionAwarePlacement`` spreads REMOTE allocations across pool ports by live link
+occupancy, and ``CongestionAwarePromotion`` suppresses optimistic promotion while the
+owner's uplink is busy. Both degrade to their static counterparts on an idle fabric,
+so single-host behavior is unchanged.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Hashable, List, Optional, Protocol
+from typing import Hashable, Optional, Protocol
 
 
 class Tier(enum.IntEnum):
@@ -70,6 +76,83 @@ class AccessStats:
         self.local_hits = self.remote_hits = self.misses = 0
 
 
+# ---------------------------------------------------------------- fabric-aware layer
+class PlacementPolicy(Protocol):
+    """Picks the pool port backing a new REMOTE allocation."""
+
+    name: str
+
+    def select_port(self, fabric) -> int: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticPlacement:
+    """Naive placement: every pooled allocation lands on one fixed port."""
+
+    port: int = 0
+    name: str = "static"
+
+    def select_port(self, fabric) -> int:
+        return self.port
+
+
+@dataclasses.dataclass(frozen=True)
+class CongestionAwarePlacement:
+    """Pick the pool port with the fewest in-flight transfers on its link.
+
+    Falls back to the static port when no fabric is attached or the fabric is idle
+    (zero in-flight transfers) — identical to ``StaticPlacement`` until load appears.
+    """
+
+    fallback_port: int = 0
+    name: str = "congestion-aware"
+
+    def select_port(self, fabric) -> int:
+        if fabric is None or fabric.idle():
+            return self.fallback_port
+        return fabric.least_loaded_port()
+
+
+@dataclasses.dataclass
+class CongestionAwarePromotion:
+    """Wrap a promotion policy with a live-occupancy gate on the owner's uplink.
+
+    While `watch_link` (typically the owning host's fabric uplink) carries more than
+    `max_occupancy` in-flight transfers, remote hits are served in place (Policy2
+    behavior) instead of paying a promotion DMA on a contended link. On an idle
+    fabric this is exactly `base`.
+
+    Scope: the gate reads *instantaneous* occupancy, so it only engages while
+    overlapping traffic is in flight (``Fabric.begin`` without drain — i.e. other
+    hosts' concurrent bursts, as in ``EmuCXL.migrate_batch``). A single host
+    issuing purely synchronous DMAs drains each one before the next decision and
+    will always see its own link idle; that degenerate case is `base` by design.
+    """
+
+    base: PromotionPolicy = dataclasses.field(default_factory=Policy1)
+    fabric: Optional[object] = None
+    watch_link: Optional[str] = None
+    max_occupancy: int = 0
+    name: str = "congestion-aware-promotion"
+
+    def bind(self, fabric, watch_link: Optional[str] = None) -> "CongestionAwarePromotion":
+        self.fabric = fabric
+        self.watch_link = watch_link
+        return self
+
+    def promote_on_hit(self, key: Hashable) -> bool:
+        if self.fabric is None or self.fabric.idle():
+            return self.base.promote_on_hit(key)
+        occupancy = (
+            self.fabric.link_occupancy(self.watch_link)
+            if self.watch_link is not None
+            else self.fabric.in_flight()
+        )
+        if occupancy > self.max_occupancy:
+            return False
+        return self.base.promote_on_hit(key)
+
+
 @dataclasses.dataclass(frozen=True)
 class WriteBackPolicy:
     """Demotion batching for dirty pages (beyond-paper: used by the KV-cache manager).
@@ -82,13 +165,17 @@ class WriteBackPolicy:
 
 
 def make_policy(name: str) -> PromotionPolicy:
+    key = name.lower()
+    if key in ("congestion", "congestion-aware", "congestion-aware-promotion"):
+        # Unbound: callers attach the fabric + watch link via .bind().
+        return CongestionAwarePromotion(base=Policy1())
     table = {
         "policy1": Policy1(),
         "policy1-optimistic": Policy1(),
         "policy2": Policy2(),
         "policy2-conservative": Policy2(),
     }
-    key = name.lower()
     if key not in table:
-        raise ValueError(f"unknown policy {name!r}; options: {sorted(table)}")
+        options = sorted(table) + ["congestion-aware"]
+        raise ValueError(f"unknown policy {name!r}; options: {options}")
     return table[key]

@@ -59,10 +59,12 @@ class SlabAllocator:
         min_chunk: int = 64,
         max_chunk: int = 64 * 1024,
         slab_pages: int = 16,
+        host: int = 0,
     ):
         if min_chunk & (min_chunk - 1) or max_chunk & (max_chunk - 1):
             raise ValueError("chunk bounds must be powers of two")
         self.lib = lib if lib is not None else ecxl.default_instance()
+        self.host = host  # emulated host charged for this allocator's slabs
         self.min_chunk, self.max_chunk = min_chunk, max_chunk
         self.slab_bytes = slab_pages * PAGE_BYTES
         self._slabs: Dict[int, _Slab] = {}
@@ -112,7 +114,7 @@ class SlabAllocator:
 
     def _grow(self, cls: int, node: int) -> int:
         chunks = max(self.slab_bytes // cls, 1)
-        addr = self.lib.alloc(chunks * cls, node)
+        addr = self.lib.alloc(chunks * cls, node, self.host)
         sid = self._next_id
         self._next_id += 1
         self._slabs[sid] = _Slab(

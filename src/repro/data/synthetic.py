@@ -9,7 +9,7 @@ exactly reproducible and shards trivially independent.
 
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 
@@ -54,7 +54,6 @@ class SyntheticTokens:
 
     def _features(self, toks: np.ndarray, g) -> np.ndarray:
         D = self.cfg.d_model
-        v = self.cfg.vocab_size
         proj = np.random.default_rng(self.seed + 1).standard_normal((64, D)) / 8.0
         code = (toks[..., None] % np.arange(2, 66)[None, None, :]).astype(np.float32)
         code = code / np.arange(2, 66)[None, None, :] - 0.5

@@ -1,3 +1,14 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+from jax.experimental.pallas import tpu as _pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-compatible pltpu compiler params (renamed across jax releases:
+    TPUCompilerParams -> CompilerParams)."""
+    cls = getattr(_pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = _pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 NEG_INF = -1.0e30
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_K = 128
@@ -150,7 +152,7 @@ def flash_attention_bnh(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((BN, Sp, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _ssd_kernel(
     A_ref, D_ref,                 # scalar prefetch: (H,) each
@@ -115,7 +117,7 @@ def ssd_pallas(x, dt, A, Bm, C, D, state, *, chunk: int = 32, interpret: bool = 
             jax.ShapeDtypeStruct((B, H, Tp, P), jnp.float32),
             jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

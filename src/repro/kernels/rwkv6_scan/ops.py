@@ -11,7 +11,6 @@ fp32 throughout; chunk=32 bounds the dynamic range of 1/A_s (decay w in (0,1)).
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

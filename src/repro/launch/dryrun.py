@@ -25,11 +25,9 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.hw import V5E
 from repro.distributed import axis_rules
 from repro.launch import specs as sp
 from repro.launch import steps as st

@@ -7,8 +7,7 @@ collectives, DMAs, and compute across the whole step.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

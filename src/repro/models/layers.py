@@ -8,7 +8,7 @@ essential at 96 layers x 512 devices). Parameter logical axes for sharding live 
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

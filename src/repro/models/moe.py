@@ -16,15 +16,28 @@ accumulated by the scan in transformer.py.
 
 from __future__ import annotations
 
+import inspect
 from functools import partial
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
+try:  # jax >= 0.6 promotes shard_map to the top-level namespace
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.configs.base import ArchConfig
 from repro.distributed import constrain, current_mesh, current_rules
 from repro.models.layers import trunc_normal
+
+# Replication checking was renamed check_rep -> check_vma across jax releases.
+_SHARD_MAP_NO_CHECK = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else {"check_rep": False}
+)
 
 
 def init_moe(key, L: int, cfg: ArchConfig, dtype) -> Dict[str, jax.Array]:
@@ -172,7 +185,7 @@ def moe_ep_ff(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig,
     capacity = _capacity(tokens, cfg, ep)
 
     @partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(
             P(None, None, None),                 # x replicated (decode: tiny)
@@ -182,7 +195,7 @@ def moe_ep_ff(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig,
             P("model", data_axes, None),         # w_down: experts x ff-shard x D
         ),
         out_specs=(P(None, None, None), P()),
-        check_vma=False,
+        **_SHARD_MAP_NO_CHECK,
     )
     def _ep_ff(xl, router_w, w_gate, w_up, w_down):
         Bl, Sl, _ = xl.shape
@@ -264,7 +277,7 @@ def moe_ep(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig,
     capacity = _capacity(tokens_local, cfg, ep)
 
     @partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(
             P(batch_axes if batch_axes else None, None, None),  # x: batch-sharded
@@ -274,7 +287,7 @@ def moe_ep(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig,
             P("model", None, None),
         ),
         out_specs=(P(batch_axes if batch_axes else None, None, None), P()),
-        check_vma=False,
+        **_SHARD_MAP_NO_CHECK,
     )
     def _ep(xl, router_w, w_gate, w_up, w_down):
         Bl, Sl, _ = xl.shape

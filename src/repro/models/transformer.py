@@ -17,8 +17,7 @@ the pytree with logical-axis tuples that the sharding rules resolve per mesh.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

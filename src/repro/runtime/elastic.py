@@ -11,12 +11,11 @@ that no longer divide fall back to replication, and the train step re-jits once.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, List, Tuple
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.distributed.sharding import RULE_SETS, logical_to_spec
 from repro.launch import specs as sp
-from repro.models import transformer as tf
 
 
 @dataclasses.dataclass

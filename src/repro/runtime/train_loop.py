@@ -17,7 +17,6 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional
 
-import jax
 import numpy as np
 
 from repro.checkpoint.ckpt import CheckpointManager

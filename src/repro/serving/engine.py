@@ -13,9 +13,8 @@ fast path is an optimization hook, not a correctness need).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -51,6 +50,7 @@ class ServingEngine:
         max_pages_per_seq: int = 16,
         policy: PromotionPolicy = Policy1(),
         opts: tf.ModelOptions = tf.ModelOptions(moe_impl="dense"),
+        host: int = 0,
     ):
         self.params, self.cfg, self.opts = params, cfg, opts
         self.page_size = page_size
@@ -58,7 +58,7 @@ class ServingEngine:
         self.max_pages = max_pages_per_seq
         self.pool = PagedKVPool(
             cfg.num_layers, num_slots, page_size, cfg.num_kv_heads,
-            cfg.resolved_head_dim, dtype=jnp.float32, policy=policy,
+            cfg.resolved_head_dim, dtype=jnp.float32, policy=policy, host=host,
         )
         self.requests: Dict[int, Request] = {}
         self._next_rid = 0
@@ -135,7 +135,6 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ decode
     def _decode_batch(self, batch: List[Request]) -> None:
-        B = len(batch)
         tables = np.stack(
             [self.pool.hot_table(r.rid, self.max_pages) for r in batch]
         )

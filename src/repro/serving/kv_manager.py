@@ -25,7 +25,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import emucxl as ecxl
-from repro.core.policy import AccessStats, PromotionPolicy, Policy1
+from repro.core.policy import (
+    AccessStats,
+    CongestionAwarePromotion,
+    Policy1,
+    PromotionPolicy,
+)
 from repro.core.pool import LRUTier
 from repro.core.slab import SlabAllocator, SlabPtr
 
@@ -57,6 +62,7 @@ class PagedKVPool:
         dtype=jnp.float32,
         lib: Optional[ecxl.EmuCXL] = None,
         policy: PromotionPolicy = Policy1(),
+        host: int = 0,
     ):
         self.L, self.page, self.K, self.hd = num_layers, page_size, kv_heads, head_dim
         self.num_slots = num_slots
@@ -67,8 +73,15 @@ class PagedKVPool:
         self.v_pool = jnp.zeros(shape, dtype)
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
         self.lib = lib if lib is not None else ecxl.default_instance()
+        # Multi-host pooling: this engine's cold pages live in the shared pool,
+        # charged to `host`'s quota, and their DMAs ride `host`'s fabric uplink.
+        self.host = host
         self.slab = SlabAllocator(self.lib, min_chunk=64,
-                                  max_chunk=self._page_bytes_pow2(), slab_pages=16)
+                                  max_chunk=self._page_bytes_pow2(), slab_pages=16,
+                                  host=host)
+        if (isinstance(policy, CongestionAwarePromotion)
+                and policy.fabric is None and self.lib.fabric is not None):
+            policy.bind(self.lib.fabric, self.lib.fabric.host_link(host))
         self.policy = policy
         self.stats = AccessStats()
         self.lru = LRUTier(float(num_slots), name="kv-hot")

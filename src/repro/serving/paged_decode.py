@@ -9,7 +9,7 @@ mlp/moe] -> unembed, all reading pages the engine has promoted to the hot tier.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,109 @@
+"""Deterministic fallback for `hypothesis` when it is not installed.
+
+The container that runs tier-1 may lack hypothesis; the property tests still add
+real value as seeded random-sampling tests, so instead of skipping whole modules
+this shim provides the small `given / settings / strategies` surface the suite
+uses, drawing examples from a fixed-seed PRNG. When the real hypothesis is
+importable, conftest.py never installs this module and nothing changes.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A strategy is just a sampler: rng -> value."""
+
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def none():
+    return _Strategy(lambda r: None)
+
+
+def binary(min_size=0, max_size=64):
+    return _Strategy(
+        lambda r: bytes(r.getrandbits(8) for _ in range(r.randint(min_size, max_size)))
+    )
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(
+        lambda r: [elements.sample(r) for _ in range(r.randint(min_size, max_size))]
+    )
+
+
+def tuples(*elements):
+    return _Strategy(lambda r: tuple(e.sample(r) for e in elements))
+
+
+def one_of(*strategies):
+    return _Strategy(lambda r: r.choice(strategies).sample(r))
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0xC0FFEE)
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for _ in range(n):
+                drawn_args = tuple(s.sample(rng) for s in arg_strategies)
+                drawn_kwargs = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn_args, **kwargs, **drawn_kwargs)
+
+        # @settings may sit above or below @given; carry an inner mark outward.
+        if hasattr(fn, "_stub_max_examples"):
+            wrapper._stub_max_examples = fn._stub_max_examples
+        # Hide the drawn parameters from pytest's fixture resolution: only params
+        # NOT supplied by the strategies remain visible (i.e. real fixtures).
+        params = list(inspect.signature(fn).parameters.values())
+        remaining = [
+            p for p in params[len(arg_strategies):] if p.name not in kw_strategies
+        ]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        return wrapper
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as `hypothesis` + `hypothesis.strategies`."""
+    hyp = types.ModuleType("hypothesis")
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "none", "binary", "lists",
+                 "tuples", "one_of"):
+        setattr(strategies, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strategies
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,6 +1,17 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see ONE device;
 multi-device tests spawn subprocesses that set the flag before importing jax."""
 
+import os
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()
+
 import jax
 import numpy as np
 import pytest

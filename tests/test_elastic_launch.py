@@ -7,7 +7,6 @@ import pytest
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.launch import specs as sp
 from repro.launch.mesh import make_mesh, single_device_mesh
-from repro.models import transformer as tf
 from repro.optim import adamw
 from repro.runtime.elastic import replan
 

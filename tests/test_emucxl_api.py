@@ -34,8 +34,12 @@ def test_alloc_tiers_and_memory_kind(lib):
     a = lib.alloc(128, ecxl.LOCAL_MEMORY)
     b = lib.alloc(128, ecxl.REMOTE_MEMORY)
     assert lib.get_numa_node(a) == 0 and lib.get_numa_node(b) == 1
-    assert lib.allocations()[a].data.sharding.memory_kind == "device"
-    assert lib.allocations()[b].data.sharding.memory_kind == "pinned_host"
+    # Tier -> memory-space mapping is resolved against the runtime: "device" /
+    # "pinned_host" where supported, the device default kind otherwise.
+    assert (lib.allocations()[a].data.sharding.memory_kind
+            == lib.memory_kind(ecxl.LOCAL_MEMORY))
+    assert (lib.allocations()[b].data.sharding.memory_kind
+            == lib.memory_kind(ecxl.REMOTE_MEMORY))
 
 
 def test_read_write_roundtrip(lib):

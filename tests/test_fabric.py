@@ -1,0 +1,331 @@
+"""Fabric contention model + multi-host pooled emucxl.
+
+Covers: link-bandwidth sharing math, per-host quota enforcement, cross-host
+migrate latency accounting, and congestion-aware vs static policy divergence
+under load.
+"""
+
+import pytest
+
+from repro.core import emucxl as ecxl
+from repro.core.emucxl import EmuCXL, QuotaExceeded, OutOfTierMemory
+from repro.core.fabric import Fabric, FabricError
+from repro.core.policy import (
+    CongestionAwarePlacement,
+    CongestionAwarePromotion,
+    Policy1,
+    StaticPlacement,
+    make_policy,
+)
+from repro.core.pool import PoolQuotaError, SharedPool
+from repro.serving.kv_manager import PagedKVPool
+
+
+def clean_fabric(**kw):
+    """Unit-math fabric: bandwidth 1000 B/s, zero latency unless overridden."""
+    args = dict(num_hosts=2, pool_ports=2, host_bandwidth=1000.0,
+                pool_port_bandwidth=1000.0, link_latency=0.0, switch_latency=0.0)
+    args.update(kw)
+    return Fabric(**args)
+
+
+# ------------------------------------------------------------------ sharing math
+def test_uncontended_transfer_is_latency_plus_bytes_over_bandwidth():
+    f = clean_fabric(link_latency=0.05, switch_latency=0.1)
+    elapsed = f.transfer(f.pool_path(0, 0), 1000)
+    # two links x 0.05 + switch 0.1 + 1000 B / 1000 B/s
+    assert elapsed == pytest.approx(0.2 + 1.0)
+
+
+def test_concurrent_transfers_share_link_bandwidth_equally():
+    f = clean_fabric()
+    path = f.pool_path(0, 0)
+    t1 = f.begin(path, 1000)
+    t2 = f.begin(path, 1000)
+    f.drain()
+    # each gets 500 B/s while both are in flight -> both finish at 2.0 s
+    assert t1.elapsed == pytest.approx(2.0)
+    assert t2.elapsed == pytest.approx(2.0)
+    assert f.idle()
+
+
+def test_sharing_only_on_shared_links():
+    f = clean_fabric()
+    # different hosts, different pool ports: fully disjoint paths, no contention
+    t1 = f.begin(f.pool_path(0, 0), 1000)
+    t2 = f.begin(f.pool_path(1, 1), 1000)
+    f.drain()
+    assert t1.elapsed == pytest.approx(1.0)
+    assert t2.elapsed == pytest.approx(1.0)
+
+
+def test_rate_is_min_share_across_path():
+    # two hosts converge on one pool port: each host uplink is idle, but the
+    # shared pool link halves both transfers' rates
+    f = clean_fabric()
+    t1 = f.begin(f.pool_path(0, 0), 1000)
+    t2 = f.begin(f.pool_path(1, 0), 1000)
+    f.drain()
+    assert t1.elapsed == pytest.approx(2.0)
+    assert t2.elapsed == pytest.approx(2.0)
+
+
+def test_synchronous_transfer_contends_with_in_flight():
+    f = clean_fabric()
+    path = f.pool_path(0, 0)
+    f.begin(path, 1000)
+    elapsed = f.transfer(path, 1000)  # shares the link with the in-flight one
+    assert elapsed == pytest.approx(2.0)
+    assert f.idle()  # equal sizes, equal start -> both completed together
+
+
+def test_unequal_sizes_release_bandwidth_on_completion():
+    f = clean_fabric()
+    path = f.pool_path(0, 0)
+    t_small = f.begin(path, 500)
+    t_big = f.begin(path, 1500)
+    f.drain()
+    # shared until small finishes at 1.0s (500 B at 500 B/s); big then has
+    # 1000 B left at full rate -> 2.0 s total
+    assert t_small.elapsed == pytest.approx(1.0)
+    assert t_big.elapsed == pytest.approx(2.0)
+
+
+def test_link_occupancy_and_stats():
+    f = clean_fabric()
+    path = f.pool_path(0, 0)
+    t = f.begin(path, 1000)
+    assert f.link_occupancy("host0") == 1
+    assert f.link_occupancy("pool0") == 1
+    assert f.link_occupancy("pool1") == 0
+    f.drain(t)
+    s = f.stats()
+    assert s["pool0"]["bytes_carried"] == 1000
+    assert s["pool0"]["busy_time"] == pytest.approx(1.0)
+    assert s["pool0"]["utilization"] == pytest.approx(1.0)
+    assert s["pool0"]["occupancy"] == 0
+    assert s["pool1"]["transfers"] == 0
+
+
+def test_invalid_topology_rejected():
+    f = clean_fabric()
+    with pytest.raises(FabricError):
+        f.pool_path(5, 0)
+    with pytest.raises(FabricError):
+        f.pool_path(0, 9)
+    with pytest.raises(FabricError):
+        f.begin(("nope",), 10)
+    with pytest.raises(FabricError):
+        f.begin(f.pool_path(0, 0), 0)
+
+
+# ------------------------------------------------------------------ quotas
+def test_shared_pool_quota_partitioning():
+    pool = SharedPool(capacity=1000, num_hosts=2, host_quota=700)
+    pool.charge(0, 700)
+    with pytest.raises(PoolQuotaError):
+        pool.charge(0, 1)
+    # over-subscription: host1's quota exceeds what's left of the pool
+    assert pool.host_free(1) == 300
+    pool.release(0, 500)
+    pool.charge(1, 500)
+    assert pool.used == 700
+
+
+def test_per_host_quota_enforced_through_emucxl():
+    lib = EmuCXL()
+    lib.init(local_capacity=1 << 16, remote_capacity=1 << 20,
+             num_hosts=2, host_quota=1 << 16)
+    a = lib.alloc(1 << 16, ecxl.REMOTE_MEMORY, host=0)  # fills host0's quota
+    with pytest.raises(QuotaExceeded):
+        lib.alloc(1, ecxl.REMOTE_MEMORY, host=0)  # pool has space, quota doesn't
+    b = lib.alloc(1 << 16, ecxl.REMOTE_MEMORY, host=1)  # host1 unaffected
+    assert lib.stats(ecxl.REMOTE_MEMORY, host=0) == 1 << 16
+    assert lib.stats(ecxl.REMOTE_MEMORY, host=1) == 1 << 16
+    assert lib.stats(ecxl.REMOTE_MEMORY) == 1 << 17
+    lib.free(a)
+    lib.free(b)
+    assert lib.pool_stats()["used"] == 0
+    lib.exit()
+
+
+def test_pool_capacity_still_raises_out_of_tier():
+    lib = EmuCXL()
+    lib.init(local_capacity=1 << 16, remote_capacity=1 << 10, num_hosts=2)
+    with pytest.raises(OutOfTierMemory) as ei:
+        lib.alloc((1 << 10) + 1, ecxl.REMOTE_MEMORY, host=1)
+    assert ei.value.node == ecxl.REMOTE_MEMORY
+    lib.exit()
+
+
+def test_local_tier_is_per_host():
+    lib = EmuCXL()
+    lib.init(local_capacity=1 << 10, remote_capacity=1 << 20, num_hosts=2)
+    lib.alloc(1 << 10, ecxl.LOCAL_MEMORY, host=0)
+    with pytest.raises(OutOfTierMemory):
+        lib.alloc(1, ecxl.LOCAL_MEMORY, host=0)
+    lib.alloc(1 << 10, ecxl.LOCAL_MEMORY, host=1)  # host1 has its own HBM
+    assert lib.stats(ecxl.LOCAL_MEMORY) == 1 << 11
+    lib.exit()
+
+
+# ------------------------------------------------------------------ migration accounting
+def test_cross_tier_migrate_routes_through_fabric():
+    f = clean_fabric(link_latency=0.05, switch_latency=0.1)
+    lib = EmuCXL()
+    lib.init(local_capacity=1 << 16, remote_capacity=1 << 20,
+             num_hosts=2, fabric=f)
+    a = lib.alloc(1000, ecxl.LOCAL_MEMORY, host=0)
+    before = lib.modeled_time[ecxl.REMOTE_MEMORY]
+    b = lib.migrate(a, ecxl.REMOTE_MEMORY)
+    # demotion cost = alloc latency floor + contended fabric transfer (idle here)
+    fabric_part = 0.2 + 1000 / 1000.0
+    expected = lib.hw.tier_latency(ecxl.REMOTE_MEMORY) + fabric_part
+    assert lib.modeled_time[ecxl.REMOTE_MEMORY] - before == pytest.approx(expected)
+    assert lib.fabric_stats()["host0"]["bytes_carried"] == 1000
+    assert lib.fabric_stats()["pool0"]["bytes_carried"] == 1000
+    # promotion to the *other* host rides host1's uplink from the backing port
+    lib.migrate(b, ecxl.LOCAL_MEMORY, host=1)
+    assert lib.fabric_stats()["host1"]["bytes_carried"] == 1000
+    assert lib.fabric_stats()["pool0"]["bytes_carried"] == 2000
+    lib.exit()
+
+
+def test_host_to_host_migrate_uses_both_uplinks():
+    f = clean_fabric()
+    lib = EmuCXL()
+    lib.init(local_capacity=1 << 16, remote_capacity=1 << 20,
+             num_hosts=2, fabric=f)
+    a = lib.alloc(500, ecxl.LOCAL_MEMORY, host=0)
+    b = lib.migrate(a, ecxl.LOCAL_MEMORY, host=1)
+    assert lib.get_host(b) == 1
+    assert lib.stats(ecxl.LOCAL_MEMORY, host=0) == 0
+    assert lib.stats(ecxl.LOCAL_MEMORY, host=1) == 500
+    stats = lib.fabric_stats()
+    assert stats["host0"]["bytes_carried"] == 500
+    assert stats["host1"]["bytes_carried"] == 500
+    lib.exit()
+
+
+def test_migrate_batch_models_concurrency():
+    # two hosts demoting together through separate ports: makespan equals one
+    # uncontended transfer, not the serial sum
+    f = clean_fabric()
+    lib = EmuCXL()
+    lib.init(local_capacity=1 << 16, remote_capacity=1 << 20, num_hosts=2,
+             fabric=f, placement=CongestionAwarePlacement())
+    a = lib.alloc(1000, ecxl.LOCAL_MEMORY, host=0)
+    b = lib.alloc(1000, ecxl.LOCAL_MEMORY, host=1)
+    addr_map, makespan = lib.migrate_batch([
+        (a, ecxl.REMOTE_MEMORY), (b, ecxl.REMOTE_MEMORY),
+    ])
+    assert makespan == pytest.approx(1.0)
+    assert lib.get_numa_node(addr_map[a]) == ecxl.REMOTE_MEMORY
+    assert lib.get_numa_node(addr_map[b]) == ecxl.REMOTE_MEMORY
+    ports = {lib.allocations()[addr_map[x]].port for x in (a, b)}
+    assert ports == {0, 1}  # congestion-aware placement spread across ports
+    lib.exit()
+
+
+# ------------------------------------------------------------------ policy divergence
+def test_placement_policies_agree_when_idle_diverge_under_load():
+    f = clean_fabric()
+    static, aware = StaticPlacement(), CongestionAwarePlacement()
+    assert static.select_port(f) == aware.select_port(f) == 0  # idle fallback
+    f.begin(f.pool_path(0, 0), 1000)  # load pool0
+    assert static.select_port(f) == 0
+    assert aware.select_port(f) == 1
+    f.drain()
+    assert aware.select_port(f) == 0  # back to static behavior once idle
+
+
+def test_congestion_aware_promotion_gates_on_watch_link():
+    f = clean_fabric()
+    policy = CongestionAwarePromotion(base=Policy1()).bind(f, f.host_link(0))
+    assert policy.promote_on_hit("k") is True  # idle -> Policy1
+    f.begin(f.pool_path(0, 0), 1000)  # host0 uplink busy
+    assert policy.promote_on_hit("k") is False
+    other = CongestionAwarePromotion(base=Policy1()).bind(f, f.host_link(1))
+    assert other.promote_on_hit("k") is True  # host1 uplink idle
+    f.drain()
+    assert policy.promote_on_hit("k") is True
+
+
+def test_make_policy_congestion_aware():
+    p = make_policy("congestion-aware")
+    assert isinstance(p, CongestionAwarePromotion)
+    assert p.promote_on_hit("k") is True  # unbound == base Policy1
+
+
+def test_congestion_aware_placement_beats_naive_at_four_hosts():
+    """The benchmark's claim, asserted: >=2x modeled throughput at 4 hosts."""
+    makespans = {}
+    for name, placement in (("static", StaticPlacement()),
+                            ("aware", CongestionAwarePlacement())):
+        f = Fabric(num_hosts=4, pool_ports=4, host_bandwidth=1000.0,
+                   pool_port_bandwidth=1000.0, link_latency=0.0,
+                   switch_latency=0.0)
+        lib = EmuCXL()
+        lib.init(local_capacity=1 << 16, remote_capacity=1 << 20,
+                 num_hosts=4, fabric=f, placement=placement)
+        moves = [(lib.alloc(1000, ecxl.LOCAL_MEMORY, host=h), ecxl.REMOTE_MEMORY)
+                 for h in range(4) for _ in range(2)]
+        _, makespans[name] = lib.migrate_batch(moves)
+        lib.exit()
+    assert makespans["static"] / makespans["aware"] >= 2.0
+
+
+def test_migrate_batch_mid_failure_rolls_back():
+    f = clean_fabric()
+    lib = EmuCXL()
+    lib.init(local_capacity=1 << 16, remote_capacity=1 << 20, num_hosts=2,
+             fabric=f, host_quota=1500)
+    a = lib.alloc(1000, ecxl.LOCAL_MEMORY, host=0)
+    b = lib.alloc(1000, ecxl.LOCAL_MEMORY, host=0)  # second demote busts quota
+    before_remote = lib.stats(ecxl.REMOTE_MEMORY)
+    with pytest.raises(QuotaExceeded):
+        lib.migrate_batch([(a, ecxl.REMOTE_MEMORY), (b, ecxl.REMOTE_MEMORY)])
+    # nothing staged survives: sources intact, pool uncharged, fabric idle
+    assert lib.get_numa_node(a) == ecxl.LOCAL_MEMORY
+    assert lib.get_numa_node(b) == ecxl.LOCAL_MEMORY
+    assert lib.stats(ecxl.REMOTE_MEMORY) == before_remote
+    assert f.idle()
+    assert f.stats()["pool0"]["bytes_carried"] == 0
+    # and the fabric still works afterwards
+    _, makespan = lib.migrate_batch([(a, ecxl.REMOTE_MEMORY)])
+    assert makespan == pytest.approx(1.0)
+    lib.exit()
+
+
+def test_host_to_host_migrate_charges_time_without_fabric():
+    lib = EmuCXL()
+    lib.init(local_capacity=1 << 16, remote_capacity=1 << 20, num_hosts=2)
+    a = lib.alloc(1000, ecxl.LOCAL_MEMORY, host=0)
+    before = lib.modeled_time[ecxl.REMOTE_MEMORY]
+    lib.migrate(a, ecxl.LOCAL_MEMORY, host=1)
+    delta = lib.modeled_time[ecxl.REMOTE_MEMORY] - before
+    assert delta >= lib.hw.migrate_time(1000)
+    lib.exit()
+
+
+# ------------------------------------------------------------------ serving wiring
+def test_kv_demotion_charged_to_owner_host_link():
+    f = clean_fabric(host_bandwidth=1e9, pool_port_bandwidth=1e9)
+    lib = EmuCXL()
+    lib.init(local_capacity=1 << 20, remote_capacity=1 << 22,
+             num_hosts=2, fabric=f)
+    policy = CongestionAwarePromotion(base=Policy1())
+    pool = PagedKVPool(num_layers=2, num_slots=4, page_size=4, kv_heads=2,
+                       head_dim=4, lib=lib, policy=policy, host=1)
+    # construction bound the promotion policy to host1's uplink
+    assert policy.fabric is f and policy.watch_link == "host1"
+    pool.alloc_page(seq_id=0, page_idx=0)
+    pool.demote(0, 0)
+    page_bytes = pool._page_bytes()
+    stats = lib.fabric_stats()
+    assert stats["host1"]["bytes_carried"] >= page_bytes  # cold DMA on owner's link
+    assert stats["host0"]["bytes_carried"] == 0
+    assert lib.stats(ecxl.REMOTE_MEMORY, host=1) > 0  # charged to host1's quota
+    pool.promote(0, 0)
+    assert lib.fabric_stats()["host1"]["bytes_carried"] >= 2 * page_bytes
+    lib.exit()

@@ -1,6 +1,5 @@
 """Unit tests for the roofline harness math (pure numpy — no compiles)."""
 
-import numpy as np
 import pytest
 
 from benchmarks.roofline import analysis_points, cost_degree, fit_and_eval

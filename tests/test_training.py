@@ -4,7 +4,6 @@ optimizer correctness, gradient compression."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs import get_config
