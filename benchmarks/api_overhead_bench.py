@@ -1,0 +1,163 @@
+"""v2 API overhead + overlap benchmark.
+
+Two questions about the session API (core/api.py):
+
+1. **Dispatch overhead** — what does the handle table + session indirection cost
+   per call, measured (wall clock) against the v1 ``EmuCXL`` methods it wraps,
+   and what does async ``submit``+``flush`` cost per op on top of that?
+
+2. **Overlap** (the reason v2 exists) — a batch of N >= 8 concurrent cross-host
+   migrates submitted through the async queue must complete in modeled time
+   *strictly less* than the sum of N serial v1 migrates on an identical
+   topology, because the batch's transfers share the fabric concurrently
+   instead of draining one at a time. This file asserts that property (CI runs
+   it with --smoke), not just prints it.
+
+CSV columns: name,us_per_call,derived — consistent with benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.api import CXLSession
+from repro.core.emucxl import EmuCXL, LOCAL_MEMORY, REMOTE_MEMORY
+from repro.core.fabric import Fabric
+from repro.core.queue import MigrateOp, ReadOp, WriteOp
+
+
+# --------------------------------------------------------------------- dispatch
+def bench_dispatch(n_cycles: int = 300, buf_bytes: int = 4096) -> List[str]:
+    """Wall-clock us per alloc/write/read/free cycle: v1 direct vs v2 handles vs
+    v2 async (submitted in batches of 16)."""
+    payload = np.arange(buf_bytes, dtype=np.uint8)
+    rows = []
+
+    lib = EmuCXL()
+    lib.init(local_capacity=1 << 26, remote_capacity=1 << 26)
+    for _ in range(3):  # warm jit caches off the clock
+        addr = lib.alloc(buf_bytes, LOCAL_MEMORY)
+        lib.write(payload, 0, addr)
+        lib.read(addr, 0, buf_bytes)
+        lib.free(addr)
+    t0 = time.perf_counter()
+    for _ in range(n_cycles):
+        addr = lib.alloc(buf_bytes, LOCAL_MEMORY)
+        lib.write(payload, 0, addr)
+        lib.read(addr, 0, buf_bytes)
+        lib.free(addr)
+    v1_us = 1e6 * (time.perf_counter() - t0) / n_cycles
+    lib.exit()
+    rows.append(f"api_dispatch_v1,{v1_us:.2f},ops=alloc+write+read+free")
+
+    with CXLSession(1 << 26, 1 << 26) as sess:
+        for _ in range(3):
+            buf = sess.alloc(buf_bytes, LOCAL_MEMORY)
+            buf.write(payload)
+            buf.read(0, buf_bytes)
+            buf.free()
+        t0 = time.perf_counter()
+        for _ in range(n_cycles):
+            buf = sess.alloc(buf_bytes, LOCAL_MEMORY)
+            buf.write(payload)
+            buf.read(0, buf_bytes)
+            buf.free()
+        v2_us = 1e6 * (time.perf_counter() - t0) / n_cycles
+        rows.append(
+            f"api_dispatch_v2,{v2_us:.2f},"
+            f"ops=alloc+write+read+free,overhead_vs_v1={v2_us / v1_us:.2f}x"
+        )
+
+        batch = 16
+        bufs = [sess.alloc(buf_bytes, LOCAL_MEMORY) for _ in range(batch)]
+        t0 = time.perf_counter()
+        for _ in range(max(n_cycles // batch, 1)):
+            tickets = [sess.submit(WriteOp(b, payload)) for b in bufs]
+            tickets += [sess.submit(ReadOp(b, 0, buf_bytes)) for b in bufs]
+            sess.flush()
+            assert all(t.done() for t in tickets)
+        async_us = (1e6 * (time.perf_counter() - t0)
+                    / (max(n_cycles // batch, 1) * 2 * batch))
+        rows.append(
+            f"api_submit_v2_async,{async_us:.2f},"
+            f"ops=submit(write|read)+flush,batch={batch}"
+        )
+    return rows
+
+
+# --------------------------------------------------------------------- overlap
+def _ring_topology(num_hosts: int):
+    return Fabric(num_hosts=num_hosts, pool_ports=1)
+
+
+def bench_overlap(num_hosts: int = 8, page_bytes: int = 1 << 20) -> List[str]:
+    """N concurrent cross-host migrates, async v2 batch vs serial v1 loop.
+
+    Every host moves one local page to its ring neighbour — N transfers whose
+    (src uplink, dst uplink) paths overlap pairwise. Serial v1 drains each before
+    starting the next (sum of uncontended times); the v2 batch keeps all N in
+    flight, so each link carries two concurrent transfers and the makespan lands
+    near serial/(N/2). The assert is the PR's acceptance criterion.
+    """
+    # serial v1: one blocking migrate at a time on an identical fabric
+    lib = EmuCXL()
+    lib.init(local_capacity=4 * page_bytes, remote_capacity=1 << 24,
+             num_hosts=num_hosts, fabric=_ring_topology(num_hosts))
+    addrs = [lib.alloc(page_bytes, LOCAL_MEMORY, host=h) for h in range(num_hosts)]
+    serial = 0.0
+    for h, addr in enumerate(addrs):
+        before = lib.modeled_time[REMOTE_MEMORY]
+        lib.migrate(addr, LOCAL_MEMORY, (h + 1) % num_hosts)
+        serial += lib.modeled_time[REMOTE_MEMORY] - before
+    lib.exit()
+
+    # async v2: the same N moves as ONE overlapped batch
+    with CXLSession(4 * page_bytes, 1 << 24, num_hosts=num_hosts,
+                    fabric=_ring_topology(num_hosts)) as sess:
+        bufs = [sess.alloc(page_bytes, LOCAL_MEMORY, host=h)
+                for h in range(num_hosts)]
+        tickets = [sess.submit(MigrateOp(b, LOCAL_MEMORY, (h + 1) % num_hosts))
+                   for h, b in enumerate(bufs)]
+        makespan = sess.flush()
+        assert all(t.result().host == (h + 1) % num_hosts
+                   for h, t in enumerate(tickets))
+
+    assert makespan < serial, (
+        f"async batch of {num_hosts} migrates must beat the serial v1 sum "
+        f"({makespan:.6f}s vs {serial:.6f}s)"
+    )
+    return [
+        f"api_overlap_migrates_h{num_hosts},0,"
+        f"serial_v1_us={1e6 * serial:.1f},async_v2_us={1e6 * makespan:.1f},"
+        f"speedup={serial / makespan:.2f}x,strictly_less={makespan < serial}"
+    ]
+
+
+# One source of truth for the CI smoke configuration — used by both this file's
+# --smoke flag and benchmarks/run.py's smoke dispatch. N stays at 8 so smoke
+# still gates the acceptance property.
+SMOKE = dict(n_cycles=50, num_hosts=8, page_bytes=256 * 1024)
+
+
+def bench(n_cycles: int = 300, num_hosts: int = 8,
+          page_bytes: int = 1 << 20) -> List[str]:
+    return (bench_dispatch(n_cycles)
+            + bench_overlap(num_hosts, page_bytes)
+            + bench_overlap(max(num_hosts * 2, 16), page_bytes))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast configuration for CI (keeps N=8 overlap)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    print("\n".join(bench(**SMOKE) if args.smoke else bench()))
+
+
+if __name__ == "__main__":
+    main()

@@ -22,9 +22,11 @@ from __future__ import annotations
 import argparse
 from typing import Dict, List
 
-from repro.core.emucxl import EmuCXL, LOCAL_MEMORY, REMOTE_MEMORY
+from repro.core.api import CXLSession
+from repro.core.emucxl import LOCAL_MEMORY, REMOTE_MEMORY
 from repro.core.fabric import Fabric
 from repro.core.policy import CongestionAwarePlacement, StaticPlacement
+from repro.core.queue import MigrateOp
 
 POOL_PORTS = 4
 
@@ -40,38 +42,37 @@ def run_pooling_experiment(
     placement = (CongestionAwarePlacement() if placement_name == "congestion-aware"
                  else StaticPlacement())
     fabric = Fabric(num_hosts=num_hosts, pool_ports=pool_ports)
-    lib = EmuCXL()
-    lib.init(
+    # v2: the placement policy is injected at session construction, and the
+    # concurrent burst is one async batch — submit every demote, flush once.
+    with CXLSession(
         local_capacity=2 * pages_per_host * page_bytes,
         remote_capacity=2 * num_hosts * pages_per_host * page_bytes,
         num_hosts=num_hosts,
         fabric=fabric,
         placement=placement,
-    )
-    # Each host fills local pages, then every host demotes its pages at once:
-    # one migrate_batch == one concurrent burst across the fabric.
-    moves = []
-    for host in range(num_hosts):
-        for _ in range(pages_per_host):
-            addr = lib.alloc(page_bytes, LOCAL_MEMORY, host)
-            moves.append((addr, REMOTE_MEMORY, host))
-    _, makespan = lib.migrate_batch(moves)
-    total_bytes = num_hosts * pages_per_host * page_bytes
-    link_stats = lib.fabric_stats()
-    result = {
-        "num_hosts": num_hosts,
-        "placement": placement.name,
-        "total_bytes": total_bytes,
-        "makespan_s": makespan,
-        "throughput_gbps": total_bytes / makespan / 1e9,
-        "links": link_stats,
-        "ports_used": sum(
-            1 for name, s in link_stats.items()
-            if name.startswith("pool") and s["transfers"] > 0
-        ),
-    }
-    lib.exit()
-    return result
+    ) as sess:
+        tickets = [
+            sess.submit(MigrateOp(sess.alloc(page_bytes, LOCAL_MEMORY, host),
+                                  REMOTE_MEMORY))
+            for host in range(num_hosts)
+            for _ in range(pages_per_host)
+        ]
+        makespan = sess.flush()
+        assert all(not t.result().is_local for t in tickets)
+        total_bytes = num_hosts * pages_per_host * page_bytes
+        link_stats = sess.fabric_stats()
+        return {
+            "num_hosts": num_hosts,
+            "placement": placement.name,
+            "total_bytes": total_bytes,
+            "makespan_s": makespan,
+            "throughput_gbps": total_bytes / makespan / 1e9,
+            "links": link_stats,
+            "ports_used": sum(
+                1 for name, s in link_stats.items()
+                if name.startswith("pool") and s["transfers"] > 0
+            ),
+        }
 
 
 def bench(hosts: List[int] = (1, 2, 4, 8), pages_per_host: int = 16,

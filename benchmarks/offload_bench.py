@@ -1,9 +1,11 @@
 """Optimizer-offload ledger: per-arch host-DMA budget for the paper's technique.
 
 For every arch whose optimizer state is offloaded to the emulated-CXL tier, report
-the per-step DMA bytes/chip, the modeled transfer time at the host-link bandwidth,
-and the compute time it must overlap with (the roofline compute term) — i.e.
-whether the offload is FREE (hidden behind compute) or becomes the bottleneck.
+the per-step DMA bytes/chip, the modeled transfer time over the fabric path the
+bytes actually cross (host uplink + pool port, with link/switch latencies — the
+same model v2 sessions charge), and the compute time it must overlap with (the
+roofline compute term) — i.e. whether the offload is FREE (hidden behind compute)
+or becomes the bottleneck.
 """
 
 from __future__ import annotations
@@ -13,7 +15,7 @@ import pathlib
 from typing import List
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core.hw import V5E
+from repro.core.fabric import Fabric
 
 ROOF_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "roofline"
 
@@ -23,6 +25,9 @@ def bench() -> List[str]:
     from repro.launch.specs import offload_manifest
 
     out = []
+    # One chip's step traffic priced as a fabric transfer (uncontended here; a
+    # v2 session sharing the fabric would see it contend with its neighbours).
+    fabric = Fabric(num_hosts=1, pool_ports=1)
     for arch in ARCH_IDS:
         cfg = get_config(arch)
         hp = default_hp(cfg)
@@ -31,7 +36,7 @@ def bench() -> List[str]:
             out.append(f"offload_{arch},0,offloaded=no")
             continue
         per_chip = man.dma_bytes_per_step() / 256
-        t_dma = per_chip / V5E.host_link_bandwidth
+        t_dma = fabric.transfer(fabric.pool_path(0, 0), int(per_chip))
         t_comp = ""
         roof = ROOF_DIR / f"{arch}__train_4k__baseline.json"
         if roof.exists():

@@ -19,13 +19,13 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fast CI configuration (seconds, CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: queue,policy,fabric,kernels,"
-                         "offload,serving")
+                    help="comma-separated subset: queue,policy,fabric,api,"
+                         "kernels,offload,serving")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
     selected = set(args.only.split(",")) if args.only else None
-    smoke_capable = {"queue", "policy", "fabric"}
+    smoke_capable = {"queue", "policy", "fabric", "api"}
     if args.smoke:
         if selected is None:
             # Smoke gates the pure-model benches; kernel/serving compile paths
@@ -49,6 +49,13 @@ def main() -> None:
                                        page_bytes=256 * 1024)
         else:
             rows += fabric_bench.bench()
+
+    if want("api"):
+        from benchmarks import api_overhead_bench
+        if args.smoke:
+            rows += api_overhead_bench.bench(**api_overhead_bench.SMOKE)
+        else:
+            rows += api_overhead_bench.bench()
 
     if want("queue"):
         from benchmarks import queue_latency

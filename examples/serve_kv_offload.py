@@ -9,26 +9,25 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import emucxl as ecxl
+from repro.core.api import CXLSession
 from repro.core.policy import Policy1, Policy2
 from repro.models import transformer as tf
 from repro.serving.engine import ServingEngine
 
 
 def run_with(policy, params, cfg):
-    lib = ecxl.EmuCXL()
-    lib.init(local_capacity=1 << 26, remote_capacity=1 << 28)
-    # deliberately tight hot pool: 4 slots for 3 requests x 2 pages => preemption
-    eng = ServingEngine(params, cfg, num_slots=4, page_size=8, max_batch=2,
-                        max_pages_per_seq=2, policy=policy)
-    eng.pool.lib = lib
-    eng.pool.slab.lib = lib
-    rng = np.random.default_rng(7)
-    for _ in range(3):
-        eng.submit(list(rng.integers(0, cfg.vocab_size, 6)), max_new_tokens=8)
-    results = eng.run(max_steps=400)
-    stats = eng.tier_stats()
-    lib.exit()
+    # v2: the engine's cold tier and promotion policy are injected as a session —
+    # no process-global library, no post-construction lib patching.
+    with CXLSession(local_capacity=1 << 26, remote_capacity=1 << 28,
+                    promotion=policy) as sess:
+        # deliberately tight hot pool: 4 slots for 3 requests x 2 pages => preemption
+        eng = ServingEngine(params, cfg, num_slots=4, page_size=8, max_batch=2,
+                            max_pages_per_seq=2, session=sess)
+        rng = np.random.default_rng(7)
+        for _ in range(3):
+            eng.submit(list(rng.integers(0, cfg.vocab_size, 6)), max_new_tokens=8)
+        results = eng.run(max_steps=400)
+        stats = eng.tier_stats()
     return results, stats
 
 

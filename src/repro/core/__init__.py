@@ -1,10 +1,18 @@
 """repro.core — the paper's contribution: emucxl-style two-tier disaggregated memory.
 
-Public surface mirrors paper Table II (``emucxl_*``) plus the middleware the paper
-demonstrates (KV store, slab allocator, direct-access queue) and the training/serving
-integration helpers (offload).
+Two API generations share one modeled backend:
+  * **v2 (preferred)**: ``CXLSession`` + generation-counted ``Buffer`` handles +
+    the async op queue (``submit``/``flush`` with Read/Write/Migrate/Memcpy/Memset
+    ops) and constructor-injected policies — see ``core/api.py``.
+  * **v1 (paper fidelity)**: the Table II ``emucxl_*`` free functions, now a thin
+    shim over a default session (raw ints remain the currency, but stale
+    addresses raise instead of aliasing).
+
+Plus the middleware the paper demonstrates (KV store, slab allocator,
+direct-access queue) and the training/serving integration helpers (offload).
 """
 
+from repro.core.api import CXLSession, as_session
 from repro.core.emucxl import (
     LOCAL_MEMORY,
     REMOTE_MEMORY,
@@ -14,6 +22,7 @@ from repro.core.emucxl import (
     OutOfTierMemory,
     QuotaExceeded,
     default_instance,
+    default_session,
     emucxl_alloc,
     emucxl_exit,
     emucxl_fabric_stats,
@@ -35,6 +44,7 @@ from repro.core.emucxl import (
     emucxl_write,
 )
 from repro.core.fabric import Fabric, FabricError, Link, Transfer
+from repro.core.handle import Buffer, HandleTable, StaleHandleError
 from repro.core.hw import V5E, HardwareModel
 from repro.core.kvstore import KVStore
 from repro.core.policy import (
@@ -48,12 +58,22 @@ from repro.core.policy import (
     make_policy,
 )
 from repro.core.pool import LRUTier, SharedPool
-from repro.core.queue import EmuQueue
+from repro.core.queue import (
+    EmuQueue,
+    MemcpyOp,
+    MemsetOp,
+    MigrateOp,
+    OpQueue,
+    ReadOp,
+    Ticket,
+    WriteOp,
+)
 from repro.core.slab import SlabAllocator, SlabPtr
 
 __all__ = [
     "LOCAL_MEMORY", "REMOTE_MEMORY", "Allocation", "EmuCXL", "EmuCXLError",
-    "OutOfTierMemory", "QuotaExceeded", "default_instance", "emucxl_alloc",
+    "OutOfTierMemory", "QuotaExceeded", "default_instance", "default_session",
+    "emucxl_alloc",
     "emucxl_exit", "emucxl_fabric_stats", "emucxl_free", "emucxl_get_host",
     "emucxl_get_numa_node", "emucxl_get_size", "emucxl_init", "emucxl_is_local",
     "emucxl_memcpy", "emucxl_memmove", "emucxl_memset", "emucxl_migrate",
@@ -62,4 +82,7 @@ __all__ = [
     "V5E", "HardwareModel", "KVStore", "AccessStats", "CongestionAwarePlacement",
     "CongestionAwarePromotion", "Policy1", "Policy2", "StaticPlacement", "Tier",
     "make_policy", "LRUTier", "SharedPool", "EmuQueue", "SlabAllocator", "SlabPtr",
+    # v2 session API
+    "CXLSession", "as_session", "Buffer", "HandleTable", "StaleHandleError",
+    "OpQueue", "Ticket", "ReadOp", "WriteOp", "MigrateOp", "MemcpyOp", "MemsetOp",
 ]

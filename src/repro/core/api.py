@@ -1,0 +1,303 @@
+"""emucxl v2: the handle-based session API over the paper's disaggregated-memory model.
+
+The paper's contribution is a *standardized user-space API*; v1 reproduces it
+literally — ~20 C-style ``emucxl_*`` free functions over one process-global
+instance, trafficking in raw ``int`` addresses. v2 keeps the same modeled
+machinery (``EmuCXL``, ``Fabric``, ``SharedPool``, the policies) but fixes the
+three things the C surface cannot express:
+
+  1. **No global state.** A ``CXLSession`` is a context manager owning one fabric
+     domain; any number of independent sessions coexist in one process.
+  2. **Typed, generation-counted handles.** ``alloc`` returns a ``Buffer``
+     (core/handle.py), not an address. Use-after-free, double free, and
+     stale-handle-after-resize raise ``StaleHandleError`` at the API boundary;
+     ``migrate`` keeps the handle valid across moves.
+  3. **An async operation queue.** ``session.submit(ReadOp/WriteOp/MigrateOp/
+     MemcpyOp/MemsetOp) -> Ticket`` batches ops through ``core/queue.py``; one
+     ``flush()`` drains them *concurrently* through the fabric, so N hosts' ops
+     contend for links and the makespan reflects overlap — the CXL 3.0 queued-
+     transaction picture a one-blocking-call-at-a-time API cannot model.
+
+Policies are injected at construction (``placement`` picks pool ports,
+``promotion`` is the session-default Policy1/Policy2 handed to middleware)
+instead of being hard-coded defaults scattered across consumers.
+
+The v1 ``emucxl_*`` facade (core/emucxl.py) is now a thin compatibility shim over
+a default session, so paper-fidelity code keeps working unchanged — and gains the
+handle table's use-after-free/double-free detection for free.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core.emucxl import (
+    REMOTE_MEMORY,
+    EmuCXL,
+    EmuCXLError,
+)
+from repro.core.handle import Buffer, HandleTable, StaleHandleError
+from repro.core.hw import V5E, HardwareModel
+from repro.core.policy import Policy1, PromotionPolicy
+from repro.core.queue import (
+    MemcpyOp,
+    MemsetOp,
+    MigrateOp,
+    OpQueue,
+    ReadOp,
+    Ticket,
+    WriteOp,
+)
+
+__all__ = [
+    "CXLSession", "Buffer", "StaleHandleError", "as_session",
+    "ReadOp", "WriteOp", "MigrateOp", "MemcpyOp", "MemsetOp", "Ticket", "OpQueue",
+]
+
+
+class CXLSession:
+    """One emulated CXL fabric domain: tiers, pool, policies, handles, op queue.
+
+    Construction opens the device (v1's ``emucxl_init``); ``close()`` — or leaving
+    the ``with`` block — frees everything (v1's ``emucxl_exit``). Sessions are
+    fully independent: separate allocation registries, handle tables, modeled
+    clocks, and (unless explicitly shared) fabrics.
+
+    ``placement`` and ``promotion`` make the policy layer (core/policy.py) a
+    constructor-injected dependency: ``placement`` routes every pooled allocation
+    (it is handed to the underlying ``EmuCXL``), while ``promotion`` is the
+    session-wide default the middleware (KV store, paged KV pool) picks up when
+    not given an explicit policy.
+    """
+
+    def __init__(
+        self,
+        local_capacity: Optional[int] = None,
+        remote_capacity: Optional[int] = None,
+        *,
+        device=None,
+        num_hosts: int = 1,
+        fabric=None,
+        host_quota=None,
+        placement=None,
+        promotion: Optional[PromotionPolicy] = None,
+        hw: HardwareModel = V5E,
+        lib: Optional[EmuCXL] = None,
+        _initialize: bool = True,
+    ):
+        self._lib = lib if lib is not None else EmuCXL(hw)
+        self._owns_lib = _initialize
+        self._table = HandleTable()
+        self.promotion: PromotionPolicy = (
+            promotion if promotion is not None else Policy1()
+        )
+        self.queue = OpQueue(self)
+        self._closed = False
+        if _initialize:
+            self._lib.init(
+                local_capacity, remote_capacity, device, num_hosts, fabric,
+                host_quota, placement,
+            )
+
+    @classmethod
+    def wrap(cls, lib: EmuCXL) -> "CXLSession":
+        """Adopt an existing (possibly already-initialized) ``EmuCXL`` without
+        owning its lifecycle — the v1-interop constructor."""
+        return cls(lib=lib, _initialize=False)
+
+    # ------------------------------------------------------------------ lifecycle
+    def __enter__(self) -> "CXLSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> None:
+        """Flush pending ops, free all allocations, close the emulated device.
+
+        A failing flush still closes the session and exits the library — the
+        flush error propagates, but no state is stranded half-open (the v1
+        facade in particular must be re-initializable afterwards)."""
+        if self._closed:
+            return
+        try:
+            if len(self.queue):
+                self.queue.flush()
+        finally:
+            self._closed = True
+            if self._owns_lib and self._lib._initialized:
+                self._lib.exit()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise EmuCXLError("session is closed")
+
+    # ------------------------------------------------------------------ plumbing
+    @property
+    def lib(self) -> EmuCXL:
+        """The underlying modeled library (v1 interop / introspection)."""
+        return self._lib
+
+    @property
+    def fabric(self):
+        return self._lib.fabric
+
+    @property
+    def placement(self):
+        return self._lib.placement
+
+    @property
+    def num_hosts(self) -> int:
+        return self._lib.num_hosts
+
+    @property
+    def modeled_time(self) -> Dict[int, float]:
+        return self._lib.modeled_time
+
+    # ------------------------------------------------------------------ allocation
+    # Handle-table mutations piggyback on the lib's RLock so the v2 surface (and
+    # the v1 facade over it) keeps v1's full-serialization guarantee — without
+    # it, two racing allocs/frees could interleave insert/retire on one slot and
+    # mint aliasing handles.
+    def _register(self, address: int) -> Buffer:
+        with self._lib._lock:
+            index, generation = self._table.insert(address)
+            return Buffer(self, index, generation)
+
+    def alloc(self, size: int, node: int = REMOTE_MEMORY, host: int = 0) -> Buffer:
+        """Allocate `size` bytes on tier `node` for `host`; returns a Buffer."""
+        with self._lib._lock:
+            self._check_open()
+            return self._register(self._lib.alloc(size, node, host))
+
+    def alloc_array(self, shape, dtype, node: int = REMOTE_MEMORY,
+                    host: int = 0) -> Buffer:
+        nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        return self.alloc(max(nbytes, 1), node, host)
+
+    def free(self, buf: Buffer, size: Optional[int] = None) -> None:
+        """Release a buffer. The handle becomes stale; a second free raises."""
+        with self._lib._lock:
+            self._check_open()
+            if size is not None and size != buf.size:
+                raise EmuCXLError(
+                    f"free size mismatch: allocation is {buf.size} bytes, caller "
+                    f"passed {size}"
+                )
+            index, generation = buf.handle
+            address = self._table.retire(index, generation, "freed")
+            self._lib.free(address)
+
+    def resize(self, buf: Buffer, size: int) -> Buffer:
+        """realloc: returns a NEW handle; `buf` is retired (stale hereafter)."""
+        with self._lib._lock:
+            self._check_open()
+            index, generation = buf.handle
+            old_address = self._table.resolve(index, generation)
+            new_address = self._lib.resize(old_address, size)
+            self._table.retire(index, generation, "resized")
+            return self._register(new_address)
+
+    # ------------------------------------------------------------------ sync ops
+    def memcpy(self, dst: Buffer, src: Buffer, size: int) -> Buffer:
+        self._check_open()
+        self._lib.memcpy(dst.address, src.address, size)
+        return dst
+
+    def memmove(self, dst: Buffer, src: Buffer, size: int) -> Buffer:
+        return self.memcpy(dst, src, size)
+
+    def memset(self, buf: Buffer, value: int, size: Optional[int] = None) -> Buffer:
+        self._check_open()
+        return buf.memset(value, size)
+
+    def migrate_batch(self, moves) -> float:
+        """Concurrent migrates of [(buf, node[, host]), ...]; returns the modeled
+        makespan. Sugar for submitting MigrateOps and flushing.
+
+        All-or-nothing staging: if any move fails validation, the moves already
+        enqueued are withdrawn — none of the batch leaks into a later flush."""
+        tickets = []
+        try:
+            for move in moves:
+                buf, node = move[0], move[1]
+                host = move[2] if len(move) > 2 else None
+                tickets.append(self.submit(MigrateOp(buf, node, host)))
+        except Exception:
+            for ticket in tickets:
+                self.queue.cancel(ticket)
+            raise
+        return self.flush()
+
+    # ------------------------------------------------------------------ async queue
+    def submit(self, *ops) -> Union[Ticket, List[Ticket]]:
+        """Enqueue operation(s); returns one Ticket per op (a list for several).
+
+        Nothing executes until ``flush()`` (or a ticket's ``result()``) — all ops
+        pending at that moment complete as ONE overlapped batch on the fabric.
+        """
+        self._check_open()
+        tickets = [self.queue.submit(op) for op in ops]
+        if not tickets:
+            raise EmuCXLError("submit() needs at least one operation")
+        return tickets[0] if len(tickets) == 1 else tickets
+
+    def flush(self) -> float:
+        """Complete every pending op; returns the batch's modeled makespan."""
+        self._check_open()
+        return self.queue.flush()
+
+    @property
+    def pending_ops(self) -> int:
+        return len(self.queue)
+
+    # ------------------------------------------------------------------ introspection
+    def stats(self, node: int, host: Optional[int] = None) -> int:
+        return self._lib.stats(node, host)
+
+    def capacity(self, node: int, host: Optional[int] = None) -> int:
+        return self._lib.capacity(node, host)
+
+    def pool_stats(self) -> Dict[str, object]:
+        return self._lib.pool_stats()
+
+    def fabric_stats(self) -> Dict[str, Dict[str, float]]:
+        return self._lib.fabric_stats()
+
+    def host_quota(self, host: int) -> Optional[int]:
+        return self._lib.host_quota(host)
+
+    def live_buffers(self) -> int:
+        """Number of live (non-stale) handles in this session."""
+        return len(self._table)
+
+    def __repr__(self) -> str:
+        state = "closed" if self._closed else "open"
+        return (f"CXLSession({state}, hosts={self.num_hosts}, "
+                f"buffers={len(self._table)}, pending_ops={len(self.queue)})")
+
+
+def as_session(obj) -> CXLSession:
+    """Coerce middleware constructor input to a session.
+
+    Accepts a ``CXLSession`` (returned as-is), an ``EmuCXL`` (wrapped, lifecycle
+    stays with the caller — the v1 interop path), or None (wraps the process
+    default instance, matching v1 middleware defaults).
+    """
+    if isinstance(obj, CXLSession):
+        return obj
+    if isinstance(obj, EmuCXL):
+        return CXLSession.wrap(obj)
+    if obj is None:
+        from repro.core.emucxl import default_instance
+
+        return CXLSession.wrap(default_instance())
+    raise EmuCXLError(
+        f"expected CXLSession, EmuCXL, or None; got {type(obj).__name__}"
+    )

@@ -302,14 +302,25 @@ class EmuCXL:
                 self._pool.release(rec.host, rec.size)
 
     def resize(self, address: Union[int, Allocation], size: int) -> int:
-        """``emucxl_resize``: allocate `size` on the same node, copy, free old, return new."""
+        """``emucxl_resize``: allocate `size` on the same node, copy, free old, return new.
+
+        The copy is an allocation-to-allocation move, so with a fabric attached it
+        routes over the same links a ``migrate``/``memcpy`` between the two
+        placements would use (pooled-block resizes show up in link occupancy);
+        only without a fabric does it fall back to the uncontended hw constants.
+        """
         with self._lock:
             rec = self._resolve(address)
             new_addr = self.alloc(size, rec.node, rec.host)
             new_rec = self._allocs[new_addr]
             n = min(size, rec.size)
             new_rec.data = new_rec.data.at[:n].set(rec.data[:n])
-            self.modeled_time[rec.node] += self._dma_time(rec, n)
+            if n > 0:
+                path = self._copy_path(rec, new_rec)
+                if path is not None:
+                    self.modeled_time[rec.node] += self.fabric.transfer(path, n)
+                else:
+                    self.modeled_time[rec.node] += self.hw.transfer_time(n, rec.node)
             self.free(rec.address)
             return new_addr
 
@@ -461,15 +472,7 @@ class EmuCXL:
     def pool_stats(self) -> Dict[str, object]:
         """Shared-pool partition view: total + per-host usage and quotas."""
         with self._lock:
-            return {
-                "capacity": self._pool.capacity,
-                "used": self._pool.used,
-                "per_host": {
-                    h: {"used": self._pool.used_by_host[h],
-                        "quota": self._pool.quota(h)}
-                    for h in range(self.num_hosts)
-                },
-            }
+            return self._pool.stats()
 
     def fabric_stats(self) -> Dict[str, Dict[str, float]]:
         """Per-link occupancy/utilization stats (empty without a fabric)."""
@@ -595,87 +598,250 @@ class EmuCXL:
 
 
 # --------------------------------------------------------------------- C-style facade
+# The paper-fidelity v1 surface, reimplemented as a thin shim over a default v2
+# session (core/api.py). Addresses stay ints for drop-in compatibility, but every
+# one is backed by a generation-counted handle, so the facade now raises a clear
+# EmuCXLError on use-after-free / double-free / stale-after-resize instead of
+# silently treating a dead address as garbage (or, worse, as a neighbour).
 _default = EmuCXL()
 
 
 def default_instance() -> EmuCXL:
+    """The process-default library instance the v1 facade (and middleware
+    defaults) operate on. v2 code should construct ``CXLSession``s instead."""
     return _default
+
+
+class _V1Facade:
+    """Address-keyed view of the default session.
+
+    ``_bufs`` maps each *current* address to its Buffer; ``_retired`` holds a
+    compact tombstone per address invalidated by free/migrate/resize so errors
+    can say what happened to it. Tombstones are O(addresses ever retired) —
+    addresses are never recycled, and the emulator deliberately trades that
+    bounded-per-op memory for precise use-after-free diagnostics; everything
+    else (the Buffer, its handle-table slot) is released on free.
+    """
+
+    def __init__(self):
+        self.session = None
+        self._bufs = {}
+        self._retired = {}   # old address -> (reason, replacement address)
+
+    # -- lifecycle ---------------------------------------------------------
+    def init(self, local_capacity=None, remote_capacity=None, device=None,
+             num_hosts=1, fabric=None, host_quota=None, placement=None) -> None:
+        from repro.core.api import CXLSession
+
+        # Adopting _default keeps default_instance() users (middleware defaults,
+        # the paper's EmuQueue) on the same fabric domain; EmuCXL.init itself
+        # rejects double initialization.
+        session = CXLSession(
+            local_capacity, remote_capacity, device=device, num_hosts=num_hosts,
+            fabric=fabric, host_quota=host_quota, placement=placement,
+            lib=_default,
+        )
+        self.session = session
+        self._bufs.clear()
+        self._retired.clear()
+
+    def exit(self) -> None:
+        session, self.session = self.session, None
+        self._bufs.clear()
+        self._retired.clear()
+        if session is None and not _default._initialized:
+            _default.exit()  # raises the canonical "not initialized" error
+            return
+        try:
+            if session is not None:
+                session.close()
+        finally:
+            # Adopted/wrapped sessions don't own the lib's lifecycle, and the
+            # legacy direct-init pattern has no session at all — v1's exit
+            # always closes the default instance regardless.
+            if _default._initialized:
+                _default.exit()
+
+    def _require_session(self):
+        if self.session is None:
+            if _default._initialized:
+                # Legacy interop: default_instance().init(...) followed by
+                # emucxl_* calls. Adopt the already-open instance into a
+                # session so the facade works on it (without owning it — but
+                # emucxl_exit still closes the default instance, see exit()).
+                from repro.core.api import CXLSession
+
+                self.session = CXLSession.wrap(_default)
+                return self.session
+            raise EmuCXLError("emucxl not initialized (call emucxl_init first)")
+        return self.session
+
+    # -- address book ------------------------------------------------------
+    def lookup(self, address):
+        """Address -> Buffer, with precise staleness diagnostics.
+
+        Addresses allocated *directly* on the default instance (legacy
+        ``default_instance().alloc`` callers) are adopted into the session's
+        handle table on first facade use, so mixing the two styles keeps
+        working — drop-in compatibility includes that pattern."""
+        if isinstance(address, Allocation):
+            address = address.address
+        session = self._require_session()
+        buf = self._bufs.get(address)
+        if buf is not None:
+            return buf
+        if address in session.lib._allocs:
+            buf = session._register(address)
+            self._bufs[address] = buf
+            return buf
+        stale = self._retired.get(address)
+        if stale is not None:
+            reason, replacement = stale
+            if reason == "free":
+                raise EmuCXLError(f"use-after-free: address {address:#x} was freed")
+            raise EmuCXLError(
+                f"stale address {address:#x}: superseded by {reason} "
+                f"(current address {replacement:#x})"
+            )
+        raise EmuCXLError(f"invalid address {address:#x} (not an emucxl allocation)")
+
+    def was_freed(self, address) -> bool:
+        if isinstance(address, Allocation):
+            address = address.address
+        stale = self._retired.get(address)
+        return stale is not None and stale[0] == "free"
+
+    def register(self, buf) -> int:
+        address = buf.address
+        self._bufs[address] = buf
+        return address
+
+    def rebind(self, old_address: int, buf, reason: str) -> int:
+        """Record that `old_address`'s buffer now lives at a new address.
+
+        Idempotent: a batch listing the same address twice (chained migrates of
+        one buffer) rebinds cleanly to the final address both times."""
+        new_address = buf.address
+        if new_address != old_address:
+            self._bufs.pop(old_address, None)
+            self._retired[old_address] = (reason, new_address)
+            self._bufs[new_address] = buf
+        return new_address
+
+_facade = _V1Facade()
+
+
+def default_session():
+    """The v2 session behind the v1 facade (None before ``emucxl_init``)."""
+    return _facade.session
 
 
 def emucxl_init(local_capacity=None, remote_capacity=None, device=None,
                 num_hosts: int = 1, fabric=None, host_quota=None,
                 placement=None) -> None:
-    _default.init(local_capacity, remote_capacity, device, num_hosts, fabric,
-                  host_quota, placement)
+    _facade.init(local_capacity, remote_capacity, device, num_hosts, fabric,
+                 host_quota, placement)
 
 
 def emucxl_exit() -> None:
-    _default.exit()
+    _facade.exit()
 
 
 def emucxl_alloc(size: int, node: int, host: int = 0) -> int:
-    return _default.alloc(size, node, host)
+    return _facade.register(_facade._require_session().alloc(size, node, host))
 
 
 def emucxl_free(address, size=None) -> None:
-    _default.free(address, size)
+    if _facade.was_freed(address):
+        addr = address.address if isinstance(address, Allocation) else address
+        raise EmuCXLError(f"double free of address {addr:#x}")
+    buf = _facade.lookup(address)
+    # One authoritative size-mismatch check, on the session path.
+    _facade._require_session().free(buf, size)
+    addr = address.address if isinstance(address, Allocation) else address
+    del _facade._bufs[addr]
+    _facade._retired[addr] = ("free", addr)
 
 
 def emucxl_resize(address, size: int) -> int:
-    return _default.resize(address, size)
+    buf = _facade.lookup(address)
+    old_address = buf.address
+    return _facade.rebind(old_address, buf.resize(size), "resize")
 
 
 def emucxl_migrate(address, node: int, host: Optional[int] = None) -> int:
-    return _default.migrate(address, node, host)
+    buf = _facade.lookup(address)
+    old_address = buf.address
+    return _facade.rebind(old_address, buf.migrate(node, host), "migrate")
 
 
 def emucxl_migrate_batch(moves) -> Tuple[Dict[int, int], float]:
-    return _default.migrate_batch(moves)
+    """Concurrent moves of [(addr, node[, host]), ...] — now routed through the
+    v2 async queue; returns ({old_addr: new_addr}, modeled makespan) as before.
+
+    All addresses are resolved up front and the batch itself delegates to
+    ``CXLSession.migrate_batch`` (one copy of the all-or-nothing staging)."""
+    session = _facade._require_session()
+    staged = []
+    v2_moves = []
+    for move in moves:
+        address, node = move[0], move[1]
+        host = move[2] if len(move) > 2 else None
+        buf = _facade.lookup(address)
+        staged.append((buf.address, buf))
+        v2_moves.append((buf, node, host))
+    makespan = session.migrate_batch(v2_moves)
+    addr_map = {}
+    for old_address, buf in staged:
+        addr_map[old_address] = _facade.rebind(old_address, buf, "migrate")
+    return addr_map, makespan
 
 
 def emucxl_is_local(address) -> bool:
-    return _default.is_local(address)
+    return _facade.lookup(address).is_local
 
 
 def emucxl_get_numa_node(address) -> int:
-    return _default.get_numa_node(address)
+    return _facade.lookup(address).node
 
 
 def emucxl_get_host(address) -> int:
-    return _default.get_host(address)
+    return _facade.lookup(address).host
 
 
 def emucxl_get_size(address) -> int:
-    return _default.get_size(address)
+    return _facade.lookup(address).size
 
 
 def emucxl_stats(node: int, host: Optional[int] = None) -> int:
-    return _default.stats(node, host)
+    return _facade._require_session().stats(node, host)
 
 
 def emucxl_pool_stats() -> Dict[str, object]:
-    return _default.pool_stats()
+    return _facade._require_session().pool_stats()
 
 
 def emucxl_fabric_stats() -> Dict[str, Dict[str, float]]:
-    return _default.fabric_stats()
+    return _facade._require_session().fabric_stats()
 
 
 def emucxl_read(address, offset: int, buf_size: int) -> np.ndarray:
-    return _default.read(address, offset, buf_size)
+    return _facade.lookup(address).read(offset, buf_size)
 
 
 def emucxl_write(buf, offset: int, address, buf_size=None) -> bool:
-    return _default.write(buf, offset, address, buf_size)
+    _facade.lookup(address).write(buf, offset, buf_size)
+    return True
 
 
 def emucxl_memset(address, value: int, size: int) -> int:
-    return _default.memset(address, value, size)
+    return _facade.lookup(address).memset(value, size).address
 
 
 def emucxl_memcpy(dst, src, size: int) -> int:
-    return _default.memcpy(dst, src, size)
+    session = _facade._require_session()
+    return session.memcpy(_facade.lookup(dst), _facade.lookup(src), size).address
 
 
 def emucxl_memmove(dst, src, size: int) -> int:
-    return _default.memmove(dst, src, size)
+    return emucxl_memcpy(dst, src, size)

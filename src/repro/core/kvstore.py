@@ -9,6 +9,12 @@ Semantics follow the paper exactly:
 
 Objects are real emucxl allocations (bytes in the device or host memory space), not
 Python dict entries — every migration is an actual cross-memory-space DMA.
+
+v2: objects are held as generation-counted ``Buffer`` handles from a ``CXLSession``,
+so tier moves need no address re-threading (the handle survives ``migrate``) and a
+deleted object's storage cannot be silently aliased. The promotion policy defaults
+to the session's injected ``promotion`` policy; constructors still accept a bare
+``EmuCXL`` (or None for the process default) for v1 interop.
 """
 
 from __future__ import annotations
@@ -18,44 +24,49 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core import emucxl as ecxl
-from repro.core.policy import AccessStats, PromotionPolicy, Policy1
+from repro.core.api import CXLSession, as_session
+from repro.core.handle import Buffer
+from repro.core.policy import AccessStats, PromotionPolicy
 from repro.core.pool import LRUTier
 
 
 class KVStore:
     def __init__(
         self,
-        lib: Optional[ecxl.EmuCXL] = None,
+        lib=None,
         local_capacity_objects: int = 300,
-        policy: PromotionPolicy = Policy1(),
+        policy: Optional[PromotionPolicy] = None,
     ):
-        self.lib = lib if lib is not None else ecxl.default_instance()
+        self.session: CXLSession = as_session(lib)
         self.local = LRUTier(local_capacity_objects, name="kv-local")
-        self.policy = policy
+        self.policy = policy if policy is not None else self.session.promotion
         self.stats = AccessStats()
-        self._addr: Dict[str, int] = {}     # key -> emucxl address
-        self._node: Dict[str, int] = {}     # key -> tier (0 local / 1 remote)
+        self._buf: Dict[str, Buffer] = {}   # key -> session buffer handle
         self._size: Dict[str, int] = {}     # key -> payload bytes
+
+    @property
+    def lib(self) -> ecxl.EmuCXL:
+        return self.session.lib
 
     # ------------------------------------------------------------------ operations
     def put(self, key: str, value: bytes) -> None:
         """Paper Listing 2: allocate local, MRU-insert, LRU-demote on overflow."""
-        if key in self._addr:
+        if key in self._buf:
             self.delete(key)
-        addr = self.lib.alloc(max(len(value), 1), ecxl.LOCAL_MEMORY)
-        self.lib.write(np.frombuffer(value, np.uint8), 0, addr)
-        self._addr[key] = addr
-        self._node[key] = ecxl.LOCAL_MEMORY
+        buf = self.session.alloc(max(len(value), 1), ecxl.LOCAL_MEMORY)
+        buf.write(np.frombuffer(value, np.uint8))
+        self._buf[key] = buf
         self._size[key] = len(value)
         for victim in self.local.add(key):
             self._demote(victim)
 
     def get(self, key: str) -> Optional[bytes]:
         """Paper Listing 3: local search, remote search, policy on remote hit."""
-        if key not in self._addr:
+        buf = self._buf.get(key)
+        if buf is None:
             self.stats.misses += 1
             return None
-        if self._node[key] == ecxl.LOCAL_MEMORY:
+        if buf.is_local:
             self.stats.local_hits += 1
             self.local.touch(key)
         else:
@@ -66,37 +77,37 @@ class KVStore:
 
     def delete(self, key: str) -> bool:
         """Paper Listing 4."""
-        if key not in self._addr:
+        buf = self._buf.get(key)
+        if buf is None:
             return False
-        if self._node[key] == ecxl.LOCAL_MEMORY:
+        if buf.is_local:
             self.local.remove(key)
-        self.lib.free(self._addr[key])
-        del self._addr[key], self._node[key], self._size[key]
+        buf.free()
+        del self._buf[key], self._size[key]
         return True
 
     # ------------------------------------------------------------------ tier moves
     def _demote(self, key: str) -> None:
-        self._addr[key] = self.lib.migrate(self._addr[key], ecxl.REMOTE_MEMORY)
-        self._node[key] = ecxl.REMOTE_MEMORY
+        self._buf[key].migrate(ecxl.REMOTE_MEMORY)
 
     def _promote(self, key: str) -> None:
-        self._addr[key] = self.lib.migrate(self._addr[key], ecxl.LOCAL_MEMORY)
-        self._node[key] = ecxl.LOCAL_MEMORY
+        self._buf[key].migrate(ecxl.LOCAL_MEMORY)
         for victim in self.local.add(key):
             self._demote(victim)
 
     def _read(self, key: str) -> bytes:
-        return self.lib.read(self._addr[key], 0, self._size[key]).tobytes()
+        return self._buf[key].read(0, self._size[key]).tobytes()
 
     # ------------------------------------------------------------------ introspection
     def tier_of(self, key: str) -> Optional[int]:
-        return self._node.get(key)
+        buf = self._buf.get(key)
+        return None if buf is None else buf.node
 
     def local_count(self) -> int:
         return len(self.local)
 
     def remote_count(self) -> int:
-        return sum(1 for n in self._node.values() if n == ecxl.REMOTE_MEMORY)
+        return sum(1 for b in self._buf.values() if not b.is_local)
 
     def __len__(self) -> int:
-        return len(self._addr)
+        return len(self._buf)

@@ -108,6 +108,29 @@ class OffloadManifest:
     def summary(self) -> Dict[str, int]:
         return {e.name: e.nbytes for e in self.entries}
 
+    def stage(self, session, host: int = 0) -> Dict[str, Any]:
+        """Materialize the manifest in a v2 ``CXLSession`` (see stage_manifest)."""
+        return stage_manifest(self, session, host)
+
+
+def stage_manifest(manifest: OffloadManifest, session, host: int = 0) -> Dict[str, Any]:
+    """Back every manifest entry with a remote-tier v2 session allocation.
+
+    Bridges the jit-side ledger to the emucxl model: each intended host-resident
+    tensor becomes a generation-counted ``Buffer`` in the session's shared pool,
+    charged to `host`'s quota and placed by the session's placement policy — so
+    offload pressure from a training/serving job shows up in ``pool_stats`` and
+    (with a fabric) link occupancy, alongside every other consumer. Returns
+    {entry name: Buffer}.
+    """
+    from repro.core.emucxl import REMOTE_MEMORY
+
+    return {
+        e.name: session.alloc(e.nbytes, REMOTE_MEMORY, host)
+        for e in manifest.entries
+        if e.nbytes > 0
+    }
+
 
 def offload_checkpoint_policy(names: Sequence[str]):
     """Remat policy: save listed residuals by name, offloaded to the host tier.

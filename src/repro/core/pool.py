@@ -93,6 +93,23 @@ class SharedPool:
         self.used = 0
         self.used_by_host = {h: 0 for h in range(self.num_hosts)}
 
+    def stats(self) -> Dict[str, object]:
+        """Partition view: total + per-host usage/quota/headroom — the payload
+        behind ``emucxl_pool_stats`` and ``CXLSession.pool_stats``."""
+        return {
+            "capacity": self.capacity,
+            "used": self.used,
+            "free": self.free,
+            "per_host": {
+                h: {
+                    "used": self.used_by_host[h],
+                    "quota": self.quota(h),
+                    "headroom": self.host_free(h),
+                }
+                for h in range(self.num_hosts)
+            },
+        }
+
 
 class LRUTier:
     """A bounded tier holding (key -> cost) with least-recently-used eviction.

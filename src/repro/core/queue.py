@@ -1,18 +1,32 @@
-"""Direct-access usage demo: a linked-list queue in emucxl memory (paper §IV-A, Listing 1).
+"""emucxl queues: the paper's linked-list demo and the v2 async operation queue.
 
-Faithful to the paper: each node is its own ``emucxl_alloc`` on the queue's configured
-tier, and the list is threaded through the emulated address space — `next` pointers are
-emucxl addresses stored *inside* node payloads, so every traversal is a real read from
-the (possibly remote) memory space. The queue-level policy (`node=0` all-local or
-`node=1` all-remote) mirrors the paper's initialization-time choice.
+``EmuQueue`` (paper §IV-A, Listing 1) is the direct-access usage demo: each node is
+its own ``emucxl_alloc`` on the queue's configured tier, and the list is threaded
+through the emulated address space — `next` pointers are emucxl addresses stored
+*inside* node payloads, so every traversal is a real read from the (possibly
+remote) memory space. Node layout (16 bytes): int64 data | int64 next (0 == NULL).
 
-Node layout (16 bytes): int64 data | int64 next-address (0 == NULL).
+``OpQueue`` is the v2 session scheduler (beyond the paper, toward CXL 3.0's queued
+transactions): ``CXLSession.submit`` enqueues read/write/migrate/memcpy/memset
+operations as Future-style ``Ticket``s, and ``flush()`` completes the whole batch
+at once. Every op with a fabric path is registered in flight *together*
+(``Fabric.begin``) before a single ``drain()``, so concurrent ops — e.g. eight
+hosts migrating simultaneously — genuinely contend for links and the batch
+makespan reflects overlap, not the serial sum a loop of v1 calls would charge.
+Ops without a fabric path fall back to the uncontended hw constants and are
+summed serially (there is no contention model to overlap them under).
+
+Batch semantics: costs are planned against start-of-batch placement (the ops are
+"concurrent"); data effects apply in submission order, so a read submitted after
+a write of the same buffer observes it.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import Any, List, Optional, Tuple
 
+import jax
 import numpy as np
 
 from repro.core import emucxl as ecxl
@@ -77,3 +91,357 @@ class EmuQueue:
 
     def __len__(self) -> int:
         return self.count
+
+
+# =====================================================================
+# v2 async operation queue (CXLSession.submit / flush)
+# =====================================================================
+
+@dataclasses.dataclass
+class ReadOp:
+    """DMA `size` bytes at `offset` out of `buf` (size=None: to end of buffer)."""
+
+    buf: Any
+    offset: int = 0
+    size: Optional[int] = None
+
+
+@dataclasses.dataclass
+class WriteOp:
+    """DMA `data` (coerced to uint8) into `buf` at `offset`."""
+
+    buf: Any
+    data: Any = None
+    offset: int = 0
+    size: Optional[int] = None
+
+
+@dataclasses.dataclass
+class MigrateOp:
+    """Move `buf` to (node, host). The handle survives; only the address moves."""
+
+    buf: Any
+    node: int = ecxl.REMOTE_MEMORY
+    host: Optional[int] = None
+
+
+@dataclasses.dataclass
+class MemcpyOp:
+    """Copy `size` bytes from `src` into `dst` (cross-tier/cross-host aware)."""
+
+    dst: Any
+    src: Any
+    size: int = 0
+
+
+@dataclasses.dataclass
+class MemsetOp:
+    """Fill the first `size` bytes of `buf` with `value` (size=None: whole buffer)."""
+
+    buf: Any
+    value: int = 0
+    size: Optional[int] = None
+
+
+class Ticket:
+    """Future-style completion token for one submitted operation.
+
+    ``result()`` forces a flush of the owning queue if the batch has not been
+    completed yet, then returns the op's value (ndarray for reads, the Buffer for
+    migrate/memset, True for writes/memcpy) or re-raises the batch failure.
+    ``modeled_time`` is this op's own modeled duration inside the batch — the
+    batch *makespan* (what a caller actually waits) is returned by ``flush()``.
+    """
+
+    __slots__ = ("op", "_queue", "_state", "_value", "_error", "modeled_time")
+
+    def __init__(self, op, queue: "OpQueue"):
+        self.op = op
+        self._queue = queue
+        self._state = "pending"
+        self._value = None
+        self._error: Optional[BaseException] = None
+        self.modeled_time = 0.0
+
+    def done(self) -> bool:
+        return self._state != "pending"
+
+    def result(self):
+        if self._state == "pending":
+            self._queue.flush()
+        if self._state == "failed":
+            raise self._error
+        return self._value
+
+    def _complete(self, value, modeled_time: float) -> None:
+        self._value = value
+        self.modeled_time = modeled_time
+        self._state = "done"
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._state = "failed"
+
+    def __repr__(self) -> str:
+        return f"Ticket({type(self.op).__name__}, {self._state})"
+
+
+@dataclasses.dataclass
+class _Plan:
+    """Flush-time execution plan for one ticket (internal)."""
+
+    kind: str                       # noop|read|write|migrate|memcpy|memset
+    buf: Any = None                 # primary buffer handle (dst for memcpy)
+    src: Any = None                 # source handle (memcpy only)
+    transfer: Any = None            # in-flight fabric Transfer, if routed
+    hw_time: float = 0.0            # uncontended fallback cost (no fabric path)
+    n: int = 0
+    offset: int = 0
+    data: Optional[np.ndarray] = None
+    value_byte: int = 0
+    node: int = 0                   # migrate destination
+    staged_addr: Optional[int] = None   # migrate destination allocation
+    charge_tier: int = ecxl.REMOTE_MEMORY  # tier hw_time is charged to (sync parity)
+
+
+class OpQueue:
+    """FIFO of pending ops for one session, completed in contention-aware batches.
+
+    Handle validity is checked at ``submit`` time (the API boundary) so stale
+    handles fail fast; placement-dependent costs are planned at ``flush`` time
+    against start-of-batch placement; data effects apply in submission order.
+    """
+
+    def __init__(self, session):
+        self._session = session
+        self._pending: List[Ticket] = []
+        self.batches_flushed = 0
+        self.ops_completed = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    # ------------------------------------------------------------------ submit
+    def _check_buf(self, buf) -> None:
+        if getattr(buf, "session", None) is not self._session:
+            raise ecxl.EmuCXLError(
+                "operation references a buffer from a different session"
+            )
+        buf.address  # resolves the handle: raises StaleHandleError if invalid
+
+    def submit(self, op) -> Ticket:
+        with self._session.lib._lock:
+            return self._submit_locked(op)
+
+    def _submit_locked(self, op) -> Ticket:
+        if isinstance(op, MemcpyOp):
+            self._check_buf(op.dst)
+            self._check_buf(op.src)
+        elif isinstance(op, (ReadOp, WriteOp, MigrateOp, MemsetOp)):
+            self._check_buf(op.buf)
+            if isinstance(op, WriteOp):
+                # Snapshot the payload now: the ticket is Future-style, so the
+                # caller may legitimately reuse its staging array after submit.
+                op.data = np.array(op.data, dtype=np.uint8, copy=True).reshape(-1)
+        else:
+            raise ecxl.EmuCXLError(f"unknown operation type {type(op).__name__}")
+        ticket = Ticket(op, self)
+        self._pending.append(ticket)
+        return ticket
+
+    def cancel(self, ticket: Ticket) -> None:
+        """Withdraw a still-pending ticket from the queue (batch-staging unwind).
+
+        No-op if the ticket already flushed; the cancelled ticket fails with a
+        cancellation error so a later result() cannot silently return None."""
+        with self._session.lib._lock:
+            if ticket in self._pending:
+                self._pending.remove(ticket)
+                ticket._fail(ecxl.EmuCXLError("operation cancelled before flush"))
+
+    # ------------------------------------------------------------------ planning
+    def _plan_one(self, lib, fabric, op) -> _Plan:
+        hw = lib.hw
+        if isinstance(op, MigrateOp):
+            rec = lib._resolve(op.buf.address)
+            lib._check_node(op.node)
+            target_host = rec.host if op.host is None else op.host
+            lib._check_host(target_host)
+            if op.node == rec.node and target_host == rec.host:
+                lib._touch(rec)
+                return _Plan("noop", buf=op.buf)
+            new_addr = lib.alloc(rec.size, op.node, target_host)
+            new_rec = lib._allocs[new_addr]
+            plan = _Plan("migrate", buf=op.buf, n=rec.size, node=op.node,
+                         staged_addr=new_addr)
+            path = lib._fabric_path(rec, op.node, target_host, new_rec.port)
+            if path is not None:
+                plan.transfer = fabric.begin(path, rec.size)
+            elif op.node != rec.node or op.node == ecxl.LOCAL_MEMORY:
+                plan.hw_time = hw.migrate_time(rec.size)
+            return plan
+        if isinstance(op, MemcpyOp):
+            drec = lib._resolve(op.dst.address)
+            srec = lib._resolve(op.src.address)
+            lib._bounds(srec, 0, op.size)
+            lib._bounds(drec, 0, op.size)
+            plan = _Plan("memcpy", buf=op.dst, src=op.src, n=op.size)
+            if op.size <= 0:
+                return plan
+            path = lib._copy_path(srec, drec)
+            if path is not None:
+                plan.transfer = fabric.begin(path, op.size)
+            elif drec.node != srec.node:
+                plan.hw_time = hw.migrate_time(op.size)
+            else:
+                # same-node copy: charge the destination tier, like sync memcpy
+                plan.hw_time = hw.transfer_time(op.size, drec.node)
+                plan.charge_tier = drec.node
+            return plan
+        # read / write / memset: a compute <-> tier DMA on one allocation
+        rec = lib._resolve(op.buf.address)
+        if isinstance(op, ReadOp):
+            n = (rec.size - op.offset) if op.size is None else op.size
+            plan = _Plan("read", buf=op.buf, n=n, offset=op.offset)
+        elif isinstance(op, WriteOp):
+            flat = np.asarray(op.data, dtype=np.uint8).reshape(-1)
+            n = op.size if op.size is not None else flat.size
+            if flat.size < n:
+                raise ecxl.EmuCXLError(
+                    f"write op supplies {flat.size} bytes but claims size {n}"
+                )
+            plan = _Plan("write", buf=op.buf, n=n, offset=op.offset, data=flat)
+        else:  # MemsetOp
+            n = rec.size if op.size is None else op.size
+            plan = _Plan("memset", buf=op.buf, n=n, value_byte=op.value & 0xFF)
+        lib._bounds(rec, plan.offset, plan.n)
+        plan.charge_tier = rec.node
+        if plan.n > 0:
+            if rec.node == ecxl.REMOTE_MEMORY and fabric is not None:
+                plan.transfer = fabric.begin(
+                    fabric.pool_path(rec.host, rec.port), plan.n
+                )
+            else:
+                plan.hw_time = hw.transfer_time(plan.n, rec.node)
+        return plan
+
+    # ------------------------------------------------------------------ apply
+    def _apply_one(self, lib, plan: _Plan):
+        """Apply one op's data effect; handles are re-resolved so earlier ops in
+        the same batch (e.g. a migrate) are observed."""
+        if plan.kind == "noop":
+            return plan.buf
+        if plan.kind == "migrate":
+            rec = lib._resolve(plan.buf.address)
+            new_rec = lib._allocs[plan.staged_addr]
+            new_rec.data = jax.device_put(rec.data, lib._sharding_for(plan.node))
+            lib.free(rec.address)
+            table = plan.buf.session._table
+            table.update_address(*plan.buf.handle, plan.staged_addr)
+            return plan.buf
+        if plan.kind == "memcpy":
+            drec = lib._resolve(plan.buf.address)
+            srec = lib._resolve(plan.src.address)
+            chunk = srec.data[: plan.n]
+            if drec.node != srec.node:
+                chunk = jax.device_put(chunk, lib._sharding_for(drec.node))
+            drec.data = drec.data.at[: plan.n].set(chunk)
+            lib._touch(drec)
+            lib._touch(srec)
+            return True
+        rec = lib._resolve(plan.buf.address)
+        lib._touch(rec)
+        if plan.kind == "read":
+            return np.asarray(rec.data[plan.offset : plan.offset + plan.n])
+        if plan.kind == "write":
+            rec.data = rec.data.at[plan.offset : plan.offset + plan.n].set(
+                plan.data[: plan.n]
+            )
+            return True
+        rec.data = rec.data.at[: plan.n].set(np.uint8(plan.value_byte))  # memset
+        return plan.buf
+
+    # ------------------------------------------------------------------ flush
+    def flush(self) -> float:
+        """Complete every pending op as ONE overlapped batch; returns the modeled
+        makespan (virtual seconds the whole batch occupies).
+
+        Fabric-routed ops are begun together and drained once, so they share link
+        bandwidth exactly as concurrent hosts would; fallback (uncontended) ops
+        are summed serially and overlap with the fabric span, since they occupy
+        different modeled resources (HBM/local engines vs fabric links).
+
+        modeled_time convention: the overlapped fabric span is charged once to
+        REMOTE_MEMORY (the fabric engine's counter, matching ``migrate_batch``),
+        even when a routed op's endpoints are both LOCAL — the overlap makes a
+        per-tier split ill-defined. Fallback ops charge their own tier, exactly
+        like their synchronous counterparts.
+        """
+        lib = self._session.lib
+        with lib._lock:
+            tickets, self._pending = self._pending, []
+            if not tickets:
+                return 0.0
+            try:
+                lib._require_init()
+            except Exception as e:
+                for t in tickets:
+                    t._fail(e)
+                raise
+            fabric = lib.fabric
+            start = fabric.clock if fabric is not None else 0.0
+            plans: List[Tuple[Ticket, _Plan]] = []
+            serial = 0.0
+            try:
+                for t in tickets:
+                    plan = self._plan_one(lib, fabric, t.op)
+                    plans.append((t, plan))
+                    serial += plan.hw_time
+            except Exception as e:
+                # Mid-batch failure (quota/capacity/stale handle): release staged
+                # destinations and deregister in-flight transfers; sources are
+                # untouched, every ticket in the batch fails with the cause.
+                for _, plan in plans:
+                    if plan.transfer is not None:
+                        fabric.cancel(plan.transfer)
+                    if plan.staged_addr is not None:
+                        lib.free(plan.staged_addr)
+                for t in tickets:
+                    t._fail(e)
+                raise
+            if fabric is not None:
+                fabric_span = fabric.drain() - start
+                makespan = max(fabric_span, serial)
+                lib.modeled_time[ecxl.REMOTE_MEMORY] += fabric_span
+            else:
+                makespan = serial
+            for _, plan in plans:
+                if plan.hw_time:
+                    # Fallback ops charge their tier like the synchronous calls.
+                    lib.modeled_time[plan.charge_tier] += plan.hw_time
+            for i, (t, plan) in enumerate(plans):
+                try:
+                    value = self._apply_one(lib, plan)
+                except Exception as e:
+                    # Earlier tickets in the batch completed; this one and every
+                    # later one must not be left pending (result() would return
+                    # None) — fail them all with the cause, and release the
+                    # staged migrate destinations that never committed so the
+                    # tier isn't leaked (mirrors the plan-phase rollback).
+                    for t2, p2 in plans[i:]:
+                        t2._fail(e)
+                        if (p2.staged_addr is not None
+                                and p2.staged_addr in lib._allocs):
+                            try:
+                                committed = p2.buf.address == p2.staged_addr
+                            except ecxl.EmuCXLError:
+                                committed = False
+                            if not committed:
+                                lib.free(p2.staged_addr)
+                    raise
+                elapsed = (plan.transfer.elapsed if plan.transfer is not None
+                           else plan.hw_time)
+                t._complete(value, elapsed)
+            self.batches_flushed += 1
+            self.ops_completed += len(tickets)
+        return makespan

@@ -6,6 +6,12 @@ internal fragmentation, easy whole-slab reclamation, exactly the Bonwick design 
 paper sketches. Slabs live on either tier and can be migrated wholesale, which is what
 makes this the natural backing store for paged KV caches (serving/kv_manager.py): one
 KV page == one chunk, hot slabs in HBM, cold slabs demoted to host memory.
+
+v2: each slab's backing storage is a generation-counted ``Buffer`` handle from a
+``CXLSession`` (core/api.py) rather than a raw address — ``migrate_slab`` no longer
+re-threads addresses (the handle survives the move), and a reclaimed slab's storage
+cannot be silently aliased. Constructors still accept a bare ``EmuCXL`` (or None for
+the process default) for v1 interop; it is wrapped in a session transparently.
 """
 
 from __future__ import annotations
@@ -14,6 +20,8 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import emucxl as ecxl
+from repro.core.api import CXLSession, as_session
+from repro.core.handle import Buffer
 
 PAGE_BYTES = 4096
 
@@ -30,7 +38,7 @@ class SlabPtr:
 @dataclasses.dataclass
 class _Slab:
     slab_id: int
-    address: int                 # emucxl address of the backing allocation
+    buf: Buffer                  # session handle to the backing allocation
     node: int
     chunk_size: int
     chunks: int
@@ -55,7 +63,7 @@ class SlabAllocator:
 
     def __init__(
         self,
-        lib: Optional[ecxl.EmuCXL] = None,
+        lib=None,
         min_chunk: int = 64,
         max_chunk: int = 64 * 1024,
         slab_pages: int = 16,
@@ -63,7 +71,7 @@ class SlabAllocator:
     ):
         if min_chunk & (min_chunk - 1) or max_chunk & (max_chunk - 1):
             raise ValueError("chunk bounds must be powers of two")
-        self.lib = lib if lib is not None else ecxl.default_instance()
+        self.session: CXLSession = as_session(lib)
         self.host = host  # emulated host charged for this allocator's slabs
         self.min_chunk, self.max_chunk = min_chunk, max_chunk
         self.slab_bytes = slab_pages * PAGE_BYTES
@@ -71,6 +79,20 @@ class SlabAllocator:
         self._next_id = 0
         # per (size_class, node): slab ids with free chunks
         self._partial: Dict[Tuple[int, int], List[int]] = {}
+
+    @property
+    def lib(self) -> ecxl.EmuCXL:
+        """v1 interop: the modeled library under this allocator's session."""
+        return self.session.lib
+
+    @lib.setter
+    def lib(self, value) -> None:
+        if self._slabs:
+            raise ecxl.EmuCXLError(
+                f"cannot rebind SlabAllocator to a new backend with "
+                f"{len(self._slabs)} live slab(s) on the old one"
+            )
+        self.session = as_session(value)
 
     # ------------------------------------------------------------------ size classes
     def size_class(self, size: int) -> int:
@@ -114,18 +136,18 @@ class SlabAllocator:
 
     def _grow(self, cls: int, node: int) -> int:
         chunks = max(self.slab_bytes // cls, 1)
-        addr = self.lib.alloc(chunks * cls, node, self.host)
+        buf = self.session.alloc(chunks * cls, node, self.host)
         sid = self._next_id
         self._next_id += 1
         self._slabs[sid] = _Slab(
-            slab_id=sid, address=addr, node=node, chunk_size=cls, chunks=chunks,
+            slab_id=sid, buf=buf, node=node, chunk_size=cls, chunks=chunks,
             free_list=list(range(chunks - 1, -1, -1)),
         )
         return sid
 
     def _reclaim(self, slab: _Slab) -> None:
         """Empty slabs return their pages to the tier (easy reclamation property)."""
-        self.lib.free(slab.address)
+        slab.buf.free()
         bucket = self._partial.get((slab.chunk_size, slab.node), [])
         if slab.slab_id in bucket:
             bucket.remove(slab.slab_id)
@@ -136,22 +158,24 @@ class SlabAllocator:
         if len(payload) > ptr.size_class:
             raise ecxl.EmuCXLError("payload exceeds chunk size class")
         slab = self._slabs[ptr.slab_id]
-        self.lib.write(payload, ptr.chunk * slab.chunk_size, slab.address, len(payload))
+        slab.buf.write(payload, ptr.chunk * slab.chunk_size, len(payload))
 
     def read(self, ptr: SlabPtr, size: int):
         slab = self._slabs[ptr.slab_id]
         if size > slab.chunk_size:
             raise ecxl.EmuCXLError("read exceeds chunk size class")
-        return self.lib.read(slab.address, ptr.chunk * slab.chunk_size, size)
+        return slab.buf.read(ptr.chunk * slab.chunk_size, size)
 
     # ------------------------------------------------------------------ tier moves
     def migrate_slab(self, slab_id: int, node: int) -> None:
-        """Whole-slab tier migration (one large DMA instead of per-object copies)."""
+        """Whole-slab tier migration (one large DMA instead of per-object copies).
+
+        The Buffer handle survives the move — no address re-threading."""
         slab = self._slabs[slab_id]
         if slab.node == node:
             return
         old_key = (slab.chunk_size, slab.node)
-        slab.address = self.lib.migrate(slab.address, node)
+        slab.buf.migrate(node)
         if slab.slab_id in self._partial.get(old_key, []):
             self._partial[old_key].remove(slab.slab_id)
             self._partial.setdefault((slab.chunk_size, node), []).append(slab.slab_id)

@@ -13,13 +13,14 @@ fast path is an optimization hook, not a correctness need).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.policy import Policy1, PromotionPolicy
+from repro.core.api import CXLSession
+from repro.core.policy import PromotionPolicy
 from repro.models import transformer as tf
 from repro.serving.kv_manager import PagedKVPool
 from repro.serving.paged_decode import paged_decode_step
@@ -48,17 +49,21 @@ class ServingEngine:
         page_size: int = 16,
         max_batch: int = 4,
         max_pages_per_seq: int = 16,
-        policy: PromotionPolicy = Policy1(),
+        policy: Optional[PromotionPolicy] = None,
         opts: tf.ModelOptions = tf.ModelOptions(moe_impl="dense"),
         host: int = 0,
+        session: Optional[CXLSession] = None,
     ):
         self.params, self.cfg, self.opts = params, cfg, opts
         self.page_size = page_size
         self.max_batch = max_batch
         self.max_pages = max_pages_per_seq
+        # The cold tier (and the default promotion policy, when `policy` is None)
+        # comes from the injected v2 session; None keeps v1's process default.
         self.pool = PagedKVPool(
             cfg.num_layers, num_slots, page_size, cfg.num_kv_heads,
             cfg.resolved_head_dim, dtype=jnp.float32, policy=policy, host=host,
+            session=session,
         )
         self.requests: Dict[int, Request] = {}
         self._next_rid = 0
@@ -177,5 +182,5 @@ class ServingEngine:
             "remote_hits": self.pool.stats.remote_hits,
             "percent_local": self.pool.stats.percent_local,
             "preemptions": self.preemptions,
-            "remote_bytes": self.pool.lib.stats(1),
+            "remote_bytes": self.pool.session.stats(1),
         }

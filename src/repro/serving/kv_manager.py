@@ -25,10 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import emucxl as ecxl
+from repro.core.api import CXLSession, as_session
 from repro.core.policy import (
     AccessStats,
     CongestionAwarePromotion,
-    Policy1,
     PromotionPolicy,
 )
 from repro.core.pool import LRUTier
@@ -61,8 +61,9 @@ class PagedKVPool:
         head_dim: int,
         dtype=jnp.float32,
         lib: Optional[ecxl.EmuCXL] = None,
-        policy: PromotionPolicy = Policy1(),
+        policy: Optional[PromotionPolicy] = None,
         host: int = 0,
+        session: Optional[CXLSession] = None,
     ):
         self.L, self.page, self.K, self.hd = num_layers, page_size, kv_heads, head_dim
         self.num_slots = num_slots
@@ -72,20 +73,44 @@ class PagedKVPool:
         self.k_pool = jnp.zeros(shape, dtype)
         self.v_pool = jnp.zeros(shape, dtype)
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
-        self.lib = lib if lib is not None else ecxl.default_instance()
+        # v2: the cold tier is a session; `lib` (an EmuCXL or None) is the v1
+        # interop spelling and gets wrapped.
+        self.session = as_session(session if session is not None else lib)
         # Multi-host pooling: this engine's cold pages live in the shared pool,
         # charged to `host`'s quota, and their DMAs ride `host`'s fabric uplink.
         self.host = host
-        self.slab = SlabAllocator(self.lib, min_chunk=64,
+        self.slab = SlabAllocator(self.session, min_chunk=64,
                                   max_chunk=self._page_bytes_pow2(), slab_pages=16,
                                   host=host)
+        # Promotion policy is injected — explicitly, or from the session default.
+        if policy is None:
+            policy = self.session.promotion
+            if isinstance(policy, CongestionAwarePromotion):
+                # The session default is shared; bind() mutates, and each pool
+                # must watch its OWN host uplink — so bind a per-pool copy.
+                policy = dataclasses.replace(policy, fabric=None, watch_link=None)
         if (isinstance(policy, CongestionAwarePromotion)
-                and policy.fabric is None and self.lib.fabric is not None):
-            policy.bind(self.lib.fabric, self.lib.fabric.host_link(host))
+                and policy.fabric is None and self.session.fabric is not None):
+            policy.bind(self.session.fabric, self.session.fabric.host_link(host))
         self.policy = policy
         self.stats = AccessStats()
         self.lru = LRUTier(float(num_slots), name="kv-hot")
         self._refs: Dict[Tuple[int, int], PageRef] = {}
+
+    @property
+    def lib(self) -> ecxl.EmuCXL:
+        """v1 interop: the modeled library under this pool's session."""
+        return self.session.lib
+
+    @lib.setter
+    def lib(self, value) -> None:
+        if self._refs:
+            raise ecxl.EmuCXLError(
+                f"cannot rebind PagedKVPool to a new backend with "
+                f"{len(self._refs)} live page(s) on the old one"
+            )
+        self.slab.lib = value       # raises first if the slab holds live storage
+        self.session = self.slab.session
 
     # ------------------------------------------------------------------ sizes
     def _page_bytes(self) -> int:

@@ -1,0 +1,378 @@
+"""emucxl v2 session API: handles, isolation, policies, async queue, fabric accounting."""
+
+import numpy as np
+import pytest
+
+from repro.core import emucxl as ecxl
+from repro.core.api import CXLSession, as_session
+from repro.core.emucxl import EmuCXL, EmuCXLError, QuotaExceeded
+from repro.core.fabric import Fabric
+from repro.core.handle import StaleHandleError
+from repro.core.kvstore import KVStore
+from repro.core.offload import OffloadEntry, OffloadManifest
+from repro.core.policy import CongestionAwarePlacement, Policy2
+from repro.core.queue import MemcpyOp, MemsetOp, MigrateOp, ReadOp, WriteOp
+
+
+def make_session(**kw):
+    kw.setdefault("local_capacity", 1 << 22)
+    kw.setdefault("remote_capacity", 1 << 24)
+    return CXLSession(**kw)
+
+
+# ------------------------------------------------------------------ lifecycle
+def test_context_manager_lifecycle():
+    with make_session() as sess:
+        buf = sess.alloc(4096, ecxl.LOCAL_MEMORY)
+        assert buf.is_local and buf.size == 4096
+        assert sess.live_buffers() == 1
+    assert sess.closed
+    with pytest.raises(EmuCXLError):
+        sess.alloc(16, ecxl.LOCAL_MEMORY)
+
+
+def test_close_flushes_pending_ops():
+    sess = make_session()
+    buf = sess.alloc(64, ecxl.LOCAL_MEMORY)
+    ticket = sess.submit(WriteOp(buf, np.full(64, 5, np.uint8)))
+    sess.close()
+    assert ticket.done() and ticket.result() is True
+
+
+def test_wrap_does_not_own_lifecycle(lib):
+    sess = CXLSession.wrap(lib)
+    buf = sess.alloc(128, ecxl.REMOTE_MEMORY)
+    assert lib.stats(1) == 128
+    sess.close()
+    assert lib._initialized          # wrapped lib survives session close
+    assert lib.stats(1) == 128       # ... and so do its allocations
+    with pytest.raises(EmuCXLError, match="session is closed"):
+        buf.read(0, 8)               # but the session's handles are dead
+
+
+def test_as_session_coercions(lib):
+    sess = make_session()
+    assert as_session(sess) is sess
+    assert as_session(lib).lib is lib
+    with pytest.raises(EmuCXLError):
+        as_session(42)
+    sess.close()
+
+
+# ------------------------------------------------------------------ isolation
+def test_two_sessions_share_nothing():
+    with make_session() as a, make_session() as b:
+        buf_a = a.alloc(4096, ecxl.LOCAL_MEMORY)
+        assert a.stats(0) == 4096 and b.stats(0) == 0
+        assert a.live_buffers() == 1 and b.live_buffers() == 0
+        # handles are session-scoped: b's queue rejects a's buffer outright
+        with pytest.raises(EmuCXLError, match="different session"):
+            b.submit(ReadOp(buf_a, 0, 16))
+        b_buf = b.alloc(64, ecxl.REMOTE_MEMORY)
+        a.close()                     # closing a must not disturb b
+        assert b.stats(1) == 64 and b_buf.valid
+
+
+# ------------------------------------------------------------------ handle safety
+def test_use_after_free_raises():
+    with make_session() as sess:
+        buf = sess.alloc(256, ecxl.LOCAL_MEMORY)
+        buf.free()
+        with pytest.raises(StaleHandleError, match="use-after-free"):
+            buf.read(0, 16)
+        assert not buf.valid
+
+
+def test_double_free_raises():
+    with make_session() as sess:
+        buf = sess.alloc(256, ecxl.REMOTE_MEMORY)
+        buf.free()
+        with pytest.raises(StaleHandleError, match="double free"):
+            buf.free()
+
+
+def test_resize_stales_old_handle_and_copies_prefix():
+    with make_session() as sess:
+        buf = sess.alloc(64, ecxl.LOCAL_MEMORY)
+        buf.write(np.arange(64, dtype=np.uint8))
+        new = buf.resize(128)
+        assert new.size == 128
+        assert np.array_equal(new.read(0, 64), np.arange(64, dtype=np.uint8))
+        with pytest.raises(StaleHandleError, match="resized"):
+            buf.size
+        new.free()
+
+
+def test_migrate_keeps_handle_valid():
+    with make_session() as sess:
+        buf = sess.alloc(512, ecxl.LOCAL_MEMORY)
+        buf.write(np.full(512, 7, np.uint8))
+        addr_before = buf.address
+        same = buf.migrate(ecxl.REMOTE_MEMORY)
+        assert same is buf and buf.valid and not buf.is_local
+        assert buf.address != addr_before        # address moved under the handle
+        assert np.all(buf.read(0, 512) == 7)
+
+
+def test_recycled_slot_rejects_old_generation():
+    with make_session() as sess:
+        old = sess.alloc(64, ecxl.LOCAL_MEMORY)
+        old.free()
+        new = sess.alloc(64, ecxl.LOCAL_MEMORY)  # recycles old's table slot
+        assert new.handle[0] == old.handle[0]
+        assert new.handle[1] == old.handle[1] + 1
+        with pytest.raises(StaleHandleError, match="use-after-free"):
+            old.read(0, 8)
+        assert new.valid                          # the new occupant is untouched
+
+
+def test_stale_handle_rejected_at_submit_boundary():
+    with make_session() as sess:
+        buf = sess.alloc(64, ecxl.LOCAL_MEMORY)
+        buf.free()
+        with pytest.raises(StaleHandleError):
+            sess.submit(MigrateOp(buf, ecxl.REMOTE_MEMORY))
+        assert sess.pending_ops == 0
+
+
+# ------------------------------------------------------------------ policy injection
+def test_promotion_policy_injected_into_middleware():
+    with make_session(promotion=Policy2()) as sess:
+        kv = KVStore(sess, local_capacity_objects=1)
+        kv.put("a", b"a")
+        kv.put("b", b"b")              # a demoted
+        for _ in range(3):
+            assert kv.get("a") == b"a"
+        assert kv.tier_of("a") == ecxl.REMOTE_MEMORY   # Policy2: never promoted
+
+
+def test_placement_policy_injected_at_construction():
+    fabric = Fabric(num_hosts=2, pool_ports=4)
+    placement = CongestionAwarePlacement(fallback_port=2)
+    with make_session(num_hosts=2, fabric=fabric, placement=placement) as sess:
+        assert sess.placement is placement
+        buf = sess.alloc(4096, ecxl.REMOTE_MEMORY)     # idle fabric -> fallback
+        assert sess.lib.allocations()[buf.address].port == 2
+
+
+# ------------------------------------------------------------------ async queue
+def test_async_write_then_read_ordering():
+    with make_session() as sess:
+        buf = sess.alloc(128, ecxl.REMOTE_MEMORY)
+        t_w = sess.submit(WriteOp(buf, np.full(128, 3, np.uint8)))
+        t_r = sess.submit(ReadOp(buf, 0, 128))
+        assert sess.pending_ops == 2 and not t_w.done()
+        makespan = sess.flush()
+        assert makespan > 0 and sess.pending_ops == 0
+        assert t_w.result() is True
+        assert np.all(t_r.result() == 3)      # same-batch read observes the write
+
+
+def test_async_result_forces_flush():
+    with make_session() as sess:
+        buf = sess.alloc(64, ecxl.LOCAL_MEMORY)
+        ticket = sess.submit(MemsetOp(buf, 0xAB))
+        assert not ticket.done()
+        assert ticket.result() is buf          # result() flushes implicitly
+        assert np.all(buf.read(0, 64) == 0xAB)
+
+
+def test_async_batch_overlaps_on_fabric():
+    """The acceptance-criterion shape: N=8 concurrent cross-host migrates finish
+    in modeled time strictly less than the sum of serial v1 migrates."""
+    n = 8
+    page = 1 << 18
+
+    lib = EmuCXL()
+    lib.init(4 * page, 1 << 24, num_hosts=n, fabric=Fabric(num_hosts=n))
+    serial = 0.0
+    for h in range(n):
+        addr = lib.alloc(page, ecxl.LOCAL_MEMORY, host=h)
+        before = lib.modeled_time[ecxl.REMOTE_MEMORY]
+        lib.migrate(addr, ecxl.LOCAL_MEMORY, (h + 1) % n)
+        serial += lib.modeled_time[ecxl.REMOTE_MEMORY] - before
+    lib.exit()
+
+    with CXLSession(4 * page, 1 << 24, num_hosts=n,
+                    fabric=Fabric(num_hosts=n)) as sess:
+        bufs = [sess.alloc(page, ecxl.LOCAL_MEMORY, host=h) for h in range(n)]
+        for h, b in enumerate(bufs):
+            b.write(np.full(page, h, np.uint8))
+            sess.submit(MigrateOp(b, ecxl.LOCAL_MEMORY, (h + 1) % n))
+        makespan = sess.flush()
+        for h, b in enumerate(bufs):           # data + placement survived the move
+            assert b.host == (h + 1) % n
+            assert np.all(b.read(0, 16) == h)
+    assert makespan < serial
+
+
+def test_async_batch_failure_rolls_back():
+    """A mid-batch quota failure frees staged destinations, deregisters fabric
+    transfers, and fails every ticket; sources stay intact."""
+    fabric = Fabric(num_hosts=2, pool_ports=2)
+    with make_session(num_hosts=2, fabric=fabric,
+                      host_quota=6000) as sess:
+        a = sess.alloc(4096, ecxl.LOCAL_MEMORY, host=0)
+        b = sess.alloc(4096, ecxl.LOCAL_MEMORY, host=0)
+        t1 = sess.submit(MigrateOp(a, ecxl.REMOTE_MEMORY))
+        t2 = sess.submit(MigrateOp(b, ecxl.REMOTE_MEMORY))  # blows the 6000B quota
+        with pytest.raises(QuotaExceeded):
+            sess.flush()
+        assert t1.done() and t2.done()
+        with pytest.raises(QuotaExceeded):
+            t1.result()
+        assert sess.stats(1) == 0               # no leaked pool bytes
+        assert fabric.idle()                    # no orphaned in-flight transfers
+        assert a.valid and a.is_local and b.valid and b.is_local
+
+
+def test_migrate_batch_sugar():
+    with make_session() as sess:
+        bufs = [sess.alloc(4096, ecxl.LOCAL_MEMORY) for _ in range(4)]
+        makespan = sess.migrate_batch([(b, ecxl.REMOTE_MEMORY) for b in bufs])
+        assert makespan > 0
+        assert all(not b.is_local for b in bufs)
+
+
+def test_migrate_batch_unwinds_on_staging_failure():
+    """A bad move mid-batch withdraws the already-enqueued moves: nothing stays
+    pending to execute behind the caller's back on a later flush."""
+    with make_session() as sess:
+        good = sess.alloc(64, ecxl.LOCAL_MEMORY)
+        bad = sess.alloc(64, ecxl.LOCAL_MEMORY)
+        bad.free()
+        with pytest.raises(StaleHandleError):
+            sess.migrate_batch([(good, ecxl.REMOTE_MEMORY),
+                                (bad, ecxl.REMOTE_MEMORY)])
+        assert sess.pending_ops == 0
+        sess.flush()
+        assert good.is_local                   # the good move never executed
+
+
+def test_write_op_snapshots_payload_at_submit():
+    with make_session() as sess:
+        buf = sess.alloc(16, ecxl.LOCAL_MEMORY)
+        data = np.zeros(16, np.uint8)
+        sess.submit(WriteOp(buf, data))
+        data[:] = 7                            # reusing the staging array is fine
+        sess.flush()
+        assert np.all(buf.read(0, 16) == 0)
+
+
+# ------------------------------------------------------------------ fabric accounting
+def _link_bytes(stats, name):
+    return stats[name]["bytes_carried"]
+
+
+def test_cross_host_memcpy_charges_both_uplinks():
+    fabric = Fabric(num_hosts=2, pool_ports=1)
+    with make_session(num_hosts=2, fabric=fabric) as sess:
+        src = sess.alloc(8192, ecxl.LOCAL_MEMORY, host=0)
+        dst = sess.alloc(8192, ecxl.LOCAL_MEMORY, host=1)
+        src.write(np.arange(64, dtype=np.uint8))
+        sess.memcpy(dst, src, 8192)
+        stats = sess.fabric_stats()
+        assert _link_bytes(stats, "host0") == 8192
+        assert _link_bytes(stats, "host1") == 8192
+        assert _link_bytes(stats, "pool0") == 0
+        assert np.array_equal(dst.read(0, 64), np.arange(64, dtype=np.uint8))
+
+
+def test_remote_memset_charges_pool_path():
+    fabric = Fabric(num_hosts=2, pool_ports=1)
+    with make_session(num_hosts=2, fabric=fabric) as sess:
+        buf = sess.alloc(4096, ecxl.REMOTE_MEMORY, host=1)
+        buf.memset(0xFF)
+        stats = sess.fabric_stats()
+        assert _link_bytes(stats, "host1") == 4096   # owner's uplink
+        assert _link_bytes(stats, "pool0") == 4096   # backing pool port
+        assert np.all(buf.read(0, 16) == 0xFF)       # the read adds more traffic
+
+
+def test_async_cross_host_memcpy_and_memset_accounting():
+    """Satellite: the async path charges the same links the sync path does."""
+    fabric = Fabric(num_hosts=2, pool_ports=1)
+    with make_session(num_hosts=2, fabric=fabric) as sess:
+        src = sess.alloc(4096, ecxl.LOCAL_MEMORY, host=0)
+        dst = sess.alloc(4096, ecxl.LOCAL_MEMORY, host=1)
+        rem = sess.alloc(2048, ecxl.REMOTE_MEMORY, host=0)
+        t1 = sess.submit(MemcpyOp(dst, src, 4096))
+        t2 = sess.submit(MemsetOp(rem, 1))
+        sess.flush()
+        assert t1.result() is True and t2.result() is rem
+        stats = sess.fabric_stats()
+        assert _link_bytes(stats, "host0") == 4096 + 2048  # memcpy src + memset
+        assert _link_bytes(stats, "host1") == 4096
+        assert _link_bytes(stats, "pool0") == 2048
+
+
+def test_resize_routes_copy_through_fabric():
+    """Satellite: pooled-block resizes show up in pool-port occupancy stats."""
+    fabric = Fabric(num_hosts=1, pool_ports=1)
+    with make_session(fabric=fabric) as sess:
+        buf = sess.alloc(8192, ecxl.REMOTE_MEMORY)
+        alloc_traffic = _link_bytes(sess.fabric_stats(), "pool0")
+        new = buf.resize(16384)
+        moved = _link_bytes(sess.fabric_stats(), "pool0") - alloc_traffic
+        assert moved == 8192                  # the copied prefix crossed the port
+        assert new.size == 16384 and not new.is_local
+
+
+# ------------------------------------------------------------------ concurrency
+def test_concurrent_alloc_free_never_aliases_handles():
+    """Racing threads interleaving alloc/free must never mint aliasing handles —
+    the handle table mutates under the lib's lock (v1's serialization level)."""
+    import threading
+
+    with make_session(local_capacity=1 << 24) as sess:
+        errors = []
+
+        def worker(seed):
+            rng = np.random.default_rng(seed)
+            mine = []
+            try:
+                for _ in range(150):
+                    if mine and rng.random() < 0.4:
+                        mine.pop(int(rng.integers(len(mine)))).free()
+                    else:
+                        mine.append(sess.alloc(int(rng.integers(1, 256)),
+                                               ecxl.LOCAL_MEMORY))
+                for b in mine:
+                    b.free()
+            except Exception as e:   # pragma: no cover - failure diagnostics
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert sess.live_buffers() == 0 and sess.stats(0) == 0
+
+
+# ------------------------------------------------------------------ rebind guard
+def test_slab_lib_rebind_blocked_with_live_slabs():
+    from repro.core.slab import SlabAllocator
+
+    with make_session() as a, make_session() as b:
+        slab = SlabAllocator(a, slab_pages=1)
+        ptr = slab.alloc(64, ecxl.LOCAL_MEMORY)
+        with pytest.raises(EmuCXLError, match="live slab"):
+            slab.lib = b.lib          # would strand ptr's storage on session a
+        slab.free(ptr)
+        slab.lib = b.lib              # empty allocator: rebinding is fine
+        slab.alloc(64, ecxl.LOCAL_MEMORY)
+        assert b.stats(0) > 0
+
+
+# ------------------------------------------------------------------ offload bridge
+def test_stage_manifest_charges_pool():
+    man = OffloadManifest()
+    man.entries.append(OffloadEntry("moments", 4096, "resident"))
+    man.entries.append(OffloadEntry("master", 2048, "oneway"))
+    with make_session() as sess:
+        staged = man.stage(sess)
+        assert set(staged) == {"moments", "master"}
+        assert all(not b.is_local for b in staged.values())
+        assert sess.pool_stats()["used"] == 4096 + 2048

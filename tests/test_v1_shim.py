@@ -1,0 +1,198 @@
+"""v1 compatibility shim conformance: the Table II facade over the default session.
+
+The facade must behave exactly as the paper-fidelity v1 surface did (a replay of
+``examples/quickstart.py`` semantics), while the generation-counted handle table
+underneath upgrades silent address reuse into clear errors.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    LOCAL_MEMORY, REMOTE_MEMORY, EmuCXLError, EmuQueue, KVStore, Policy1,
+    SlabAllocator, default_instance, default_session, emucxl_alloc, emucxl_exit,
+    emucxl_free, emucxl_get_numa_node, emucxl_get_size, emucxl_init,
+    emucxl_is_local, emucxl_memcpy, emucxl_memset, emucxl_migrate,
+    emucxl_migrate_batch, emucxl_read, emucxl_resize, emucxl_stats, emucxl_write,
+)
+
+
+@pytest.fixture()
+def v1():
+    emucxl_init(local_capacity=1 << 24, remote_capacity=1 << 26)
+    yield
+    try:
+        emucxl_exit()
+    except EmuCXLError:
+        pass
+
+
+# ------------------------------------------------------------------ quickstart replay
+def test_quickstart_replay(v1):
+    """examples/quickstart.py, step by step, with its printed claims asserted."""
+    # --- raw API: allocate on each tier, move data across ------------------------
+    local = emucxl_alloc(4096, LOCAL_MEMORY)
+    remote = emucxl_alloc(4096, REMOTE_MEMORY)
+    assert emucxl_is_local(local) and not emucxl_is_local(remote)
+
+    emucxl_write(np.arange(64, dtype=np.uint8), 0, local)
+    assert np.array_equal(emucxl_read(local, 0, 8), np.arange(8, dtype=np.uint8))
+
+    moved = emucxl_migrate(local, REMOTE_MEMORY)
+    assert emucxl_get_numa_node(moved) == REMOTE_MEMORY
+    assert emucxl_stats(0) == 0 and emucxl_stats(1) == 2 * 4096
+    assert np.array_equal(emucxl_read(moved, 0, 8), np.arange(8, dtype=np.uint8))
+    emucxl_free(moved)
+    emucxl_free(remote)
+    assert emucxl_stats(1) == 0
+
+    # --- direct-access usage: the paper's queue (§IV-A) ---------------------------
+    q = EmuQueue(policy=REMOTE_MEMORY)
+    for i in range(5):
+        q.enqueue(i * 10)
+    assert [q.dequeue() for _ in range(5)] == [0, 10, 20, 30, 40]
+
+    # --- middleware: KV store with Policy1 promotion (§IV-B) ----------------------
+    kv = KVStore(local_capacity_objects=2, policy=Policy1())
+    for key in ("a", "b", "c"):
+        kv.put(key, f"value-{key}".encode())
+    assert kv.tier_of("a") == REMOTE_MEMORY          # LRU-demoted by "c"
+    assert kv.get("a") == b"value-a"
+    assert kv.tier_of("a") == LOCAL_MEMORY           # Policy1 promoted on hit
+    assert kv.stats.local_hits == 0 and kv.stats.remote_hits == 1
+
+    # --- middleware: slab allocator (§IV-B, implemented) ---------------------------
+    slab = SlabAllocator(default_instance())
+    ptrs = [slab.alloc(100, LOCAL_MEMORY) for _ in range(8)]
+    slab.write(ptrs[0], np.full(100, 7, np.uint8))
+    assert ptrs[0].size_class == 128
+    assert np.all(slab.read(ptrs[0], 100) == 7)
+    assert 0.0 <= slab.fragmentation(LOCAL_MEMORY) < 1.0
+    for p in ptrs:
+        slab.free(p)
+
+
+def test_resize_and_memops_conformance(v1):
+    a = emucxl_alloc(64, LOCAL_MEMORY)
+    emucxl_write(np.arange(64, dtype=np.uint8), 0, a)
+    b = emucxl_resize(a, 128)
+    assert emucxl_get_size(b) == 128
+    assert np.array_equal(emucxl_read(b, 0, 64), np.arange(64, dtype=np.uint8))
+
+    c = emucxl_alloc(64, REMOTE_MEMORY)
+    emucxl_memset(c, -1, 64)
+    assert np.all(emucxl_read(c, 0, 64) == 255)
+    emucxl_memcpy(c, b, 32)
+    assert np.array_equal(emucxl_read(c, 0, 32), np.arange(32, dtype=np.uint8))
+
+
+def test_migrate_batch_through_shim(v1):
+    addrs = [emucxl_alloc(4096, LOCAL_MEMORY) for _ in range(4)]
+    for i, a in enumerate(addrs):
+        emucxl_write(np.full(16, i, np.uint8), 0, a)
+    addr_map, makespan = emucxl_migrate_batch(
+        [(a, REMOTE_MEMORY) for a in addrs]
+    )
+    assert makespan > 0 and set(addr_map) == set(addrs)
+    for i, a in enumerate(addrs):
+        assert emucxl_get_numa_node(addr_map[a]) == REMOTE_MEMORY
+        assert np.all(emucxl_read(addr_map[a], 0, 16) == i)
+
+
+# ------------------------------------------------------------------ staleness upgrades
+def test_shim_use_after_free_and_double_free(v1):
+    a = emucxl_alloc(256, LOCAL_MEMORY)
+    emucxl_free(a)
+    with pytest.raises(EmuCXLError, match="use-after-free"):
+        emucxl_read(a, 0, 16)
+    with pytest.raises(EmuCXLError, match="double free"):
+        emucxl_free(a)
+
+
+def test_shim_stale_after_resize_and_migrate(v1):
+    a = emucxl_alloc(64, LOCAL_MEMORY)
+    b = emucxl_resize(a, 128)
+    with pytest.raises(EmuCXLError, match="superseded by resize"):
+        emucxl_read(a, 0, 8)
+    c = emucxl_migrate(b, REMOTE_MEMORY)
+    with pytest.raises(EmuCXLError, match="superseded by migrate"):
+        emucxl_get_size(b)
+    assert emucxl_get_size(c) == 128
+
+
+def test_shim_never_allocated_address(v1):
+    with pytest.raises(EmuCXLError, match="invalid address"):
+        emucxl_read(0xDEAD000, 0, 4)
+
+
+def test_shim_free_size_validation(v1):
+    a = emucxl_alloc(100, LOCAL_MEMORY)
+    with pytest.raises(EmuCXLError, match="size mismatch"):
+        emucxl_free(a, 200)
+    emucxl_free(a, 100)
+
+
+def test_shim_adopts_direct_default_instance_addresses(v1):
+    """Legacy pattern: alloc on default_instance(), operate via the facade."""
+    addr = default_instance().alloc(64, LOCAL_MEMORY)
+    emucxl_write(np.arange(8, dtype=np.uint8), 0, addr)
+    assert np.array_equal(emucxl_read(addr, 0, 8), np.arange(8, dtype=np.uint8))
+    assert emucxl_is_local(addr)
+    emucxl_free(addr)
+    with pytest.raises(EmuCXLError, match="use-after-free"):
+        emucxl_read(addr, 0, 4)
+
+
+def test_shim_adopts_directly_initialized_default_instance():
+    """Legacy interop: default_instance().init() + emucxl_* free functions."""
+    default_instance().init(local_capacity=1 << 20, remote_capacity=1 << 20)
+    try:
+        addr = emucxl_alloc(64, LOCAL_MEMORY)
+        emucxl_write(np.arange(8, dtype=np.uint8), 0, addr)
+        assert np.array_equal(emucxl_read(addr, 0, 8), np.arange(8, dtype=np.uint8))
+        assert emucxl_stats(0) == 64
+    finally:
+        emucxl_exit()
+    assert not default_instance()._initialized   # exit closed the adopted lib
+
+
+def test_shim_migrate_batch_partial_failure_leaves_nothing_pending(v1):
+    a = emucxl_alloc(64, LOCAL_MEMORY)
+    with pytest.raises(EmuCXLError, match="invalid address"):
+        emucxl_migrate_batch([(a, REMOTE_MEMORY), (0xDEAD000, REMOTE_MEMORY)])
+    assert default_session().pending_ops == 0
+    assert emucxl_get_numa_node(a) == LOCAL_MEMORY   # the good move never ran
+
+
+def test_shim_migrate_batch_duplicate_address(v1):
+    """The same address listed twice = chained migrates; both entries resolve to
+    the final address, and the facade book stays consistent."""
+    a = emucxl_alloc(4096, LOCAL_MEMORY)
+    emucxl_write(np.full(16, 5, np.uint8), 0, a)
+    addr_map, _ = emucxl_migrate_batch([(a, REMOTE_MEMORY), (a, REMOTE_MEMORY)])
+    final = addr_map[a]
+    assert emucxl_get_numa_node(final) == REMOTE_MEMORY
+    assert np.all(emucxl_read(final, 0, 16) == 5)
+    with pytest.raises(EmuCXLError, match="superseded by migrate"):
+        emucxl_read(a, 0, 4)
+
+
+# ------------------------------------------------------------------ session plumbing
+def test_default_session_lifecycle():
+    assert default_session() is None
+    emucxl_init(local_capacity=1 << 20, remote_capacity=1 << 20)
+    try:
+        sess = default_session()
+        assert sess is not None and sess.lib is default_instance()
+        assert emucxl_alloc(64, LOCAL_MEMORY) > 0
+        assert sess.live_buffers() == 1
+    finally:
+        emucxl_exit()
+    assert default_session() is None
+    with pytest.raises(EmuCXLError, match="not initialized"):
+        emucxl_alloc(64, LOCAL_MEMORY)
+
+
+def test_double_init_rejected_by_shim(v1):
+    with pytest.raises(EmuCXLError, match="called twice"):
+        emucxl_init()
