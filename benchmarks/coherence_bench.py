@@ -1,0 +1,233 @@
+"""Coherent shared segments: the shared-prefix KV scenario + false sharing.
+
+Two experiments over core/coherence.py:
+
+1. **Shared common-prefix KV** (the serving scenario): N hosts all serve
+   prompts with one common prefix. Baseline keeps a private cold copy of the
+   prefix KV pages per host (slab-allocated in the pool, re-DMA'd on every new
+   sequence); the shared variant publishes ONE coherent segment that every
+   host imports through its own mapping — first import misses (page fetches on
+   the fabric), steady-state imports hit the host's cached copy. Asserted:
+   strictly less pool memory at >= 2 hosts, coherence traffic visible on the
+   fabric links, and a modeled steady-state speedup > 1.
+
+2. **False sharing**: two hosts alternately write small disjoint regions that
+   land in the SAME coherence page vs in different pages. Same bytes written;
+   the same-page variant ping-pongs M ownership (writeback + invalidation +
+   refetch per write — an invalidation storm) while the split variant settles
+   into silent M hits.
+
+``--json PATH`` dumps the headline numbers (bytes shared vs copied,
+invalidation counts, modeled speedup) for the CI artifact; ``--smoke`` runs a
+seconds-scale configuration and enforces the acceptance asserts.
+
+CSV columns: name,us_per_call,derived — consistent with benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import emucxl as ecxl
+from repro.core.api import CXLSession
+from repro.core.fabric import Fabric
+from repro.core.policy import SharingAwarePlacement
+from repro.serving.kv_manager import PagedKVPool, SharedPrefixKV
+
+# Tiny KV geometry: one KV page = 2 * L * page * K * hd * 4B = 4 KiB.
+_GEOM = dict(num_layers=2, page_size=8, kv_heads=2, head_dim=16)
+_KV_PAGE_BYTES = 2 * 2 * 8 * 2 * 16 * 4
+
+
+def _modeled(sess: CXLSession) -> float:
+    return sum(sess.modeled_time.values())
+
+
+def _fill_and_demote_prefix(pool: PagedKVPool, seq_id: int, pages: int) -> None:
+    for p in range(pages):
+        pool.alloc_page(seq_id, p)
+    for p in range(pages):
+        pool.demote(seq_id, p)
+
+
+def bench_shared_prefix(num_hosts: int, prefix_pages: int = 4,
+                        rounds: int = 3) -> Dict[str, object]:
+    """Per-host private prefix copies vs one coherent shared segment."""
+    prefix_bytes = prefix_pages * _KV_PAGE_BYTES
+
+    # ---- baseline: every host keeps (and re-DMAs) its own pooled copy
+    with CXLSession(1 << 24, 1 << 26, num_hosts=num_hosts,
+                    fabric=Fabric(num_hosts=num_hosts, pool_ports=2)) as sess:
+        pools = [PagedKVPool(num_slots=prefix_pages * 2, host=h, session=sess,
+                             **_GEOM) for h in range(num_hosts)]
+        for h, pool in enumerate(pools):
+            _fill_and_demote_prefix(pool, seq_id=0, pages=prefix_pages)
+        bytes_copied = sess.stats(ecxl.REMOTE_MEMORY)
+        t0 = _modeled(sess)
+        for _ in range(rounds):
+            for pool in pools:
+                # a new sequence arrives on each host: promote the private
+                # copy back to HBM, then give the slots back
+                for p in range(prefix_pages):
+                    pool.promote(0, p)
+                for p in range(prefix_pages):
+                    pool.demote(0, p)
+        baseline_time = _modeled(sess) - t0
+
+    # ---- shared: one coherent segment, every host imports through it
+    with CXLSession(1 << 24, 1 << 26, num_hosts=num_hosts,
+                    fabric=Fabric(num_hosts=num_hosts, pool_ports=2),
+                    placement=SharingAwarePlacement()) as sess:
+        shared = SharedPrefixKV(sess, num_pages=prefix_pages, home_host=0,
+                                **_GEOM)
+        pools = [PagedKVPool(num_slots=prefix_pages * 2, host=h, session=sess,
+                             **_GEOM) for h in range(num_hosts)]
+        for pool in pools:
+            pool.attach_shared_prefix(shared)
+        # host 0 prefills the prefix hot and publishes it once
+        publisher = pools[0]
+        for p in range(prefix_pages):
+            publisher.alloc_page(0, p)
+        shared.publish(publisher, seq_id=0)
+        publisher.free_sequence(0)
+        bytes_shared = sess.stats(ecxl.REMOTE_MEMORY)
+        t0 = _modeled(sess)
+        seq = 1
+        for _ in range(rounds):
+            for pool in pools:
+                pool.import_prefix(seq)      # miss once, then cache hits
+                pool.free_sequence(seq)
+                seq += 1
+        shared_time = _modeled(sess) - t0
+        coh = sess.coherence_stats()["total"]
+        fabric_stats = sess.fabric_stats()
+        # a prefix update back-invalidates every host caching the pages
+        inval_before = coh["invalidations"]
+        shared.update(np.zeros(_KV_PAGE_BYTES, np.uint8), page_idx=0)
+        inval_after = sess.coherence_stats()["total"]["invalidations"]
+
+    coherence_link_bytes = {
+        name: s["bytes_carried"] for name, s in fabric_stats.items()
+        if s["bytes_carried"] > 0
+    }
+    return {
+        "num_hosts": num_hosts,
+        "prefix_bytes": prefix_bytes,
+        "bytes_copied": int(bytes_copied),
+        "bytes_shared": int(bytes_shared),
+        "bytes_saved": int(bytes_copied - bytes_shared),
+        "baseline_time_s": baseline_time,
+        "shared_time_s": shared_time,
+        "modeled_speedup": (baseline_time / shared_time
+                            if shared_time > 0 else float("inf")),
+        "read_hits": int(coh["read_hits"]),
+        "read_misses": int(coh["read_misses"]),
+        "forwards": int(coh["forwards"]),
+        "invalidations_on_update": int(inval_after - inval_before),
+        "coherence_link_bytes": coherence_link_bytes,
+    }
+
+
+def bench_false_sharing(writes_per_host: int = 16) -> Dict[str, object]:
+    """Two hosts alternately writing 64B regions: same page vs split pages."""
+    results = {}
+    for variant, offsets in (
+        ("same_page", (0, 64)),                  # both land in page 0
+        ("split_pages", (0, 4096)),              # page 0 vs page 1
+    ):
+        with CXLSession(1 << 22, 1 << 24, num_hosts=2,
+                        fabric=Fabric(num_hosts=2, pool_ports=1)) as sess:
+            seg = sess.share(8192, host=0, page_bytes=4096)
+            a = sess.attach(seg, host=0)
+            b = sess.attach(seg, host=1)
+            payload = np.arange(64, dtype=np.uint8)
+            t0 = _modeled(sess)
+            for _ in range(writes_per_host):
+                a.write(payload, offset=offsets[0])
+                b.write(payload, offset=offsets[1])
+            results[variant] = {
+                "modeled_time_s": _modeled(sess) - t0,
+                "invalidations": seg.stats.invalidations,
+                "writebacks": seg.stats.writebacks,
+            }
+    same, split = results["same_page"], results["split_pages"]
+    return {
+        "writes_per_host": writes_per_host,
+        "same_page": same,
+        "split_pages": split,
+        "storm_ratio": (same["modeled_time_s"] / split["modeled_time_s"]
+                        if split["modeled_time_s"] > 0 else float("inf")),
+    }
+
+
+def bench(hosts=(2, 4), prefix_pages: int = 4, rounds: int = 3,
+          writes_per_host: int = 16, check: bool = False
+          ) -> tuple[List[str], Dict[str, object]]:
+    """Returns (CSV rows, JSON-able artifact payload)."""
+    rows: List[str] = []
+    artifact: Dict[str, object] = {"shared_prefix": [], "false_sharing": None}
+    for n in hosts:
+        r = bench_shared_prefix(n, prefix_pages, rounds)
+        artifact["shared_prefix"].append(r)
+        rows.append(
+            f"coherence_shared_prefix_h{n},0,"
+            f"bytes_shared={r['bytes_shared']},bytes_copied={r['bytes_copied']},"
+            f"speedup={r['modeled_speedup']:.2f}x,"
+            f"read_hits={r['read_hits']},read_misses={r['read_misses']},"
+            f"invalidations_on_update={r['invalidations_on_update']}"
+        )
+        if check and n >= 2:
+            assert r["bytes_shared"] < r["bytes_copied"], (
+                f"shared prefix must use strictly less pool memory at {n} "
+                f"hosts ({r['bytes_shared']} vs {r['bytes_copied']})"
+            )
+            assert r["modeled_speedup"] > 1.0, (
+                f"steady-state imports must beat per-host re-DMA "
+                f"({r['modeled_speedup']:.2f}x)"
+            )
+            assert r["coherence_link_bytes"], "no coherence traffic on fabric"
+            assert r["invalidations_on_update"] >= n - 1, (
+                "a prefix update must back-invalidate the caching hosts"
+            )
+    fs = bench_false_sharing(writes_per_host)
+    artifact["false_sharing"] = fs
+    rows.append(
+        f"coherence_false_sharing,0,"
+        f"storm_ratio={fs['storm_ratio']:.2f}x,"
+        f"same_page_invals={fs['same_page']['invalidations']},"
+        f"split_invals={fs['split_pages']['invalidations']}"
+    )
+    if check:
+        assert fs["same_page"]["invalidations"] > fs["split_pages"]["invalidations"], (
+            "false sharing must produce an invalidation storm"
+        )
+        assert fs["storm_ratio"] > 1.0
+    return rows, artifact
+
+
+SMOKE = dict(hosts=(2, 4), prefix_pages=2, rounds=2, writes_per_host=8,
+             check=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast configuration for CI (asserts acceptance)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the artifact payload (bytes shared vs copied, "
+                         "invalidations, speedup) as JSON")
+    args = ap.parse_args()
+    rows, artifact = bench(**SMOKE) if args.smoke else bench(check=True)
+    print("name,us_per_call,derived")
+    print("\n".join(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,12 +20,12 @@ def main() -> None:
                     help="tiny fast CI configuration (seconds, CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: queue,policy,fabric,api,"
-                         "kernels,offload,serving")
+                         "coherence,kernels,offload,serving")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
     selected = set(args.only.split(",")) if args.only else None
-    smoke_capable = {"queue", "policy", "fabric", "api"}
+    smoke_capable = {"queue", "policy", "fabric", "api", "coherence"}
     if args.smoke:
         if selected is None:
             # Smoke gates the pure-model benches; kernel/serving compile paths
@@ -56,6 +56,13 @@ def main() -> None:
             rows += api_overhead_bench.bench(**api_overhead_bench.SMOKE)
         else:
             rows += api_overhead_bench.bench()
+
+    if want("coherence"):
+        from benchmarks import coherence_bench
+        if args.smoke:
+            rows += coherence_bench.bench(**coherence_bench.SMOKE)[0]
+        else:
+            rows += coherence_bench.bench(check=True)[0]
 
     if want("queue"):
         from benchmarks import queue_latency

@@ -33,6 +33,7 @@ from typing import Dict, List, Optional, Union
 
 import numpy as np
 
+from repro.core.coherence import SharedSegment
 from repro.core.emucxl import (
     REMOTE_MEMORY,
     EmuCXL,
@@ -52,7 +53,7 @@ from repro.core.queue import (
 )
 
 __all__ = [
-    "CXLSession", "Buffer", "StaleHandleError", "as_session",
+    "CXLSession", "Buffer", "SharedSegment", "StaleHandleError", "as_session",
     "ReadOp", "WriteOp", "MigrateOp", "MemcpyOp", "MemsetOp", "Ticket", "OpQueue",
 ]
 
@@ -203,6 +204,48 @@ class CXLSession:
             new_address = self._lib.resize(old_address, size)
             self._table.retire(index, generation, "resized")
             return self._register(new_address)
+
+    # ------------------------------------------------------------------ shared segments
+    def share(self, size: int, host: int = 0, page_bytes: int = 4096,
+              writers=None) -> SharedSegment:
+        """Create a hardware-coherent shared segment (core/coherence.py).
+
+        One pooled copy of the bytes, charged once to `host`'s quota; any host
+        — in this session or another session wrapping the same ``EmuCXL`` —
+        can ``attach`` it. `writers` hints the expected writer hosts so a
+        sharing-aware placement can pick the segment's pool port."""
+        with self._lib._lock:
+            self._check_open()
+            return self._lib.share(size, host, page_bytes, writers)
+
+    def attach(self, segment: SharedSegment, host: int = 0) -> Buffer:
+        """Map `segment` for `host`; returns a Buffer over the shared bytes.
+
+        Reads and writes through the handle run the MESI-lite directory
+        protocol: misses fetch pages over the fabric, writes back-invalidate
+        peer hosts, and all of it contends with ordinary DMAs."""
+        with self._lib._lock:
+            self._check_open()
+            return self._register(self._lib.attach(segment, host))
+
+    def detach(self, buf: Buffer) -> None:
+        """Unmap a segment attachment; the handle becomes stale. The host's
+        last detach flushes its dirty pages back over the fabric."""
+        with self._lib._lock:
+            self._check_open()
+            index, generation = buf.handle
+            address = self._table.resolve(index, generation)
+            self._lib.detach(address)
+            self._table.retire(index, generation, "detached")
+
+    def destroy(self, segment: SharedSegment) -> None:
+        """Release a fully-detached segment's pooled backing."""
+        with self._lib._lock:
+            self._check_open()
+            self._lib.destroy_segment(segment)
+
+    def coherence_stats(self) -> Dict[str, object]:
+        return self._lib.coherence_stats()
 
     # ------------------------------------------------------------------ sync ops
     def memcpy(self, dst: Buffer, src: Buffer, size: int) -> Buffer:

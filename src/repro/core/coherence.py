@@ -1,0 +1,300 @@
+"""Hardware-coherent shared segments: a directory-based MESI-lite protocol.
+
+CXL 3.0's headline feature over RDMA-era disaggregation is *hardware-coherent*
+shared memory: several hosts map the same pooled bytes and the fabric keeps
+their caches coherent with back-invalidations, instead of software copying
+buffers around (CXL-DMSim, arXiv 2411.02282; the ETH CXL programming model,
+arXiv 2407.16300). This module models that protocol at **page granularity**:
+
+  * a ``SharedSegment`` is one pooled allocation that N emulated hosts attach
+    to — the pool holds ONE copy of the bytes no matter how many hosts map it;
+  * a ``Directory`` tracks per-(page, host) state, MESI-lite: ``M`` (modified,
+    exclusive dirty copy in that host's cache), ``S`` (shared clean copy),
+    invalid = absence of an entry (no E state: first read lands in S, like a
+    directory protocol that cannot distinguish one sharer from many);
+  * state transitions emit **coherence messages** — back-invalidations, dirty
+    writebacks, and read fetches — each sized and routed as a real transfer on
+    the fabric (core/fabric.py), so coherence traffic contends with ordinary
+    DMAs and shows up in link occupancy and modeled time.
+
+Protocol events (what `plan_read`/`plan_write` return as routed messages):
+
+  ============================  ==========================  ====================
+  event                         trigger                     fabric route / size
+  ============================  ==========================  ====================
+  read fetch                    reader in I                 pool port -> reader
+                                                            uplink, page bytes
+  dirty-read forward            reader in I, peer holds M   owner uplink -> pool
+                                (writeback M -> S first)    port, page bytes
+  back-invalidation             writer upgrades, peer in S  pool port -> peer
+                                                            uplink, MSG_BYTES
+  dirty writeback + invalidate  writer upgrades, peer in M  peer uplink -> pool
+                                                            port, page bytes
+  write fetch (RFO)             writer in I                 pool port -> writer
+                                                            uplink, page bytes
+  ============================  ==========================  ====================
+
+Cache hits (reader in M/S, writer in M) emit nothing and cost only the local
+tier's DMA time — that asymmetry is exactly what makes false sharing visible:
+two hosts alternately writing the same page ping-pong M between them, paying a
+writeback + invalidation + fetch per write (an *invalidation storm*), while the
+same writes to disjoint pages settle into silent M hits.
+
+The directory itself lives with the pool (the paper's switch-side metadata);
+EmuCXL consults it inside the same lock that serializes all other operations,
+so no separate synchronization is needed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+MODIFIED = "M"
+SHARED = "S"
+
+# Control-message payload for an invalidation (a snoop/back-invalidate carries a
+# physical address + opcode — one flit, modeled as a cache line on the wire).
+MSG_BYTES = 64
+
+
+class CoherenceError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class CoherenceStats:
+    """Cumulative protocol-event counts for one segment (and fleet-wide when
+    summed across segments by ``EmuCXL.coherence_stats``)."""
+
+    read_hits: int = 0
+    write_hits: int = 0
+    read_misses: int = 0
+    write_misses: int = 0          # write needed an upgrade or a fetch
+    invalidations: int = 0         # back-invalidations sent to S-state peers
+    writebacks: int = 0            # dirty M pages flushed to the pool
+    forwards: int = 0              # dirty-read forwards (reader hit a peer's M)
+    bytes_moved: int = 0           # page payloads moved by the protocol
+    msg_bytes: int = 0             # control-message bytes (invalidations)
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    def merge(self, other: "CoherenceStats") -> "CoherenceStats":
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class CoherenceMsg:
+    """One protocol message to route over the fabric: (links, payload bytes)."""
+
+    path: Tuple[str, ...]
+    nbytes: int
+    kind: str                      # fetch | forward | invalidate | writeback
+
+
+class Directory:
+    """Per-(page, host) M/S state for one segment.
+
+    Sparse: pages nobody caches have no entry (all-invalid). At most one host
+    may hold a page in M, and M excludes any S entries — the class invariant
+    ``check()`` asserts in tests.
+    """
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._state: Dict[int, Dict[int, str]] = {}
+
+    def state(self, page: int, host: int) -> Optional[str]:
+        return self._state.get(page, {}).get(host)
+
+    def holders(self, page: int) -> Dict[int, str]:
+        return dict(self._state.get(page, {}))
+
+    def owner(self, page: int) -> Optional[int]:
+        """The host holding `page` in M, if any."""
+        for host, st in self._state.get(page, {}).items():
+            if st == MODIFIED:
+                return host
+        return None
+
+    def set_state(self, page: int, host: int, state: Optional[str]) -> None:
+        entry = self._state.setdefault(page, {})
+        if state is None:
+            entry.pop(host, None)
+            if not entry:
+                self._state.pop(page, None)
+        else:
+            entry[host] = state
+
+    def drop_host(self, page: int, host: int) -> None:
+        self.set_state(page, host, None)
+
+    def cached_pages(self, host: int) -> List[int]:
+        return [p for p, e in self._state.items() if host in e]
+
+    def check(self) -> None:
+        for page, entry in self._state.items():
+            owners = [h for h, st in entry.items() if st == MODIFIED]
+            if len(owners) > 1:
+                raise CoherenceError(f"page {page}: two M owners {owners}")
+            if owners and len(entry) > 1:
+                raise CoherenceError(
+                    f"page {page}: M at host {owners[0]} coexists with sharers "
+                    f"{sorted(h for h in entry if h != owners[0])}"
+                )
+
+
+class SharedSegment:
+    """One hardware-coherent pooled region, attachable by any emulated host.
+
+    Created by ``EmuCXL.share`` (v1) / ``CXLSession.share`` (v2). The segment
+    owns the single pooled copy of the data (`backing_addr` names the pool
+    allocation that pays the quota charge); each ``attach`` maps the same bytes
+    for one host without charging the pool again — the bytes-saved side of the
+    coherence trade that benchmarks/coherence_bench.py measures.
+    """
+
+    _next_id = 0
+
+    def __init__(self, size: int, page_bytes: int, backing_addr: int,
+                 home_host: int, port: int):
+        if page_bytes <= 0:
+            raise CoherenceError(f"invalid page_bytes {page_bytes}")
+        self.sid = SharedSegment._next_id
+        SharedSegment._next_id += 1
+        self.size = size
+        self.page_bytes = page_bytes
+        self.num_pages = -(-size // page_bytes)
+        self.backing_addr = backing_addr
+        self.home_host = home_host
+        self.port = port
+        self.directory = Directory(self.num_pages)
+        self.stats = CoherenceStats()
+        self.attachments: Set[int] = set()     # attachment addresses
+        self.attached_hosts: Dict[int, int] = {}   # host -> attachment count
+        self.destroyed = False
+        # Writer weight charged to the placement policy at share() time; paid
+        # back on destroy so port load doesn't accrete dead segments.
+        self.placement_weight = 0
+
+    # ------------------------------------------------------------------ geometry
+    def pages_for(self, offset: int, n: int) -> range:
+        if n <= 0:
+            return range(0, 0)
+        return range(offset // self.page_bytes,
+                     (offset + n - 1) // self.page_bytes + 1)
+
+    # ------------------------------------------------------------------ protocol
+    def _path(self, fabric, host: int) -> Tuple[str, ...]:
+        """Fabric route between `host`'s cache and this segment's pool port.
+
+        Without a fabric the path is empty — the message is still emitted so
+        the caller can charge the uncontended hw-constant fallback for it."""
+        return fabric.pool_path(host, self.port) if fabric is not None else ()
+
+    def plan_read(self, fabric, host: int, offset: int, n: int
+                  ) -> List[CoherenceMsg]:
+        """Directory transitions + protocol messages for `host` reading a range.
+
+        Mutates the directory (the read takes effect); the caller routes the
+        returned messages over the fabric (or charges hw constants for
+        empty-path messages when no fabric is attached)."""
+        msgs: List[CoherenceMsg] = []
+        d = self.directory
+        for page in self.pages_for(offset, n):
+            st = d.state(page, host)
+            if st in (MODIFIED, SHARED):
+                self.stats.read_hits += 1
+                continue
+            self.stats.read_misses += 1
+            owner = d.owner(page)
+            if owner is not None and owner != host:
+                # Dirty-read forward: the owner's cache has the only fresh copy;
+                # it is written back through the owner's uplink and the owner
+                # downgrades M -> S before the reader's fetch.
+                self.stats.forwards += 1
+                self.stats.writebacks += 1
+                self.stats.bytes_moved += self.page_bytes
+                msgs.append(CoherenceMsg(
+                    self._path(fabric, owner), self.page_bytes, "forward"))
+                d.set_state(page, owner, SHARED)
+            self.stats.bytes_moved += self.page_bytes
+            msgs.append(CoherenceMsg(
+                self._path(fabric, host), self.page_bytes, "fetch"))
+            d.set_state(page, host, SHARED)
+        return msgs
+
+    def plan_write(self, fabric, host: int, offset: int, n: int
+                   ) -> List[CoherenceMsg]:
+        """Directory transitions + protocol messages for `host` writing a range."""
+        msgs: List[CoherenceMsg] = []
+        d = self.directory
+        for page in self.pages_for(offset, n):
+            st = d.state(page, host)
+            if st == MODIFIED:
+                self.stats.write_hits += 1
+                continue
+            self.stats.write_misses += 1
+            for peer, peer_st in d.holders(page).items():
+                if peer == host:
+                    continue
+                if peer_st == MODIFIED:
+                    # Peer holds the only fresh copy: flush it to the pool,
+                    # then invalidate — the expensive half of false sharing.
+                    self.stats.writebacks += 1
+                    self.stats.bytes_moved += self.page_bytes
+                    msgs.append(CoherenceMsg(
+                        self._path(fabric, peer), self.page_bytes, "writeback"))
+                self.stats.invalidations += 1
+                self.stats.msg_bytes += MSG_BYTES
+                msgs.append(CoherenceMsg(
+                    self._path(fabric, peer), MSG_BYTES, "invalidate"))
+                d.drop_host(page, peer)
+            if st is None:
+                # Read-for-ownership: the writer needs the page's current bytes
+                # before modifying part of it.
+                self.stats.bytes_moved += self.page_bytes
+                msgs.append(CoherenceMsg(
+                    self._path(fabric, host), self.page_bytes, "fetch"))
+            d.set_state(page, host, MODIFIED)
+        return msgs
+
+    def plan_detach(self, fabric, host: int) -> List[CoherenceMsg]:
+        """Flush `host` out of the directory: dirty pages write back, clean
+        entries just drop. Called when an attachment is released."""
+        msgs: List[CoherenceMsg] = []
+        d = self.directory
+        for page in d.cached_pages(host):
+            if d.state(page, host) == MODIFIED:
+                self.stats.writebacks += 1
+                self.stats.bytes_moved += self.page_bytes
+                msgs.append(CoherenceMsg(
+                    self._path(fabric, host), self.page_bytes, "writeback"))
+            d.drop_host(page, host)
+        return msgs
+
+    # ------------------------------------------------------------------ queries
+    def sharers(self, page: int) -> List[int]:
+        return sorted(self.directory.holders(page))
+
+    def describe(self) -> Dict[str, object]:
+        return {
+            "sid": self.sid,
+            "size": self.size,
+            "page_bytes": self.page_bytes,
+            "num_pages": self.num_pages,
+            "home_host": self.home_host,
+            "port": self.port,
+            "attached_hosts": sorted(self.attached_hosts),
+            "stats": self.stats.as_dict(),
+        }
+
+
+def total_stats(segments: Iterable[SharedSegment]) -> CoherenceStats:
+    out = CoherenceStats()
+    for seg in segments:
+        out.merge(seg.stats)
+    return out

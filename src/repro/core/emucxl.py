@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.coherence import CoherenceStats, SharedSegment, total_stats
 from repro.core.fabric import Fabric, Transfer
 from repro.core.hw import V5E, HardwareModel
 from repro.core.policy import PlacementPolicy, StaticPlacement
@@ -107,10 +108,39 @@ class Allocation:
     host: int = 0            # owning emulated host
     port: int = 0            # pool port backing a REMOTE allocation
     clock: int = 0           # LRU touch counter, maintained by the library
+    # Coherent shared segments (core/coherence.py): the backing allocation and
+    # every per-host attachment carry the segment; only the backing record pays
+    # the pool charge and owns the data array.
+    segment: Optional[SharedSegment] = None
 
     @property
     def nbytes(self) -> int:
         return self.size
+
+    @property
+    def is_attachment(self) -> bool:
+        return (self.segment is not None
+                and self.address != self.segment.backing_addr)
+
+
+@dataclasses.dataclass
+class _AccessPlan:
+    """Costed plan for one data-plane operation, built by ``_plan_dma`` /
+    ``_plan_copy`` and executed either synchronously (``_run_plan``) or as part
+    of an async batch (``OpQueue.flush`` begins the routes itself)."""
+
+    # Uncontended fallback components: (tier to charge, modeled seconds). A
+    # coherent access may split across tiers — cached-copy DMA on LOCAL,
+    # protocol messages on REMOTE.
+    hw_charges: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
+    # Fabric-routed components: (link path, payload bytes). For a coherent
+    # access this is the data DMA plus every protocol message.
+    routes: List[Tuple[Tuple[str, ...], int]] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def hw_time(self) -> float:
+        return sum(t for _, t in self.hw_charges)
 
 
 class EmuCXL:
@@ -134,6 +164,10 @@ class EmuCXL:
         self._local_capacity = 0
         self._used_local: Dict[int, int] = {0: 0}
         self._pool = SharedPool(0)
+        self._segments: Dict[int, SharedSegment] = {}
+        # Protocol counters of destroyed segments — coherence_stats()["total"]
+        # stays cumulative (like modeled_time) across segment lifecycles.
+        self._retired_coherence = CoherenceStats()
         self._device = None
         self._memory_kinds: Dict[int, Optional[str]] = dict(_PREFERRED_KINDS)
         # Modeled elapsed DMA time per tier (seconds) — the Table III analogue on the
@@ -188,6 +222,7 @@ class EmuCXL:
         with self._lock:
             self._require_init()
             self._allocs.clear()
+            self._segments.clear()
             self._used_local = {h: 0 for h in range(self.num_hosts)}
             self._pool.reset()
             self._initialized = False
@@ -203,6 +238,13 @@ class EmuCXL:
     def _check_host(self, host: int) -> None:
         if not 0 <= host < self.num_hosts:
             raise EmuCXLError(f"invalid host {host} (instance has {self.num_hosts})")
+
+    def _check_mobile(self, rec: Allocation) -> None:
+        if rec.segment is not None:
+            raise EmuCXLError(
+                f"segment {rec.segment.sid} is pinned to pool port "
+                f"{rec.segment.port}; shared mappings cannot migrate or resize"
+            )
 
     def _resolve(self, address: Union[int, Allocation]) -> Allocation:
         if isinstance(address, Allocation):
@@ -236,13 +278,15 @@ class EmuCXL:
             raise EmuCXLError(f"placement returned invalid pool port {port}")
         return port
 
-    def alloc(self, size: int, node: int, host: int = 0) -> int:
+    def alloc(self, size: int, node: int, host: int = 0, *,
+              _port: Optional[int] = None) -> int:
         """``emucxl_alloc``: allocate `size` bytes on tier `node` for `host`.
 
         The paper overloads mmap()'s offset field to smuggle the node id into the kernel
         backend; our equivalent side channel is the memory kind on the target sharding.
         REMOTE allocations are charged to `host`'s pool quota and pinned to a pool
-        port chosen by the placement policy.
+        port chosen by the placement policy (`_port` overrides the policy — the
+        shared-segment path places its backing explicitly).
         """
         with self._lock:
             self._require_init()
@@ -257,7 +301,10 @@ class EmuCXL:
                     raise OutOfTierMemory(node, size, free, host)
                 self._used_local[host] += size
             else:
-                port = self._select_port()  # may raise; must precede the charge
+                # port selection may raise; it must precede the charge
+                port = self._select_port() if _port is None else _port
+                if self.fabric is not None and not 0 <= port < self.fabric.pool_ports:
+                    raise EmuCXLError(f"invalid pool port {port}")
                 try:
                     self._pool.charge(host, size)
                 except PoolQuotaError as e:
@@ -295,6 +342,20 @@ class EmuCXL:
                     f"emucxl_free size mismatch: allocation is {rec.size} bytes, caller "
                     f"passed {size}"
                 )
+            if rec.is_attachment:
+                # Freeing a mapping releases the mapping, not the shared bytes.
+                self.detach(rec.address)
+                return
+            if rec.segment is not None and rec.segment.attachments:
+                raise EmuCXLError(
+                    f"segment {rec.segment.sid} backing cannot be freed with "
+                    f"{len(rec.segment.attachments)} attachment(s) live"
+                )
+            if rec.segment is not None:
+                self._segments.pop(rec.segment.sid, None)
+                self._retired_coherence.merge(rec.segment.stats)
+                self._release_segment_port(rec.segment)
+                rec.segment.destroyed = True
             del self._allocs[rec.address]
             if rec.node == LOCAL_MEMORY:
                 self._used_local[rec.host] -= rec.size
@@ -311,16 +372,16 @@ class EmuCXL:
         """
         with self._lock:
             rec = self._resolve(address)
+            if rec.segment is not None:
+                raise EmuCXLError(
+                    "shared segments cannot be resized (fixed mapping geometry)"
+                )
             new_addr = self.alloc(size, rec.node, rec.host)
             new_rec = self._allocs[new_addr]
             n = min(size, rec.size)
             new_rec.data = new_rec.data.at[:n].set(rec.data[:n])
             if n > 0:
-                path = self._copy_path(rec, new_rec)
-                if path is not None:
-                    self.modeled_time[rec.node] += self.fabric.transfer(path, n)
-                else:
-                    self.modeled_time[rec.node] += self.hw.transfer_time(n, rec.node)
+                self._run_plan(self._plan_copy(rec, new_rec, n))
             self.free(rec.address)
             return new_addr
 
@@ -348,6 +409,7 @@ class EmuCXL:
         """
         with self._lock:
             rec = self._resolve(address)
+            self._check_mobile(rec)
             self._check_node(node)
             target_host = rec.host if host is None else host
             self._check_host(target_host)
@@ -388,6 +450,7 @@ class EmuCXL:
                     addr, node = move[0], move[1]
                     host = move[2] if len(move) > 2 else None
                     rec = self._resolve(addr)
+                    self._check_mobile(rec)
                     self._check_node(node)
                     target_host = rec.host if host is None else host
                     self._check_host(target_host)
@@ -442,6 +505,11 @@ class EmuCXL:
         with self._lock:
             return self._resolve(address).size
 
+    def get_segment(self, address: Union[int, Allocation]) -> Optional[SharedSegment]:
+        """The shared segment an address maps (None for private allocations)."""
+        with self._lock:
+            return self._resolve(address).segment
+
     def stats(self, node: int, host: Optional[int] = None) -> int:
         """``emucxl_stats``: bytes allocated on `node` (optionally for one host)."""
         with self._lock:
@@ -483,53 +551,68 @@ class EmuCXL:
         with self._lock:
             return dict(self._allocs)
 
-    # ------------------------------------------------------------------ data movement
-    def _dma_time(self, rec: Allocation, nbytes: int) -> float:
-        """Modeled time for a compute <-> tier DMA on `rec`'s placement.
-
-        Remote DMAs with a fabric attached route over (host uplink, pool port) and
-        therefore see live contention; otherwise the uncontended hw constants apply.
-        """
-        if nbytes <= 0:
-            return 0.0
-        if rec.node == REMOTE_MEMORY and self.fabric is not None:
-            return self.fabric.transfer(
-                self.fabric.pool_path(rec.host, rec.port), nbytes
+    # ------------------------------------------------------------------ access core
+    # ONE bounds/validation/accounting core shared by the sync calls below, the
+    # async queue's flush planner (core/queue.py), and the coherent-segment
+    # path. The tier-attribution rule — applied identically everywhere:
+    #
+    #   * fabric-routed transfers charge ``modeled_time[REMOTE_MEMORY]`` (the
+    #     fabric engine's counter — same convention as ``migrate_batch`` and
+    #     ``OpQueue.flush``), regardless of endpoint tiers;
+    #   * un-routed cross-tier copies charge ``hw.migrate_time`` to REMOTE;
+    #   * un-routed same-tier DMAs/copies charge ``hw.transfer_time`` to the
+    #     accessed (destination) tier;
+    #   * coherent-segment accesses charge the cached-copy DMA to LOCAL and all
+    #     protocol messages (fetch/forward/invalidate/writeback) like any other
+    #     pool crossing.
+    def _validate_payload(self, flat: np.ndarray, n: int) -> None:
+        """Shared sync/async check: the staging buffer must supply what the
+        caller claims (a short buffer used to die with an opaque jax shape
+        error on the sync path — or silently short-copy)."""
+        if flat.size < n:
+            raise EmuCXLError(
+                f"write supplies {flat.size} bytes but claims size {n}"
             )
-        return self.hw.transfer_time(nbytes, rec.node)
 
-    def read(self, address: Union[int, Allocation], offset: int, buf_size: int) -> np.ndarray:
-        """``emucxl_read``: DMA `buf_size` bytes at `offset` out of the allocation."""
-        with self._lock:
-            rec = self._resolve(address)
-            self._bounds(rec, offset, buf_size)
-            self._touch(rec)
-            self.modeled_time[rec.node] += self._dma_time(rec, buf_size)
-            return np.asarray(rec.data[offset : offset + buf_size])
+    def _storage_rec(self, rec: Allocation) -> Allocation:
+        """The record owning `rec`'s bytes (the backing record for segment
+        attachments — every attachment aliases the single pooled copy)."""
+        if rec.segment is not None and rec.address != rec.segment.backing_addr:
+            return self._allocs[rec.segment.backing_addr]
+        return rec
 
-    def write(self, buf: np.ndarray, offset: int, address: Union[int, Allocation],
-              buf_size: Optional[int] = None) -> bool:
-        """``emucxl_write``: DMA bytes from `buf` into the allocation at `offset`."""
-        with self._lock:
-            rec = self._resolve(address)
-            flat = np.asarray(buf, dtype=np.uint8).reshape(-1)
-            n = buf_size if buf_size is not None else flat.size
-            self._bounds(rec, offset, n)
-            rec.data = rec.data.at[offset : offset + n].set(flat[:n])
-            self._touch(rec)
-            self.modeled_time[rec.node] += self._dma_time(rec, n)
-            return True
+    def _plan_dma(self, rec: Allocation, offset: int, n: int,
+                  write: bool) -> "_AccessPlan":
+        """Plan a compute <-> tier DMA on one allocation: bounds, coherence
+        protocol (for shared segments), fabric routes, fallback constants."""
+        self._bounds(rec, offset, n)
+        plan = _AccessPlan()
+        if n <= 0:
+            return plan
+        if rec.segment is not None:
+            seg = rec.segment
+            planner = seg.plan_write if write else seg.plan_read
+            self._route_msgs(plan, planner(self.fabric, rec.host, offset, n))
+            # The access itself hits the host's now-coherent cached copy.
+            plan.hw_charges.append(
+                (LOCAL_MEMORY, self.hw.transfer_time(n, LOCAL_MEMORY)))
+            return plan
+        if rec.node == REMOTE_MEMORY and self.fabric is not None:
+            plan.routes.append((self.fabric.pool_path(rec.host, rec.port), n))
+        else:
+            plan.hw_charges.append((rec.node, self.hw.transfer_time(n, rec.node)))
+        return plan
 
-    def memset(self, address: Union[int, Allocation], value: int, size: int) -> int:
-        """``emucxl_memset``: fill `size` bytes with `value` (paper: 0 or -1)."""
-        with self._lock:
-            rec = self._resolve(address)
-            self._bounds(rec, 0, size)
-            byte = np.uint8(value & 0xFF)
-            rec.data = rec.data.at[:size].set(byte)
-            self._touch(rec)
-            self.modeled_time[rec.node] += self._dma_time(rec, size)
-            return rec.address
+    def _route_msgs(self, plan: "_AccessPlan", msgs) -> None:
+        """Attach coherence messages to a plan: fabric-routed when a path
+        exists, otherwise costed with the uncontended pool-crossing constant
+        (always a REMOTE charge — every message crosses the pool port)."""
+        for msg in msgs:
+            if msg.path:
+                plan.routes.append((msg.path, msg.nbytes))
+            else:
+                plan.hw_charges.append(
+                    (REMOTE_MEMORY, self.hw.migrate_time(msg.nbytes)))
 
     def _copy_path(self, srec: Allocation, drec: Allocation) -> Optional[Tuple[str, ...]]:
         """Fabric links a src -> dst copy crosses (None = stays off the fabric)."""
@@ -547,32 +630,237 @@ class EmuCXL:
             return (self.fabric.pool_link(srec.port),)
         return (self.fabric.pool_link(srec.port), self.fabric.pool_link(drec.port))
 
+    def _plan_copy(self, srec: Allocation, drec: Allocation,
+                   n: int) -> "_AccessPlan":
+        """Plan an allocation-to-allocation copy (memcpy/resize), including the
+        coherence protocol when either side is a shared mapping."""
+        self._bounds(srec, 0, n)
+        self._bounds(drec, 0, n)
+        plan = _AccessPlan()
+        if n <= 0:
+            return plan
+        if srec.segment is not None or drec.segment is not None:
+            # A copy touching a coherent mapping is its two DMA halves: each
+            # side costs exactly what read()/write() of that side costs (cached
+            # LOCAL access + protocol messages for the coherent side, ordinary
+            # DMA for a private side). A write hit therefore crosses no link —
+            # the protocol, not the payload, decides the fabric traffic.
+            for half in (self._plan_dma(srec, 0, n, write=False),
+                         self._plan_dma(drec, 0, n, write=True)):
+                plan.hw_charges.extend(half.hw_charges)
+                plan.routes.extend(half.routes)
+            return plan
+        path = self._copy_path(srec, drec)
+        if path is not None:
+            plan.routes.append((path, n))
+        elif drec.node != srec.node:
+            plan.hw_charges.append((REMOTE_MEMORY, self.hw.migrate_time(n)))
+        else:
+            plan.hw_charges.append((drec.node, self.hw.transfer_time(n, drec.node)))
+        return plan
+
+    def _run_plan(self, plan: "_AccessPlan") -> float:
+        """Synchronously execute a plan's transfers and charge modeled time.
+
+        All routed components begin together and drain as one span (an access's
+        coherence messages and data DMA are concurrent on the fabric), charged
+        to the REMOTE counter; the hw fallback charges the plan's tier. The
+        async queue charges the identical amounts from flush() — that parity is
+        tested, not assumed."""
+        elapsed = 0.0
+        if plan.routes:
+            start = self.fabric.clock
+            for path, nbytes in plan.routes:
+                self.fabric.begin(path, nbytes)
+            self.fabric.drain()
+            span = self.fabric.clock - start
+            self.modeled_time[REMOTE_MEMORY] += span
+            elapsed += span
+        for tier, t in plan.hw_charges:
+            self.modeled_time[tier] += t
+            elapsed += t
+        return elapsed
+
+    # ------------------------------------------------------------------ data movement
+    def read(self, address: Union[int, Allocation], offset: int, buf_size: int) -> np.ndarray:
+        """``emucxl_read``: DMA `buf_size` bytes at `offset` out of the allocation."""
+        with self._lock:
+            rec = self._resolve(address)
+            plan = self._plan_dma(rec, offset, buf_size, write=False)
+            self._touch(rec)
+            self._run_plan(plan)
+            store = self._storage_rec(rec)
+            return np.asarray(store.data[offset : offset + buf_size])
+
+    def write(self, buf: np.ndarray, offset: int, address: Union[int, Allocation],
+              buf_size: Optional[int] = None) -> bool:
+        """``emucxl_write``: DMA bytes from `buf` into the allocation at `offset`."""
+        with self._lock:
+            rec = self._resolve(address)
+            flat = np.asarray(buf, dtype=np.uint8).reshape(-1)
+            n = buf_size if buf_size is not None else flat.size
+            self._validate_payload(flat, n)
+            plan = self._plan_dma(rec, offset, n, write=True)
+            store = self._storage_rec(rec)
+            store.data = store.data.at[offset : offset + n].set(flat[:n])
+            self._touch(rec)
+            self._run_plan(plan)
+            return True
+
+    def memset(self, address: Union[int, Allocation], value: int, size: int) -> int:
+        """``emucxl_memset``: fill `size` bytes with `value` (paper: 0 or -1)."""
+        with self._lock:
+            rec = self._resolve(address)
+            plan = self._plan_dma(rec, 0, size, write=True)
+            byte = np.uint8(value & 0xFF)
+            store = self._storage_rec(rec)
+            store.data = store.data.at[:size].set(byte)
+            self._touch(rec)
+            self._run_plan(plan)
+            return rec.address
+
     def memcpy(self, dst: Union[int, Allocation], src: Union[int, Allocation],
                size: int) -> int:
         with self._lock:
             drec, srec = self._resolve(dst), self._resolve(src)
-            self._bounds(srec, 0, size)
-            self._bounds(drec, 0, size)
-            chunk = srec.data[:size]
-            path = self._copy_path(srec, drec)
-            if drec.node != srec.node:
-                chunk = jax.device_put(chunk, self._sharding_for(drec.node))
-                if path is not None:
-                    self.modeled_time[REMOTE_MEMORY] += self.fabric.transfer(path, size)
-                else:
-                    self.modeled_time[REMOTE_MEMORY] += self.hw.migrate_time(size)
-            elif path is not None:
-                self.modeled_time[drec.node] += self.fabric.transfer(path, size)
-            else:
-                self.modeled_time[drec.node] += self.hw.transfer_time(size, drec.node)
-            drec.data = drec.data.at[:size].set(chunk)
+            plan = self._plan_copy(srec, drec, size)
+            sstore, dstore = self._storage_rec(srec), self._storage_rec(drec)
+            chunk = sstore.data[:size]
+            if dstore.node != sstore.node:
+                chunk = jax.device_put(chunk, self._sharding_for(dstore.node))
+            dstore.data = dstore.data.at[:size].set(chunk)
             self._touch(drec)
             self._touch(srec)
+            self._run_plan(plan)
             return drec.address
 
     def memmove(self, dst, src, size: int) -> int:
         """Identical to memcpy under functional arrays (no aliasing) — see module docs."""
         return self.memcpy(dst, src, size)
+
+    # ------------------------------------------------------------------ shared segments
+    def share(self, size: int, host: int = 0, page_bytes: int = _PAGE,
+              writers: Optional[Sequence[int]] = None) -> SharedSegment:
+        """Create a hardware-coherent shared segment of `size` bytes.
+
+        One pooled allocation backs the segment (charged to `host`'s quota —
+        the *only* charge no matter how many hosts attach); its pool port comes
+        from the placement policy, which may use the `writers` hint to co-locate
+        the segment's port away from other write-heavy segments
+        (``SharingAwarePlacement``). Returns the ``SharedSegment``; call
+        ``attach`` to map it for a host.
+        """
+        with self._lock:
+            self._require_init()
+            self._check_host(host)
+            if page_bytes <= 0:
+                # Validated before anything is charged — a failed share must
+                # not leak a pool charge or placement-policy state.
+                raise EmuCXLError(f"invalid segment page_bytes {page_bytes}")
+            writer_hosts = list(writers) if writers is not None else [host]
+            for w in writer_hosts:
+                self._check_host(w)
+            port = None
+            weight = 0
+            picker = (getattr(self.placement, "select_port_for_segment", None)
+                      if self.fabric is not None else None)
+            if picker is not None:
+                port = picker(self.fabric, writer_hosts)
+                # the policy just charged this weight to the port; pay it back
+                # on any failure below (and on destroy)
+                weight = getattr(self.placement, "segment_weight",
+                                 lambda w: 1)(writer_hosts)
+            try:
+                if port is not None and not 0 <= port < self.fabric.pool_ports:
+                    raise EmuCXLError(
+                        f"placement returned invalid pool port {port}")
+                backing_addr = self.alloc(size, REMOTE_MEMORY, host, _port=port)
+            except Exception:
+                releaser = getattr(self.placement, "release_segment_port", None)
+                if releaser is not None and weight:
+                    releaser(port, weight)
+                raise
+            backing = self._allocs[backing_addr]
+            seg = SharedSegment(size, page_bytes, backing_addr, host,
+                                backing.port)
+            seg.placement_weight = weight
+            backing.segment = seg
+            self._segments[seg.sid] = seg
+            return seg
+
+    def attach(self, segment: SharedSegment, host: int = 0) -> int:
+        """Map `segment` into `host`'s address space; returns the mapping's
+        address. The mapping aliases the pooled bytes — no new pool charge —
+        and all reads/writes through it run the coherence protocol."""
+        with self._lock:
+            self._require_init()
+            self._check_host(host)
+            if segment.destroyed or segment.sid not in self._segments:
+                raise EmuCXLError(f"segment {segment.sid} has been destroyed")
+            backing = self._allocs[segment.backing_addr]
+            addr = self._next_addr
+            self._next_addr += -(-segment.size // _PAGE) * _PAGE
+            rec = Allocation(address=addr, size=segment.size, node=REMOTE_MEMORY,
+                             data=backing.data, host=host, port=segment.port,
+                             segment=segment)
+            self._touch(rec)
+            self._allocs[addr] = rec
+            segment.attachments.add(addr)
+            segment.attached_hosts[host] = segment.attached_hosts.get(host, 0) + 1
+            # Mapping setup is a metadata op: one remote-latency floor, no DMA.
+            self.modeled_time[REMOTE_MEMORY] += self.hw.tier_latency(REMOTE_MEMORY)
+            return addr
+
+    def detach(self, address: Union[int, Allocation]) -> None:
+        """Unmap a segment attachment. The host's last detach flushes it out of
+        the directory (dirty pages write back over the fabric)."""
+        with self._lock:
+            rec = self._resolve(address)
+            if not rec.is_attachment:
+                raise EmuCXLError(
+                    f"address {rec.address:#x} is not a segment attachment"
+                )
+            seg = rec.segment
+            seg.attachments.discard(rec.address)
+            remaining = seg.attached_hosts.get(rec.host, 1) - 1
+            if remaining <= 0:
+                seg.attached_hosts.pop(rec.host, None)
+                plan = _AccessPlan()
+                self._route_msgs(plan, seg.plan_detach(self.fabric, rec.host))
+                self._run_plan(plan)
+            else:
+                seg.attached_hosts[rec.host] = remaining
+            del self._allocs[rec.address]
+
+    def _release_segment_port(self, seg: SharedSegment) -> None:
+        """Pay a destroyed segment's writer weight back to the placement policy
+        so future segments are placed against live load, not history."""
+        releaser = getattr(self.placement, "release_segment_port", None)
+        if releaser is not None and seg.placement_weight:
+            releaser(seg.port, seg.placement_weight)
+            seg.placement_weight = 0
+
+    def destroy_segment(self, segment: SharedSegment) -> None:
+        """Release a segment's pooled backing. All attachments must be detached
+        first (freeing the bytes under a live mapping would un-model CXL)."""
+        with self._lock:
+            self.free(segment.backing_addr)
+
+    def segments(self) -> Dict[int, SharedSegment]:
+        with self._lock:
+            return dict(self._segments)
+
+    def coherence_stats(self) -> Dict[str, object]:
+        """Fleet-wide + per-segment protocol counters (the coherence analogue
+        of ``fabric_stats``)."""
+        with self._lock:
+            total = total_stats(self._segments.values())
+            total.merge(self._retired_coherence)
+            return {
+                "total": total.as_dict(),
+                "segments": {sid: seg.describe()
+                             for sid, seg in self._segments.items()},
+            }
 
     # ------------------------------------------------------------------ tensor views
     def alloc_array(self, shape, dtype, node: int, host: int = 0) -> int:

@@ -205,6 +205,15 @@ class Buffer:
     def is_local(self) -> bool:
         return self._lib().is_local(self._resolve())
 
+    @property
+    def segment(self):
+        """The coherent SharedSegment this buffer maps (None if private)."""
+        return self._lib().get_segment(self._resolve())
+
+    @property
+    def is_shared(self) -> bool:
+        return self.segment is not None
+
     # -------------------------------------------------------------- data plane
     def read(self, offset: int = 0, size: Optional[int] = None) -> np.ndarray:
         n = self.size - offset if size is None else size
@@ -245,6 +254,10 @@ class Buffer:
 
     def free(self) -> None:
         self._session.free(self)
+
+    def detach(self) -> None:
+        """Unmap a shared-segment attachment (see ``CXLSession.detach``)."""
+        self._session.detach(self)
 
     def __repr__(self) -> str:
         try:

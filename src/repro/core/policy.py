@@ -114,6 +114,58 @@ class CongestionAwarePlacement:
 
 
 @dataclasses.dataclass
+class SharingAwarePlacement:
+    """Placement for coherent shared segments: keep write-heavy segments apart.
+
+    Every coherence message a segment emits (fetch, back-invalidation, dirty
+    writeback) crosses the segment's pool port, so two heavily-written segments
+    sharing one port serialize each other's invalidation storms. This policy
+    tracks, per port, the writer-host weight of segments already placed there
+    and assigns each new segment the port with the least accumulated writer
+    weight (ties: live link occupancy, then lowest index). Plain allocations
+    fall back to congestion-aware behavior so the policy is a drop-in
+    ``placement=`` for ``EmuCXL.init`` / ``CXLSession``.
+    """
+
+    fallback_port: int = 0
+    name: str = "sharing-aware"
+
+    def __post_init__(self):
+        self._port_writer_weight: dict = {}
+
+    def select_port(self, fabric) -> int:
+        if fabric is None or fabric.idle():
+            return self.fallback_port
+        return fabric.least_loaded_port()
+
+    @staticmethod
+    def segment_weight(writer_hosts) -> int:
+        """The load a segment charges its port — ONE formula, used both when
+        charging (select) and when releasing (destroy/failed share)."""
+        return max(len(set(writer_hosts)), 1)
+
+    def select_port_for_segment(self, fabric, writer_hosts) -> int:
+        weight = self.segment_weight(writer_hosts)
+        port = min(
+            range(fabric.pool_ports),
+            key=lambda j: (self._port_writer_weight.get(j, 0),
+                           fabric.links[fabric.pool_link(j)].occupancy, j),
+        )
+        self._port_writer_weight[port] = (
+            self._port_writer_weight.get(port, 0) + weight
+        )
+        return port
+
+    def release_segment_port(self, port: int, weight: int) -> None:
+        """Segment destroyed: stop counting its writers against the port."""
+        remaining = self._port_writer_weight.get(port, 0) - weight
+        if remaining > 0:
+            self._port_writer_weight[port] = remaining
+        else:
+            self._port_writer_weight.pop(port, None)
+
+
+@dataclasses.dataclass
 class CongestionAwarePromotion:
     """Wrap a promotion policy with a live-occupancy gate on the owner's uplink.
 

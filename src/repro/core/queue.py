@@ -193,15 +193,30 @@ class _Plan:
     kind: str                       # noop|read|write|migrate|memcpy|memset
     buf: Any = None                 # primary buffer handle (dst for memcpy)
     src: Any = None                 # source handle (memcpy only)
-    transfer: Any = None            # in-flight fabric Transfer, if routed
-    hw_time: float = 0.0            # uncontended fallback cost (no fabric path)
+    # In-flight fabric Transfers, if routed. A coherent access owns several:
+    # its data DMA plus every coherence message it triggered.
+    transfers: List[Any] = dataclasses.field(default_factory=list)
+    # Uncontended fallback charges: (tier, seconds) — the same per-tier split
+    # the sync path charges (EmuCXL._AccessPlan), so parity holds exactly.
+    hw_charges: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
     n: int = 0
     offset: int = 0
     data: Optional[np.ndarray] = None
     value_byte: int = 0
     node: int = 0                   # migrate destination
     staged_addr: Optional[int] = None   # migrate destination allocation
-    charge_tier: int = ecxl.REMOTE_MEMORY  # tier hw_time is charged to (sync parity)
+
+    @property
+    def hw_time(self) -> float:
+        return sum(t for _, t in self.hw_charges)
+
+    def begin_routes(self, fabric, access_plan) -> "_Plan":
+        """Adopt a lib ``_AccessPlan``: register its routes in flight now (the
+        whole batch overlaps) and carry its fallback charges."""
+        self.hw_charges.extend(access_plan.hw_charges)
+        for path, nbytes in access_plan.routes:
+            self.transfers.append(fabric.begin(path, nbytes))
+        return self
 
 
 class OpQueue:
@@ -264,6 +279,7 @@ class OpQueue:
         hw = lib.hw
         if isinstance(op, MigrateOp):
             rec = lib._resolve(op.buf.address)
+            lib._check_mobile(rec)
             lib._check_node(op.node)
             target_host = rec.host if op.host is None else op.host
             lib._check_host(target_host)
@@ -276,54 +292,36 @@ class OpQueue:
                          staged_addr=new_addr)
             path = lib._fabric_path(rec, op.node, target_host, new_rec.port)
             if path is not None:
-                plan.transfer = fabric.begin(path, rec.size)
+                plan.transfers.append(fabric.begin(path, rec.size))
             elif op.node != rec.node or op.node == ecxl.LOCAL_MEMORY:
-                plan.hw_time = hw.migrate_time(rec.size)
+                plan.hw_charges.append(
+                    (ecxl.REMOTE_MEMORY, hw.migrate_time(rec.size)))
             return plan
+        # The remaining ops share the sync calls' bounds/validation/accounting
+        # core (EmuCXL._plan_dma/_plan_copy) — one attribution rule, two
+        # execution styles.
         if isinstance(op, MemcpyOp):
             drec = lib._resolve(op.dst.address)
             srec = lib._resolve(op.src.address)
-            lib._bounds(srec, 0, op.size)
-            lib._bounds(drec, 0, op.size)
             plan = _Plan("memcpy", buf=op.dst, src=op.src, n=op.size)
-            if op.size <= 0:
-                return plan
-            path = lib._copy_path(srec, drec)
-            if path is not None:
-                plan.transfer = fabric.begin(path, op.size)
-            elif drec.node != srec.node:
-                plan.hw_time = hw.migrate_time(op.size)
-            else:
-                # same-node copy: charge the destination tier, like sync memcpy
-                plan.hw_time = hw.transfer_time(op.size, drec.node)
-                plan.charge_tier = drec.node
-            return plan
-        # read / write / memset: a compute <-> tier DMA on one allocation
+            return plan.begin_routes(fabric, lib._plan_copy(srec, drec, op.size))
         rec = lib._resolve(op.buf.address)
         if isinstance(op, ReadOp):
             n = (rec.size - op.offset) if op.size is None else op.size
             plan = _Plan("read", buf=op.buf, n=n, offset=op.offset)
+            write = False
         elif isinstance(op, WriteOp):
             flat = np.asarray(op.data, dtype=np.uint8).reshape(-1)
             n = op.size if op.size is not None else flat.size
-            if flat.size < n:
-                raise ecxl.EmuCXLError(
-                    f"write op supplies {flat.size} bytes but claims size {n}"
-                )
+            lib._validate_payload(flat, n)
             plan = _Plan("write", buf=op.buf, n=n, offset=op.offset, data=flat)
+            write = True
         else:  # MemsetOp
             n = rec.size if op.size is None else op.size
             plan = _Plan("memset", buf=op.buf, n=n, value_byte=op.value & 0xFF)
-        lib._bounds(rec, plan.offset, plan.n)
-        plan.charge_tier = rec.node
-        if plan.n > 0:
-            if rec.node == ecxl.REMOTE_MEMORY and fabric is not None:
-                plan.transfer = fabric.begin(
-                    fabric.pool_path(rec.host, rec.port), plan.n
-                )
-            else:
-                plan.hw_time = hw.transfer_time(plan.n, rec.node)
-        return plan
+            write = True
+        return plan.begin_routes(
+            fabric, lib._plan_dma(rec, plan.offset, plan.n, write=write))
 
     # ------------------------------------------------------------------ apply
     def _apply_one(self, lib, plan: _Plan):
@@ -342,23 +340,25 @@ class OpQueue:
         if plan.kind == "memcpy":
             drec = lib._resolve(plan.buf.address)
             srec = lib._resolve(plan.src.address)
-            chunk = srec.data[: plan.n]
-            if drec.node != srec.node:
-                chunk = jax.device_put(chunk, lib._sharding_for(drec.node))
-            drec.data = drec.data.at[: plan.n].set(chunk)
+            sstore, dstore = lib._storage_rec(srec), lib._storage_rec(drec)
+            chunk = sstore.data[: plan.n]
+            if dstore.node != sstore.node:
+                chunk = jax.device_put(chunk, lib._sharding_for(dstore.node))
+            dstore.data = dstore.data.at[: plan.n].set(chunk)
             lib._touch(drec)
             lib._touch(srec)
             return True
         rec = lib._resolve(plan.buf.address)
+        store = lib._storage_rec(rec)
         lib._touch(rec)
         if plan.kind == "read":
-            return np.asarray(rec.data[plan.offset : plan.offset + plan.n])
+            return np.asarray(store.data[plan.offset : plan.offset + plan.n])
         if plan.kind == "write":
-            rec.data = rec.data.at[plan.offset : plan.offset + plan.n].set(
+            store.data = store.data.at[plan.offset : plan.offset + plan.n].set(
                 plan.data[: plan.n]
             )
             return True
-        rec.data = rec.data.at[: plan.n].set(np.uint8(plan.value_byte))  # memset
+        store.data = store.data.at[: plan.n].set(np.uint8(plan.value_byte))  # memset
         return plan.buf
 
     # ------------------------------------------------------------------ flush
@@ -376,6 +376,10 @@ class OpQueue:
         even when a routed op's endpoints are both LOCAL — the overlap makes a
         per-tier split ill-defined. Fallback ops charge their own tier, exactly
         like their synchronous counterparts.
+
+        Known limit: coherence-directory transitions planned by earlier ops in
+        a batch that later fails planning are not unwound (allocations and
+        fabric transfers are). Modeled state only — see ROADMAP open items.
         """
         lib = self._session.lib
         with lib._lock:
@@ -402,8 +406,8 @@ class OpQueue:
                 # destinations and deregister in-flight transfers; sources are
                 # untouched, every ticket in the batch fails with the cause.
                 for _, plan in plans:
-                    if plan.transfer is not None:
-                        fabric.cancel(plan.transfer)
+                    for transfer in plan.transfers:
+                        fabric.cancel(transfer)
                     if plan.staged_addr is not None:
                         lib.free(plan.staged_addr)
                 for t in tickets:
@@ -416,9 +420,9 @@ class OpQueue:
             else:
                 makespan = serial
             for _, plan in plans:
-                if plan.hw_time:
-                    # Fallback ops charge their tier like the synchronous calls.
-                    lib.modeled_time[plan.charge_tier] += plan.hw_time
+                # Fallback components charge their tier like the sync calls.
+                for tier, t in plan.hw_charges:
+                    lib.modeled_time[tier] += t
             for i, (t, plan) in enumerate(plans):
                 try:
                     value = self._apply_one(lib, plan)
@@ -439,8 +443,9 @@ class OpQueue:
                             if not committed:
                                 lib.free(p2.staged_addr)
                     raise
-                elapsed = (plan.transfer.elapsed if plan.transfer is not None
-                           else plan.hw_time)
+                elapsed = plan.hw_time + max(
+                    (tr.elapsed for tr in plan.transfers), default=0.0
+                )
                 t._complete(value, elapsed)
             self.batches_flushed += 1
             self.ops_completed += len(tickets)

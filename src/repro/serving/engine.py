@@ -22,7 +22,7 @@ from repro.configs.base import ArchConfig
 from repro.core.api import CXLSession
 from repro.core.policy import PromotionPolicy
 from repro.models import transformer as tf
-from repro.serving.kv_manager import PagedKVPool
+from repro.serving.kv_manager import PagedKVPool, SharedPrefixKV
 from repro.serving.paged_decode import paged_decode_step
 
 
@@ -53,6 +53,7 @@ class ServingEngine:
         opts: tf.ModelOptions = tf.ModelOptions(moe_impl="dense"),
         host: int = 0,
         session: Optional[CXLSession] = None,
+        shared_prefix: Optional[SharedPrefixKV] = None,
     ):
         self.params, self.cfg, self.opts = params, cfg, opts
         self.page_size = page_size
@@ -65,6 +66,11 @@ class ServingEngine:
             cfg.resolved_head_dim, dtype=jnp.float32, policy=policy, host=host,
             session=session,
         )
+        # Coherent common-prefix sharing: when set, every admitted prompt that
+        # covers the prefix imports its KV pages from the shared segment (one
+        # pooled copy fleet-wide) instead of prefilling them.
+        if shared_prefix is not None:
+            self.pool.attach_shared_prefix(shared_prefix)
         self.requests: Dict[int, Request] = {}
         self._next_rid = 0
         self.preemptions = 0
@@ -121,8 +127,18 @@ class ServingEngine:
                 continue
             if self.pool.free_slots() < need:
                 continue
-            for p in range(need):
-                self.pool.alloc_page(r.rid, p)
+            shared = self.pool.shared_prefix
+            if (shared is not None and shared.prefix_tokens > 0
+                    and shared.matches(r.prompt)):
+                # The prompt STARTS WITH the published prefix: import its KV
+                # pages from the coherent segment, skip prefilling those tokens.
+                imported = self.pool.import_prefix(r.rid)
+                for p in range(imported, need):
+                    self.pool.alloc_page(r.rid, p)
+                r.position = shared.prefix_tokens
+            else:
+                for p in range(need):
+                    self.pool.alloc_page(r.rid, p)
             r.state = "running"
 
     def _evict_someone(self, beneficiary: Request) -> bool:
@@ -183,4 +199,5 @@ class ServingEngine:
             "percent_local": self.pool.stats.percent_local,
             "preemptions": self.preemptions,
             "remote_bytes": self.pool.session.stats(1),
+            "prefix_imports": self.pool.prefix_imports,
         }

@@ -35,6 +35,121 @@ from repro.core.pool import LRUTier
 from repro.core.slab import SlabAllocator, SlabPtr
 
 
+class SharedPrefixKV:
+    """One coherent segment holding the paged KV of a common prompt prefix.
+
+    The serving scenario CXL coherence unlocks: N hosts serve prompts that
+    share a long common prefix (system prompt, few-shot header). Without
+    sharing, every host keeps its own cold copy of the prefix KV — N copies in
+    the pool. With this class, ONE host publishes the prefix pages into a
+    ``SharedSegment`` and every host imports them through its own coherent
+    mapping: the pool holds one copy, imports are directory read-misses (page
+    fetches that contend on the fabric), repeat imports are cache hits, and a
+    prefix *update* back-invalidates every host that imported it —
+    benchmarks/coherence_bench.py measures all three effects.
+
+    Coherence granularity is one KV page (all layers' K and V for `page_size`
+    tokens), so invalidations track exactly the pages an update touches.
+    """
+
+    def __init__(self, session: CXLSession, num_layers: int, num_pages: int,
+                 page_size: int, kv_heads: int, head_dim: int,
+                 dtype=jnp.float32, home_host: int = 0):
+        self.L, self.page, self.K, self.hd = num_layers, page_size, kv_heads, head_dim
+        self.dtype = dtype
+        self.num_pages = num_pages
+        self.page_bytes = int(2 * num_layers * page_size * kv_heads * head_dim
+                              * np.dtype(dtype).itemsize)
+        self.prefix_tokens = num_pages * page_size
+        self.session = session
+        self.home_host = home_host
+        self.segment = session.share(
+            num_pages * self.page_bytes, host=home_host,
+            page_bytes=self.page_bytes, writers=[home_host],
+        )
+        self._maps: Dict[int, object] = {}     # host -> attachment Buffer
+        self.token_ids: Optional[List[int]] = None   # set by publish()
+        self.publishes = 0
+        self.updates = 0
+
+    def matches(self, prompt) -> bool:
+        """Whether `prompt` starts with the *published* prefix: the segment
+        must have been published, and the leading tokens must equal the
+        publisher's token ids (importing KV for different tokens would attend
+        to the wrong content — silently wrong logits)."""
+        if self.publishes == 0 or len(prompt) < self.prefix_tokens:
+            return False
+        if self.token_ids is None:
+            return True                # publisher vouched without token ids
+        return list(prompt[: self.prefix_tokens]) == self.token_ids
+
+    def _geometry(self) -> Tuple[int, int, int, int]:
+        return self.L, self.page, self.K, self.hd
+
+    def attach(self, host: int):
+        """This host's coherent mapping of the prefix (created on first use)."""
+        if host not in self._maps:
+            self._maps[host] = self.session.attach(self.segment, host)
+        return self._maps[host]
+
+    def _page_payload(self, pool: "PagedKVPool", slot: int) -> np.ndarray:
+        return np.concatenate([
+            np.asarray(pool.k_pool[:, slot]).ravel().view(np.uint8),
+            np.asarray(pool.v_pool[:, slot]).ravel().view(np.uint8),
+        ])
+
+    def publish(self, pool: "PagedKVPool", seq_id: int,
+                token_ids=None) -> None:
+        """Write the prefix pages from `pool`'s hot slots into the segment
+        (coherent writes by the publishing host — the single pooled copy).
+        `token_ids` (the prefix's tokens) lets ``matches`` verify prompts
+        against the published content before importing."""
+        if token_ids is not None and len(token_ids) != self.prefix_tokens:
+            raise ecxl.EmuCXLError(
+                f"prefix covers {self.prefix_tokens} tokens, publisher supplied "
+                f"{len(token_ids)} token ids"
+            )
+        buf = self.attach(pool.host)
+        for p in range(self.num_pages):
+            ref = pool._refs[(seq_id, p)]
+            if ref.hot_slot is None:
+                raise ecxl.EmuCXLError(
+                    f"prefix page {p} of seq {seq_id} is not hot; promote before "
+                    f"publishing"
+                )
+            buf.write(self._page_payload(pool, ref.hot_slot),
+                      offset=p * self.page_bytes)
+        if token_ids is not None:
+            self.token_ids = [int(t) for t in token_ids]
+        self.publishes += 1
+
+    def update(self, payload: np.ndarray, page_idx: int,
+               host: Optional[int] = None) -> None:
+        """Rewrite one prefix page (e.g. a refreshed system prompt): a coherent
+        write that back-invalidates every host caching the page."""
+        host = self.home_host if host is None else host
+        flat = np.asarray(payload, np.uint8).reshape(-1)
+        if flat.size != self.page_bytes:
+            raise ecxl.EmuCXLError(
+                f"prefix page update must supply {self.page_bytes} bytes, got "
+                f"{flat.size}"
+            )
+        self.attach(host).write(flat, offset=page_idx * self.page_bytes)
+        self.updates += 1
+
+    def read_page(self, host: int, page_idx: int) -> np.ndarray:
+        """Coherent read of one prefix page through `host`'s mapping."""
+        return self.attach(host).read(page_idx * self.page_bytes,
+                                      self.page_bytes)
+
+    def close(self) -> None:
+        """Detach every mapping and release the pooled backing."""
+        for buf in self._maps.values():
+            buf.detach()
+        self._maps.clear()
+        self.session.destroy(self.segment)
+
+
 @dataclasses.dataclass
 class PageRef:
     """Where one logical page currently lives."""
@@ -96,6 +211,8 @@ class PagedKVPool:
         self.stats = AccessStats()
         self.lru = LRUTier(float(num_slots), name="kv-hot")
         self._refs: Dict[Tuple[int, int], PageRef] = {}
+        self.shared_prefix: Optional[SharedPrefixKV] = None
+        self.prefix_imports = 0
 
     @property
     def lib(self) -> ecxl.EmuCXL:
@@ -151,6 +268,40 @@ class PagedKVPool:
     def free_sequence(self, seq_id: int) -> None:
         for key in [k for k in self._refs if k[0] == seq_id]:
             self.free_page(*key)
+
+    # ------------------------------------------------------------------ shared prefix
+    def attach_shared_prefix(self, shared: SharedPrefixKV) -> None:
+        """Bind this pool (= this host's engine) to a common-prefix segment."""
+        if shared._geometry() != (self.L, self.page, self.K, self.hd):
+            raise ecxl.EmuCXLError(
+                f"shared prefix geometry {shared._geometry()} does not match "
+                f"pool geometry {(self.L, self.page, self.K, self.hd)}"
+            )
+        self.shared_prefix = shared
+        shared.attach(self.host)    # map now so import cost is pure protocol
+
+    def import_prefix(self, seq_id: int) -> int:
+        """Materialize the shared prefix pages into this host's hot pool.
+
+        Each page is a coherent read through this host's mapping: the first
+        import misses (page fetches over the fabric, a dirty-read forward if
+        the publisher still holds M), later imports hit the host's cached copy
+        — the modeled economics the coherence benchmark measures. Returns the
+        number of pages imported."""
+        shared = self.shared_prefix
+        if shared is None:
+            raise ecxl.EmuCXLError("no shared prefix attached to this pool")
+        shape = (self.L, self.page, self.K, self.hd)
+        for p in range(shared.num_pages):
+            slot = self.alloc_page(seq_id, p)
+            raw = np.asarray(shared.read_page(self.host, p))
+            half = raw.size // 2
+            kd = raw[:half].view(np.dtype(self.dtype)).reshape(shape)
+            vd = raw[half:].view(np.dtype(self.dtype)).reshape(shape)
+            self.k_pool = self.k_pool.at[:, slot].set(jnp.asarray(kd))
+            self.v_pool = self.v_pool.at[:, slot].set(jnp.asarray(vd))
+        self.prefix_imports += 1
+        return shared.num_pages
 
     # ------------------------------------------------------------------ tiering
     def demote(self, seq_id: int, page_idx: int) -> None:

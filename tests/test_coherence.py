@@ -1,0 +1,424 @@
+"""Coherent shared segments: directory protocol, fabric routing, session API,
+async parity, placement, and the shared-prefix KV middleware."""
+
+import numpy as np
+import pytest
+
+from repro.core import emucxl as ecxl
+from repro.core.api import CXLSession
+from repro.core.coherence import MODIFIED, MSG_BYTES, SHARED, SharedSegment
+from repro.core.emucxl import EmuCXL, EmuCXLError
+from repro.core.fabric import Fabric
+from repro.core.handle import StaleHandleError
+from repro.core.policy import SharingAwarePlacement
+from repro.core.queue import ReadOp, WriteOp
+from repro.serving.kv_manager import PagedKVPool, SharedPrefixKV
+
+
+def make_session(num_hosts=2, pool_ports=1, fabric=True, **kw):
+    kw.setdefault("local_capacity", 1 << 22)
+    kw.setdefault("remote_capacity", 1 << 24)
+    f = Fabric(num_hosts=num_hosts, pool_ports=pool_ports) if fabric else None
+    return CXLSession(num_hosts=num_hosts, fabric=f, **kw)
+
+
+# ------------------------------------------------------------------ basics
+def test_share_attach_visibility():
+    with make_session() as sess:
+        seg = sess.share(8192, host=0, page_bytes=4096)
+        a = sess.attach(seg, host=0)
+        b = sess.attach(seg, host=1)
+        a.write(np.arange(128, dtype=np.uint8))
+        assert np.array_equal(b.read(0, 128), np.arange(128, dtype=np.uint8))
+        b.write(np.full(16, 9, np.uint8), offset=4096)
+        assert np.all(a.read(4096, 16) == 9)
+
+
+def test_one_pool_charge_regardless_of_attachments():
+    with make_session(num_hosts=4) as sess:
+        base = sess.stats(ecxl.REMOTE_MEMORY)
+        seg = sess.share(16384, host=0)
+        assert sess.stats(ecxl.REMOTE_MEMORY) - base == 16384
+        bufs = [sess.attach(seg, host=h) for h in range(4)]
+        assert sess.stats(ecxl.REMOTE_MEMORY) - base == 16384  # still one copy
+        assert all(b.size == 16384 and b.is_shared for b in bufs)
+        # quota is charged to the home host only
+        assert sess.stats(ecxl.REMOTE_MEMORY, host=0) == base + 16384
+        assert sess.stats(ecxl.REMOTE_MEMORY, host=1) == 0
+
+
+def test_directory_states_follow_mesi():
+    with make_session(num_hosts=3) as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096)
+        a, b, c = (sess.attach(seg, host=h) for h in range(3))
+        payload = np.ones(64, np.uint8)
+        a.write(payload)
+        assert seg.directory.holders(0) == {0: MODIFIED}
+        b.read(0, 64)                      # dirty-read forward: M -> S, S
+        assert seg.directory.holders(0) == {0: SHARED, 1: SHARED}
+        assert seg.stats.forwards == 1
+        c.write(payload)                   # back-invalidates both sharers
+        assert seg.directory.holders(0) == {2: MODIFIED}
+        assert seg.stats.invalidations == 2
+        seg.directory.check()              # class invariant: one M, M excludes S
+
+
+def test_write_hit_is_silent():
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096)
+        a = sess.attach(seg, host=0)
+        a.write(np.ones(64, np.uint8))
+        before = seg.stats.as_dict()
+        a.write(np.ones(64, np.uint8))     # M hit: no protocol traffic
+        after = seg.stats.as_dict()
+        assert after["write_hits"] == before["write_hits"] + 1
+        assert after["invalidations"] == before["invalidations"]
+        assert after["bytes_moved"] == before["bytes_moved"]
+
+
+def test_false_sharing_invalidation_storm():
+    def run(offsets):
+        with make_session() as sess:
+            seg = sess.share(8192, host=0, page_bytes=4096)
+            a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+            w = np.ones(32, np.uint8)
+            for _ in range(8):
+                a.write(w, offset=offsets[0])
+                b.write(w, offset=offsets[1])
+            return seg.stats.invalidations, seg.stats.writebacks
+
+    same_inv, same_wb = run((0, 64))       # same 4K page
+    split_inv, split_wb = run((0, 4096))   # disjoint pages
+    assert same_inv > split_inv == 0
+    assert same_wb > split_wb == 0
+
+
+def test_coherence_traffic_rides_the_fabric():
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096)
+        a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+        a.write(np.ones(64, np.uint8))     # RFO fetch: host0 + pool0
+        b.write(np.ones(64, np.uint8))     # writeback + inval + fetch
+        stats = sess.fabric_stats()
+        # host0 carried its fetch, then its writeback + the invalidation message
+        assert stats["host0"]["bytes_carried"] == 4096 + 4096 + MSG_BYTES
+        assert stats["host1"]["bytes_carried"] == 4096
+        # every message crosses the segment's pool port
+        assert stats["pool0"]["bytes_carried"] == 3 * 4096 + MSG_BYTES
+
+
+def test_coherent_access_without_fabric_still_tracks_protocol():
+    with make_session(fabric=False) as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096)
+        a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+        before = dict(sess.modeled_time)
+        a.write(np.ones(64, np.uint8))
+        b.read(0, 64)
+        assert seg.stats.forwards == 1     # transitions apply without a fabric
+        # protocol messages are charged via the hw constants
+        assert sess.modeled_time[ecxl.REMOTE_MEMORY] > before[ecxl.REMOTE_MEMORY]
+
+
+def test_memcpy_write_hit_stays_off_fabric():
+    """A memcpy into an M-held page is a cache hit like write(): the protocol,
+    not the payload, decides fabric traffic."""
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096)
+        a = sess.attach(seg, host=0)
+        staging = sess.alloc(4096, ecxl.LOCAL_MEMORY, host=0)
+        a.write(np.ones(64, np.uint8))          # host0 takes M (RFO fetch)
+        links_before = {k: v["bytes_carried"]
+                        for k, v in sess.fabric_stats().items()}
+        remote_before = sess.modeled_time[ecxl.REMOTE_MEMORY]
+        sess.memcpy(a, staging, 64)             # write hit via memcpy
+        links_after = {k: v["bytes_carried"]
+                      for k, v in sess.fabric_stats().items()}
+        assert links_after == links_before       # no fabric crossing at all
+        assert sess.modeled_time[ecxl.REMOTE_MEMORY] == remote_before
+        assert seg.stats.write_hits >= 1
+
+
+def test_memcpy_from_invalid_attachment_pays_protocol():
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096)
+        a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+        dst = sess.alloc(4096, ecxl.LOCAL_MEMORY, host=1)
+        a.write(np.ones(64, np.uint8))           # host0 holds M
+        misses = seg.stats.read_misses
+        sess.memcpy(dst, b, 64)                  # host1 reads: forward + fetch
+        assert seg.stats.read_misses == misses + 1
+        assert seg.stats.forwards == 1
+
+
+# ------------------------------------------------------------------ lifecycle
+def test_segment_mappings_cannot_migrate_or_resize():
+    with make_session() as sess:
+        seg = sess.share(4096, host=0)
+        buf = sess.attach(seg, host=1)
+        with pytest.raises(EmuCXLError, match="pinned"):
+            buf.migrate(ecxl.LOCAL_MEMORY)
+        with pytest.raises(EmuCXLError):
+            buf.resize(8192)
+
+
+def test_backing_protected_while_attached():
+    with make_session() as sess:
+        seg = sess.share(4096, host=0)
+        buf = sess.attach(seg, host=1)
+        with pytest.raises(EmuCXLError, match="attachment"):
+            sess.destroy(seg)
+        buf.detach()
+        sess.destroy(seg)
+        assert sess.stats(ecxl.REMOTE_MEMORY) == 0
+        with pytest.raises(EmuCXLError, match="destroyed"):
+            sess.attach(seg, host=1)
+
+
+def test_detach_flushes_dirty_pages():
+    with make_session() as sess:
+        seg = sess.share(8192, host=0, page_bytes=4096)
+        a = sess.attach(seg, host=1)
+        a.write(np.ones(8192, np.uint8))   # M on both pages
+        wb_before = seg.stats.writebacks
+        pool_before = sess.fabric_stats()["pool0"]["bytes_carried"]
+        a.detach()
+        assert seg.stats.writebacks == wb_before + 2
+        assert sess.fabric_stats()["pool0"]["bytes_carried"] - pool_before == 8192
+        assert seg.directory.cached_pages(1) == []
+        with pytest.raises(StaleHandleError, match="detached"):
+            a.read(0, 16)
+
+
+def test_free_on_attachment_detaches():
+    with make_session() as sess:
+        seg = sess.share(4096, host=0)
+        buf = sess.attach(seg, host=1)
+        buf.free()                          # v1-flavored spelling of detach
+        assert not seg.attachments
+        sess.destroy(seg)
+
+
+def test_two_sessions_share_one_segment():
+    """Sessions on different hosts wrapping one lib map the same bytes."""
+    lib = EmuCXL()
+    lib.init(1 << 22, 1 << 24, num_hosts=2,
+             fabric=Fabric(num_hosts=2, pool_ports=1))
+    s0, s1 = CXLSession.wrap(lib), CXLSession.wrap(lib)
+    seg = s0.share(4096, host=0)
+    a = s0.attach(seg, host=0)
+    b = s1.attach(seg, host=1)
+    a.write(np.arange(32, dtype=np.uint8))
+    assert np.array_equal(b.read(0, 32), np.arange(32, dtype=np.uint8))
+    lib.exit()
+
+
+# ------------------------------------------------------------------ async path
+def test_async_coherent_ops_match_sync_accounting():
+    def traffic(use_async):
+        with make_session() as sess:
+            seg = sess.share(4096, host=0, page_bytes=4096)
+            a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+            payload = np.arange(64, dtype=np.uint8)
+            if use_async:
+                sess.submit(WriteOp(a, payload))
+                sess.flush()
+                t = sess.submit(ReadOp(b, 0, 64))
+                sess.flush()
+                out = t.result()
+            else:
+                a.write(payload)
+                out = b.read(0, 64)
+            assert np.array_equal(out, payload)
+            links = {k: v["bytes_carried"] for k, v in sess.fabric_stats().items()}
+            return links, dict(sess.modeled_time), seg.stats.as_dict()
+
+    sync_links, sync_time, sync_stats = traffic(False)
+    async_links, async_time, async_stats = traffic(True)
+    assert sync_links == async_links
+    assert sync_stats == async_stats
+    for node in sync_time:
+        assert sync_time[node] == pytest.approx(async_time[node])
+
+
+def test_async_batch_of_coherent_writes_overlaps():
+    """N hosts' first writes to distinct pages fetch concurrently: the batch
+    makespan beats the serial sum of identical sync writes."""
+    N = 4
+    with make_session(num_hosts=N) as sess:
+        seg = sess.share(N * 4096, host=0, page_bytes=4096)
+        bufs = [sess.attach(seg, host=h) for h in range(N)]
+        serial = 0.0
+        for h, buf in enumerate(bufs):     # sync: one at a time
+            before = sum(sess.modeled_time.values())
+            buf.write(np.ones(64, np.uint8), offset=h * 4096)
+            serial += sum(sess.modeled_time.values()) - before
+    with make_session(num_hosts=N) as sess:
+        seg = sess.share(N * 4096, host=0, page_bytes=4096)
+        bufs = [sess.attach(seg, host=h) for h in range(N)]
+        for h, buf in enumerate(bufs):
+            sess.submit(WriteOp(buf, np.ones(64, np.uint8), offset=h * 4096))
+        makespan = sess.flush()
+    assert makespan < serial
+
+
+# ------------------------------------------------------------------ placement
+def test_sharing_aware_placement_spreads_segments():
+    with make_session(num_hosts=4, pool_ports=2,
+                      placement=SharingAwarePlacement()) as sess:
+        seg_a = sess.share(4096, host=0, writers=[0, 1])
+        seg_b = sess.share(4096, host=2, writers=[2, 3])
+        assert seg_a.port != seg_b.port    # write-heavy segments kept apart
+
+
+def test_sharing_aware_placement_releases_weight_on_destroy():
+    with make_session(num_hosts=2, pool_ports=2,
+                      placement=SharingAwarePlacement()) as sess:
+        seg_a = sess.share(4096, host=0, writers=[0, 1])
+        sess.destroy(seg_a)
+        seg_b = sess.share(4096, host=0, writers=[0, 1])
+        # the dead segment's weight is gone: the new one lands on the same
+        # (now unloaded) port instead of being steered away by history
+        assert seg_b.port == seg_a.port
+
+
+def test_coherence_stats_survive_segment_destroy():
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096)
+        a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+        a.write(np.ones(64, np.uint8))
+        b.write(np.ones(64, np.uint8))           # invalidation + writeback
+        live = sess.coherence_stats()["total"]
+        assert live["invalidations"] == 1
+        b.detach()
+        a.detach()
+        sess.destroy(seg)
+        total = sess.coherence_stats()["total"]  # cumulative, like modeled_time
+        assert total["invalidations"] == live["invalidations"]
+        assert total["bytes_moved"] >= live["bytes_moved"]
+        assert sess.coherence_stats()["segments"] == {}
+
+
+def test_failed_share_leaks_nothing():
+    """A share() that fails — bad page size or pool exhaustion — must leave no
+    pool charge, no registry entry, and no placement-policy weight behind."""
+    placement = SharingAwarePlacement()
+    with make_session(num_hosts=2, pool_ports=2, placement=placement,
+                      remote_capacity=8192) as sess:
+        with pytest.raises(EmuCXLError, match="page_bytes"):
+            sess.share(4096, host=0, page_bytes=0)
+        with pytest.raises(EmuCXLError):
+            sess.share(1 << 20, host=0, writers=[0, 1])   # exceeds the pool
+        assert sess.stats(ecxl.REMOTE_MEMORY) == 0
+        assert sess.lib.segments() == {}
+        assert placement._port_writer_weight == {}         # weight paid back
+        # the pool is still fully usable afterwards
+        seg = sess.share(4096, host=0, writers=[0, 1])
+        assert sess.stats(ecxl.REMOTE_MEMORY) == 4096
+        sess.destroy(seg)
+        assert placement._port_writer_weight == {}
+
+
+def test_static_placement_still_works_for_segments():
+    with make_session(pool_ports=2) as sess:   # default StaticPlacement
+        seg = sess.share(4096, host=0)
+        assert seg.port == 0
+
+
+# ------------------------------------------------------------------ shared-prefix KV
+GEOM = dict(num_layers=2, page_size=8, kv_heads=2, head_dim=16)
+KV_PAGE_BYTES = 2 * 2 * 8 * 2 * 16 * 4
+
+
+def test_shared_prefix_publish_import_roundtrip():
+    with make_session(num_hosts=2) as sess:
+        shared = SharedPrefixKV(sess, num_pages=2, home_host=0, **GEOM)
+        pub = PagedKVPool(num_slots=4, host=0, session=sess, **GEOM)
+        sub = PagedKVPool(num_slots=4, host=1, session=sess, **GEOM)
+        pub.attach_shared_prefix(shared)
+        sub.attach_shared_prefix(shared)
+        rng = np.random.default_rng(0)
+        ref = rng.standard_normal((2, 4, 8, 2, 16)).astype(np.float32)
+        for p in range(2):
+            slot = pub.alloc_page(0, p)
+            pub.k_pool = pub.k_pool.at[:, slot].set(ref[:, slot])
+        shared.publish(pub, seq_id=0)
+        sub.import_prefix(seq_id=7)
+        assert sub.prefix_imports == 1
+        for p in range(2):
+            slot = sub.hot_table(7, 2)[p]
+            np.testing.assert_allclose(np.asarray(sub.k_pool[:, slot]),
+                                       ref[:, pub.hot_table(0, 2)[p]],
+                                       atol=1e-6)
+        # one pooled copy total, not one per host
+        assert sess.stats(ecxl.REMOTE_MEMORY) == 2 * KV_PAGE_BYTES
+
+
+def test_shared_prefix_update_invalidates_importers():
+    with make_session(num_hosts=3) as sess:
+        shared = SharedPrefixKV(sess, num_pages=1, home_host=0, **GEOM)
+        pools = [PagedKVPool(num_slots=2, host=h, session=sess, **GEOM)
+                 for h in range(3)]
+        pub = pools[0]
+        pub.attach_shared_prefix(shared)
+        pub.alloc_page(0, 0)
+        shared.publish(pub, seq_id=0)
+        for h in (1, 2):
+            pools[h].attach_shared_prefix(shared)
+            pools[h].import_prefix(seq_id=1)
+        inv_before = shared.segment.stats.invalidations
+        shared.update(np.zeros(KV_PAGE_BYTES, np.uint8), page_idx=0)
+        assert shared.segment.stats.invalidations - inv_before == 2
+        # re-import after the update is a fresh miss, then coherent again
+        pools[1].free_sequence(1)
+        pools[1].import_prefix(seq_id=2)
+        assert shared.segment.directory.state(0, 1) == SHARED
+
+
+def test_shared_prefix_matches_guards_import():
+    with make_session(num_hosts=2) as sess:
+        shared = SharedPrefixKV(sess, num_pages=1, home_host=0, **GEOM)
+        prefix = list(range(100, 100 + shared.prefix_tokens))
+        assert not shared.matches(prefix + [1, 2])   # nothing published yet
+        pub = PagedKVPool(num_slots=2, host=0, session=sess, **GEOM)
+        pub.attach_shared_prefix(shared)
+        pub.alloc_page(0, 0)
+        shared.publish(pub, seq_id=0, token_ids=prefix)
+        assert shared.matches(prefix + [1, 2])
+        assert not shared.matches(prefix[:-1])       # too short
+        assert not shared.matches([9] + prefix[1:] + [1])  # different tokens
+        with pytest.raises(EmuCXLError, match="token ids"):
+            shared.publish(pub, seq_id=0, token_ids=prefix[:-1])
+
+
+def test_shared_prefix_geometry_mismatch_raises():
+    with make_session() as sess:
+        shared = SharedPrefixKV(sess, num_pages=1, home_host=0, **GEOM)
+        pool = PagedKVPool(num_slots=2, host=1, session=sess, num_layers=3,
+                           page_size=8, kv_heads=2, head_dim=16)
+        with pytest.raises(EmuCXLError, match="geometry"):
+            pool.attach_shared_prefix(shared)
+
+
+def test_shared_prefix_close_releases_everything():
+    with make_session(num_hosts=2) as sess:
+        shared = SharedPrefixKV(sess, num_pages=1, home_host=0, **GEOM)
+        shared.attach(0)
+        shared.attach(1)
+        base = sess.stats(ecxl.REMOTE_MEMORY)
+        assert base == KV_PAGE_BYTES
+        shared.close()
+        assert sess.stats(ecxl.REMOTE_MEMORY) == 0
+
+
+# ------------------------------------------------------------------ misc
+def test_segment_ids_and_introspection():
+    with make_session() as sess:
+        seg = sess.share(8192, host=1, page_bytes=4096)
+        assert isinstance(seg, SharedSegment)
+        assert sess.lib.segments()[seg.sid] is seg
+        buf = sess.attach(seg, host=0)
+        assert buf.segment is seg
+        d = sess.coherence_stats()
+        assert d["segments"][seg.sid]["num_pages"] == 2
+        assert d["segments"][seg.sid]["attached_hosts"] == [0]
+        assert seg.home_host == 1

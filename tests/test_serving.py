@@ -98,6 +98,56 @@ def test_engine_generates_and_preempts(model):
     lib.exit()
 
 
+def test_engine_imports_shared_prefix(model):
+    """Two hosts' engines share one coherent prefix segment: admitted prompts
+    skip prefilling the prefix tokens, and the pool holds ONE prefix copy."""
+    from repro.core.api import CXLSession
+    from repro.core.fabric import Fabric
+    from repro.serving.kv_manager import SharedPrefixKV
+
+    cfg, params = model
+    page = 8
+    with CXLSession(1 << 26, 1 << 28, num_hosts=2,
+                    fabric=Fabric(num_hosts=2, pool_ports=1)) as sess:
+        shared = SharedPrefixKV(
+            sess, num_layers=cfg.num_layers, num_pages=1, page_size=page,
+            kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            home_host=0)
+        engines = [
+            ServingEngine(params, cfg, num_slots=6, page_size=page, max_batch=1,
+                          max_pages_per_seq=3, policy=Policy1(), host=h,
+                          session=sess, shared_prefix=shared)
+            for h in range(2)
+        ]
+        # host 0 prefills the prefix once and publishes it
+        rng = np.random.default_rng(3)
+        prefix = list(rng.integers(0, cfg.vocab_size, page))
+        pub_pool = engines[0].pool
+        for p in range(1):
+            pub_pool.alloc_page(99, p)
+        shared.publish(pub_pool, seq_id=99, token_ids=prefix)
+        pub_pool.free_sequence(99)
+        # both engines serve prompts that start with the shared prefix
+        for eng in engines:
+            eng.submit(prefix + list(rng.integers(0, cfg.vocab_size, 3)),
+                       max_new_tokens=4)
+            out = eng.run(max_steps=50)
+            assert all(len(v) == 4 for v in out.values())
+            assert eng.tier_stats()["prefix_imports"] == 1
+        # a long prompt whose tokens DIFFER from the prefix must prefill
+        # normally — importing would attend to the wrong KV
+        other = [(t + 1) % cfg.vocab_size for t in prefix]
+        engines[1].submit(other + [1, 2], max_new_tokens=2)
+        engines[1].run(max_steps=50)
+        assert engines[1].tier_stats()["prefix_imports"] == 1  # unchanged
+        # requests began decoding after the prefix (import replaced prefill)
+        assert all(r.position >= page for e in engines
+                   for r in e.requests.values())
+        coh = sess.coherence_stats()["total"]
+        assert coh["read_misses"] >= 1          # the imports fetched pages
+        assert sess.fabric_stats()["pool0"]["bytes_carried"] > 0
+
+
 def test_engine_policy_comparison(model):
     """Policy1 yields a higher local-hit fraction than Policy2 under reuse."""
     cfg, params = model

