@@ -11,15 +11,20 @@ Two experiments over core/coherence.py:
    strictly less pool memory at >= 2 hosts, coherence traffic visible on the
    fabric links, and a modeled steady-state speedup > 1.
 
-2. **False sharing**: two hosts alternately write small disjoint regions that
-   land in the SAME coherence page vs in different pages. Same bytes written;
-   the same-page variant ping-pongs M ownership (writeback + invalidation +
-   refetch per write — an invalidation storm) while the split variant settles
-   into silent M hits.
+2. **False sharing, eager vs fenced**: N hosts alternately write small
+   disjoint regions that land in the SAME coherence page vs in different
+   pages. Same bytes written; the same-page eager variant ping-pongs M
+   ownership (writeback + invalidation + refetch per write — an invalidation
+   storm) while the split variant settles into silent M hits. The third
+   variant replays the same-page storm on a ``consistency="release"`` segment:
+   every host's writes land in its write-combining buffer and one ``fence()``
+   per host publishes them — asserted to emit strictly fewer protocol
+   messages than eager MESI-lite at >= 2 hosts.
 
 ``--json PATH`` dumps the headline numbers (bytes shared vs copied,
-invalidation counts, modeled speedup) for the CI artifact; ``--smoke`` runs a
-seconds-scale configuration and enforces the acceptance asserts.
+invalidation counts, modeled speedup, eager-vs-fenced message counts) for the
+CI artifact; ``--smoke`` runs a seconds-scale configuration and enforces the
+acceptance asserts.
 
 CSV columns: name,us_per_call,derived — consistent with benchmarks/run.py.
 """
@@ -132,35 +137,50 @@ def bench_shared_prefix(num_hosts: int, prefix_pages: int = 4,
     }
 
 
-def bench_false_sharing(writes_per_host: int = 16) -> Dict[str, object]:
-    """Two hosts alternately writing 64B regions: same page vs split pages."""
+def bench_false_sharing(writes_per_host: int = 16,
+                        num_hosts: int = 2) -> Dict[str, object]:
+    """N hosts alternately writing 64B regions: same page (eager), split
+    pages (eager), and same page under release-consistency write-combining."""
     results = {}
-    for variant, offsets in (
-        ("same_page", (0, 64)),                  # both land in page 0
-        ("split_pages", (0, 4096)),              # page 0 vs page 1
+    for variant, page_stride, consistency in (
+        ("same_page", 0, "eager"),           # all hosts land in page 0
+        ("split_pages", 4096, "eager"),      # one page per host
+        ("same_page_fenced", 0, "release"),  # the storm, write-combined
     ):
-        with CXLSession(1 << 22, 1 << 24, num_hosts=2,
-                        fabric=Fabric(num_hosts=2, pool_ports=1)) as sess:
-            seg = sess.share(8192, host=0, page_bytes=4096)
-            a = sess.attach(seg, host=0)
-            b = sess.attach(seg, host=1)
+        with CXLSession(1 << 22, 1 << 24, num_hosts=num_hosts,
+                        fabric=Fabric(num_hosts=num_hosts, pool_ports=1)) as sess:
+            seg = sess.share(num_hosts * 4096, host=0, page_bytes=4096,
+                             consistency=consistency)
+            bufs = [sess.attach(seg, host=h) for h in range(num_hosts)]
             payload = np.arange(64, dtype=np.uint8)
             t0 = _modeled(sess)
             for _ in range(writes_per_host):
-                a.write(payload, offset=offsets[0])
-                b.write(payload, offset=offsets[1])
+                for h, buf in enumerate(bufs):
+                    buf.write(payload, offset=h * (page_stride or 64))
+            for buf in bufs:
+                buf.fence()                  # no-op on eager segments
+            stats = seg.stats
             results[variant] = {
                 "modeled_time_s": _modeled(sess) - t0,
-                "invalidations": seg.stats.invalidations,
-                "writebacks": seg.stats.writebacks,
+                "invalidations": stats.invalidations,
+                "writebacks": stats.writebacks,
+                "wc_writes": stats.wc_writes,
+                "fences": stats.fences,
+                "protocol_msgs": (stats.invalidations + stats.writebacks
+                                  + stats.forwards),
             }
     same, split = results["same_page"], results["split_pages"]
+    fenced = results["same_page_fenced"]
     return {
         "writes_per_host": writes_per_host,
+        "num_hosts": num_hosts,
         "same_page": same,
         "split_pages": split,
+        "same_page_fenced": fenced,
         "storm_ratio": (same["modeled_time_s"] / split["modeled_time_s"]
                         if split["modeled_time_s"] > 0 else float("inf")),
+        "combining_ratio": (same["protocol_msgs"] / fenced["protocol_msgs"]
+                            if fenced["protocol_msgs"] > 0 else float("inf")),
     }
 
 
@@ -193,19 +213,33 @@ def bench(hosts=(2, 4), prefix_pages: int = 4, rounds: int = 3,
             assert r["invalidations_on_update"] >= n - 1, (
                 "a prefix update must back-invalidate the caching hosts"
             )
-    fs = bench_false_sharing(writes_per_host)
-    artifact["false_sharing"] = fs
-    rows.append(
-        f"coherence_false_sharing,0,"
-        f"storm_ratio={fs['storm_ratio']:.2f}x,"
-        f"same_page_invals={fs['same_page']['invalidations']},"
-        f"split_invals={fs['split_pages']['invalidations']}"
-    )
-    if check:
-        assert fs["same_page"]["invalidations"] > fs["split_pages"]["invalidations"], (
-            "false sharing must produce an invalidation storm"
+    artifact["false_sharing"] = []
+    for n in hosts:
+        fs = bench_false_sharing(writes_per_host, num_hosts=n)
+        artifact["false_sharing"].append(fs)
+        rows.append(
+            f"coherence_false_sharing_h{n},0,"
+            f"storm_ratio={fs['storm_ratio']:.2f}x,"
+            f"combining_ratio={fs['combining_ratio']:.2f}x,"
+            f"same_page_msgs={fs['same_page']['protocol_msgs']},"
+            f"fenced_msgs={fs['same_page_fenced']['protocol_msgs']},"
+            f"split_invals={fs['split_pages']['invalidations']}"
         )
-        assert fs["storm_ratio"] > 1.0
+        if check:
+            assert (fs["same_page"]["invalidations"]
+                    > fs["split_pages"]["invalidations"]), (
+                "false sharing must produce an invalidation storm"
+            )
+            assert fs["storm_ratio"] > 1.0
+            if n >= 2:
+                assert (fs["same_page_fenced"]["protocol_msgs"]
+                        < fs["same_page"]["protocol_msgs"]), (
+                    f"write-combining must emit fewer protocol messages than "
+                    f"eager MESI-lite at {n} hosts "
+                    f"({fs['same_page_fenced']['protocol_msgs']} vs "
+                    f"{fs['same_page']['protocol_msgs']})"
+                )
+                assert fs["combining_ratio"] > 1.0
     return rows, artifact
 
 

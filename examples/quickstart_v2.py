@@ -63,6 +63,24 @@ def main() -> None:
         print("queued:", sess.pending_ops, "ops; read sees the write:",
               t_r.result()[:4], "| write ok:", t_w.result())
 
+        # --- coherent sharing with release consistency -----------------------------
+        seg = sess.share(16384, host=0, page_bytes=4096, consistency="release")
+        writer = sess.attach(seg, host=0)
+        readers = [sess.attach(seg, host=h) for h in (1, 2)]
+        for r in readers:
+            r.read(0, 64)                  # both hosts cache page 0 (S)
+        writer.write(np.full(64, 7, np.uint8))       # buffered, NOT published
+        print("pending write-combined pages:", seg.pending_pages(0),
+              "| invalidations so far:", seg.stats.invalidations)
+        writer.fence()                     # ONE upgrade publishes: 2 invalidations
+        print("after fence: pending", seg.pending_pages(0),
+              "| invalidations:", seg.stats.invalidations,
+              "| readers see:", readers[0].read(0, 4))
+        for r in readers:
+            r.detach()
+        writer.detach()
+        sess.destroy(seg)
+
         # --- middleware rides the session (and its injected Policy2) --------------
         kv = KVStore(sess, local_capacity_objects=2)
         for key in ("a", "b", "c"):

@@ -26,6 +26,7 @@ from repro.core.emucxl import (
     emucxl_alloc,
     emucxl_exit,
     emucxl_fabric_stats,
+    emucxl_fence,
     emucxl_free,
     emucxl_get_host,
     emucxl_get_numa_node,
@@ -60,6 +61,7 @@ from repro.core.policy import (
 from repro.core.pool import LRUTier, SharedPool
 from repro.core.queue import (
     EmuQueue,
+    FenceOp,
     MemcpyOp,
     MemsetOp,
     MigrateOp,
@@ -74,7 +76,8 @@ __all__ = [
     "LOCAL_MEMORY", "REMOTE_MEMORY", "Allocation", "EmuCXL", "EmuCXLError",
     "OutOfTierMemory", "QuotaExceeded", "default_instance", "default_session",
     "emucxl_alloc",
-    "emucxl_exit", "emucxl_fabric_stats", "emucxl_free", "emucxl_get_host",
+    "emucxl_exit", "emucxl_fabric_stats", "emucxl_fence", "emucxl_free",
+    "emucxl_get_host",
     "emucxl_get_numa_node", "emucxl_get_size", "emucxl_init", "emucxl_is_local",
     "emucxl_memcpy", "emucxl_memmove", "emucxl_memset", "emucxl_migrate",
     "emucxl_migrate_batch", "emucxl_pool_stats", "emucxl_read", "emucxl_resize",
@@ -85,4 +88,5 @@ __all__ = [
     # v2 session API
     "CXLSession", "as_session", "Buffer", "HandleTable", "StaleHandleError",
     "OpQueue", "Ticket", "ReadOp", "WriteOp", "MigrateOp", "MemcpyOp", "MemsetOp",
+    "FenceOp",
 ]

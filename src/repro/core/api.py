@@ -43,6 +43,7 @@ from repro.core.handle import Buffer, HandleTable, StaleHandleError
 from repro.core.hw import V5E, HardwareModel
 from repro.core.policy import Policy1, PromotionPolicy
 from repro.core.queue import (
+    FenceOp,
     MemcpyOp,
     MemsetOp,
     MigrateOp,
@@ -54,7 +55,8 @@ from repro.core.queue import (
 
 __all__ = [
     "CXLSession", "Buffer", "SharedSegment", "StaleHandleError", "as_session",
-    "ReadOp", "WriteOp", "MigrateOp", "MemcpyOp", "MemsetOp", "Ticket", "OpQueue",
+    "ReadOp", "WriteOp", "MigrateOp", "MemcpyOp", "MemsetOp", "FenceOp",
+    "Ticket", "OpQueue",
 ]
 
 
@@ -207,16 +209,19 @@ class CXLSession:
 
     # ------------------------------------------------------------------ shared segments
     def share(self, size: int, host: int = 0, page_bytes: int = 4096,
-              writers=None) -> SharedSegment:
+              writers=None, consistency: str = "eager") -> SharedSegment:
         """Create a hardware-coherent shared segment (core/coherence.py).
 
         One pooled copy of the bytes, charged once to `host`'s quota; any host
         — in this session or another session wrapping the same ``EmuCXL`` —
         can ``attach`` it. `writers` hints the expected writer hosts so a
-        sharing-aware placement can pick the segment's pool port."""
+        sharing-aware placement can pick the segment's pool port.
+        ``consistency="release"`` enables write-combining: writes buffer
+        locally per (segment, host) and only publish — invalidations,
+        writebacks — at a ``fence()``."""
         with self._lib._lock:
             self._check_open()
-            return self._lib.share(size, host, page_bytes, writers)
+            return self._lib.share(size, host, page_bytes, writers, consistency)
 
     def attach(self, segment: SharedSegment, host: int = 0) -> Buffer:
         """Map `segment` for `host`; returns a Buffer over the shared bytes.
@@ -243,6 +248,16 @@ class CXLSession:
         with self._lib._lock:
             self._check_open()
             self._lib.destroy_segment(segment)
+
+    def fence(self, buf: Optional[Buffer] = None) -> float:
+        """Release fence: publish write-combined stores (see ``share``'s
+        ``consistency="release"``). With `buf` (a segment attachment), fences
+        that (segment, host) pair; with None, every pending pair in the
+        underlying library. Returns the modeled seconds the fence's protocol
+        traffic occupied (0.0 when nothing was pending)."""
+        with self._lib._lock:
+            self._check_open()
+            return self._lib.fence(None if buf is None else buf.address)
 
     def coherence_stats(self) -> Dict[str, object]:
         return self._lib.coherence_stats()

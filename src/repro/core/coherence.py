@@ -9,15 +9,15 @@ arXiv 2407.16300). This module models that protocol at **page granularity**:
   * a ``SharedSegment`` is one pooled allocation that N emulated hosts attach
     to — the pool holds ONE copy of the bytes no matter how many hosts map it;
   * a ``Directory`` tracks per-(page, host) state, MESI-lite: ``M`` (modified,
-    exclusive dirty copy in that host's cache), ``S`` (shared clean copy),
-    invalid = absence of an entry (no E state: first read lands in S, like a
-    directory protocol that cannot distinguish one sharer from many);
+    exclusive dirty copy in that host's cache), ``E`` (exclusive *clean* copy —
+    a sole reader; upgrades to M silently, no RFO fetch), ``S`` (shared clean
+    copy), invalid = absence of an entry;
   * state transitions emit **coherence messages** — back-invalidations, dirty
     writebacks, and read fetches — each sized and routed as a real transfer on
     the fabric (core/fabric.py), so coherence traffic contends with ordinary
     DMAs and shows up in link occupancy and modeled time.
 
-Protocol events (what `plan_read`/`plan_write` return as routed messages):
+Protocol events (what the planners return as routed messages):
 
   ============================  ==========================  ====================
   event                         trigger                     fabric route / size
@@ -26,19 +26,37 @@ Protocol events (what `plan_read`/`plan_write` return as routed messages):
                                                             uplink, page bytes
   dirty-read forward            reader in I, peer holds M   owner uplink -> pool
                                 (writeback M -> S first)    port, page bytes
-  back-invalidation             writer upgrades, peer in S  pool port -> peer
-                                                            uplink, MSG_BYTES
+  back-invalidation             writer upgrades, peer in    pool port -> peer
+                                S/E                         uplink, MSG_BYTES
   dirty writeback + invalidate  writer upgrades, peer in M  peer uplink -> pool
                                                             port, page bytes
   write fetch (RFO)             writer in I                 pool port -> writer
                                                             uplink, page bytes
+  silent E upgrade              writer in E (sole copy)     none — no fetch, no
+                                                            invalidation
   ============================  ==========================  ====================
 
-Cache hits (reader in M/S, writer in M) emit nothing and cost only the local
+Cache hits (reader in M/E/S, writer in M) emit nothing and cost only the local
 tier's DMA time — that asymmetry is exactly what makes false sharing visible:
 two hosts alternately writing the same page ping-pong M between them, paying a
 writeback + invalidation + fetch per write (an *invalidation storm*), while the
 same writes to disjoint pages settle into silent M hits.
+
+**Release consistency / write-combining** (``consistency="release"``): instead
+of upgrading to M eagerly on every write, a fenced segment absorbs each host's
+writes into a per-(segment, host) write-combining buffer (a set of pending
+pages) and only runs the M-upgrade protocol — invalidations, writebacks, RFO
+fetches — when the host issues a ``fence()``. K writes to one page between
+fences collapse into ONE upgrade, which is what defuses false-sharing storms;
+the cost is the weaker model (peers may read stale bytes until the fence, the
+CXL.mem analogue of releasing a lock).
+
+**Transactional planning**: every directory/stats/write-buffer mutation the
+planners make can be recorded in a ``DirectoryJournal``. ``OpQueue.flush``
+plans a whole batch under one journal and, if planning fails mid-batch,
+replays the journal in reverse — so a failed batch leaves the directory,
+per-segment stats, and write-combining buffers byte-identical to the
+pre-batch state (the async rollback guarantee the property tests pin).
 
 The directory itself lives with the pool (the paper's switch-side metadata);
 EmuCXL consults it inside the same lock that serializes all other operations,
@@ -48,10 +66,16 @@ so no separate synchronization is needed.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 MODIFIED = "M"
+EXCLUSIVE = "E"
 SHARED = "S"
+
+EAGER = "eager"
+RELEASE = "release"
+_CONSISTENCY_MODES = (EAGER, RELEASE)
 
 # Control-message payload for an invalidation (a snoop/back-invalidate carries a
 # physical address + opcode — one flit, modeled as a cache line on the wire).
@@ -71,9 +95,12 @@ class CoherenceStats:
     write_hits: int = 0
     read_misses: int = 0
     write_misses: int = 0          # write needed an upgrade or a fetch
-    invalidations: int = 0         # back-invalidations sent to S-state peers
+    invalidations: int = 0         # back-invalidations sent to S/E-state peers
     writebacks: int = 0            # dirty M pages flushed to the pool
     forwards: int = 0              # dirty-read forwards (reader hit a peer's M)
+    e_upgrades: int = 0            # silent E -> M upgrades (no RFO, no inval)
+    wc_writes: int = 0             # writes absorbed by a write-combining buffer
+    fences: int = 0                # release fences that drained pending pages
     bytes_moved: int = 0           # page payloads moved by the protocol
     msg_bytes: int = 0             # control-message bytes (invalidations)
 
@@ -95,12 +122,73 @@ class CoherenceMsg:
     kind: str                      # fetch | forward | invalidate | writeback
 
 
+class DirectoryJournal:
+    """Undo log for coherence mutations planned inside one transaction.
+
+    The planners (``plan_read``/``plan_write``/``plan_fence``/``plan_detach``)
+    mutate three kinds of modeled state: directory entries, stats counters, and
+    write-combining buffers. When handed a journal, every mutation is recorded
+    *before* it is applied; ``rollback()`` replays the log in reverse, restoring
+    all three byte-identically. ``mark()``/``rollback(mark)`` supports partial
+    unwind — ``OpQueue.flush`` uses per-op marks so an apply-phase failure only
+    unwinds the ops that never took effect.
+    """
+
+    __slots__ = ("_entries",)
+
+    def __init__(self):
+        # ("dir", seg, page, host, old_state) | ("stat", seg, field, delta)
+        # | ("wc", seg, host, page, added)
+        self._entries: List[Tuple] = []
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def mark(self) -> int:
+        """Position token for partial rollback (see ``rollback``)."""
+        return len(self._entries)
+
+    def record_state(self, seg: "SharedSegment", page: int, host: int) -> None:
+        self._entries.append(
+            ("dir", seg, page, host, seg.directory.state(page, host)))
+
+    def record_stat(self, seg: "SharedSegment", field: str, delta: int) -> None:
+        self._entries.append(("stat", seg, field, delta))
+
+    def record_wc(self, seg: "SharedSegment", host: int, page: int,
+                  added: bool) -> None:
+        self._entries.append(("wc", seg, host, page, added))
+
+    def rollback(self, to_mark: int = 0) -> None:
+        """Undo every recorded mutation after `to_mark`, newest first."""
+        while len(self._entries) > to_mark:
+            entry = self._entries.pop()
+            kind, seg = entry[0], entry[1]
+            if kind == "dir":
+                _, _, page, host, old_state = entry
+                seg.directory.set_state(page, host, old_state)
+            elif kind == "stat":
+                _, _, field, delta = entry
+                setattr(seg.stats, field, getattr(seg.stats, field) - delta)
+            else:  # wc
+                _, _, host, page, added = entry
+                pending = seg.wc.setdefault(host, set())
+                if added:
+                    pending.discard(page)
+                else:
+                    pending.add(page)
+                if not pending:
+                    seg.wc.pop(host, None)
+
+
 class Directory:
-    """Per-(page, host) M/S state for one segment.
+    """Per-(page, host) M/E/S state for one segment.
 
     Sparse: pages nobody caches have no entry (all-invalid). At most one host
-    may hold a page in M, and M excludes any S entries — the class invariant
-    ``check()`` asserts in tests.
+    may hold a page in M or E, and either excludes any other entry for that
+    page — the class invariant ``check()`` enforces. ``check()`` runs after
+    every planned coherence batch when ``EMUCXL_CHECK=1`` (CI's test job sets
+    it) and in targeted protocol tests.
     """
 
     def __init__(self, num_pages: int):
@@ -129,22 +217,26 @@ class Directory:
         else:
             entry[host] = state
 
-    def drop_host(self, page: int, host: int) -> None:
-        self.set_state(page, host, None)
-
     def cached_pages(self, host: int) -> List[int]:
         return [p for p, e in self._state.items() if host in e]
 
+    def snapshot(self) -> Dict[int, Dict[int, str]]:
+        """Deep copy of all per-page holder maps (rollback-test oracle)."""
+        return {p: dict(e) for p, e in self._state.items()}
+
     def check(self) -> None:
         for page, entry in self._state.items():
-            owners = [h for h, st in entry.items() if st == MODIFIED]
-            if len(owners) > 1:
-                raise CoherenceError(f"page {page}: two M owners {owners}")
-            if owners and len(entry) > 1:
-                raise CoherenceError(
-                    f"page {page}: M at host {owners[0]} coexists with sharers "
-                    f"{sorted(h for h in entry if h != owners[0])}"
-                )
+            for exclusive_state in (MODIFIED, EXCLUSIVE):
+                owners = [h for h, st in entry.items() if st == exclusive_state]
+                if len(owners) > 1:
+                    raise CoherenceError(
+                        f"page {page}: two {exclusive_state} owners {owners}")
+                if owners and len(entry) > 1:
+                    raise CoherenceError(
+                        f"page {page}: {exclusive_state} at host {owners[0]} "
+                        f"coexists with sharers "
+                        f"{sorted(h for h in entry if h != owners[0])}"
+                    )
 
 
 class SharedSegment:
@@ -155,24 +247,37 @@ class SharedSegment:
     allocation that pays the quota charge); each ``attach`` maps the same bytes
     for one host without charging the pool again — the bytes-saved side of the
     coherence trade that benchmarks/coherence_bench.py measures.
+
+    Segment ids are scoped per owning ``EmuCXL`` instance (the library passes
+    `sid` explicitly), so independent sessions and test runs both start at
+    sid 0; the class-level counter only backs direct construction.
     """
 
-    _next_id = 0
+    _next_id = itertools.count()
 
     def __init__(self, size: int, page_bytes: int, backing_addr: int,
-                 home_host: int, port: int):
+                 home_host: int, port: int, sid: Optional[int] = None,
+                 consistency: str = EAGER):
         if page_bytes <= 0:
             raise CoherenceError(f"invalid page_bytes {page_bytes}")
-        self.sid = SharedSegment._next_id
-        SharedSegment._next_id += 1
+        if consistency not in _CONSISTENCY_MODES:
+            raise CoherenceError(
+                f"unknown consistency {consistency!r}; options: "
+                f"{list(_CONSISTENCY_MODES)}"
+            )
+        self.sid = next(SharedSegment._next_id) if sid is None else sid
         self.size = size
         self.page_bytes = page_bytes
         self.num_pages = -(-size // page_bytes)
         self.backing_addr = backing_addr
         self.home_host = home_host
         self.port = port
+        self.consistency = consistency
         self.directory = Directory(self.num_pages)
         self.stats = CoherenceStats()
+        # Release consistency: host -> pages written but not yet fenced (the
+        # write-combining buffer; empty/absent for eager segments).
+        self.wc: Dict[int, Set[int]] = {}
         self.attachments: Set[int] = set()     # attachment addresses
         self.attached_hosts: Dict[int, int] = {}   # host -> attachment count
         self.destroyed = False
@@ -187,6 +292,19 @@ class SharedSegment:
         return range(offset // self.page_bytes,
                      (offset + n - 1) // self.page_bytes + 1)
 
+    # ------------------------------------------------------------------ journaled mutators
+    def _set(self, journal: Optional[DirectoryJournal], page: int, host: int,
+             state: Optional[str]) -> None:
+        if journal is not None:
+            journal.record_state(self, page, host)
+        self.directory.set_state(page, host, state)
+
+    def _bump(self, journal: Optional[DirectoryJournal], field: str,
+              amount: int = 1) -> None:
+        if journal is not None:
+            journal.record_stat(self, field, amount)
+        setattr(self.stats, field, getattr(self.stats, field) + amount)
+
     # ------------------------------------------------------------------ protocol
     def _path(self, fabric, host: int) -> Tuple[str, ...]:
         """Fabric route between `host`'s cache and this segment's pool port.
@@ -195,85 +313,160 @@ class SharedSegment:
         the caller can charge the uncontended hw-constant fallback for it."""
         return fabric.pool_path(host, self.port) if fabric is not None else ()
 
-    def plan_read(self, fabric, host: int, offset: int, n: int
+    def plan_read(self, fabric, host: int, offset: int, n: int,
+                  journal: Optional[DirectoryJournal] = None
                   ) -> List[CoherenceMsg]:
         """Directory transitions + protocol messages for `host` reading a range.
 
-        Mutates the directory (the read takes effect); the caller routes the
+        Mutates the directory (the read takes effect) and records every
+        mutation in `journal` when one is supplied; the caller routes the
         returned messages over the fabric (or charges hw constants for
         empty-path messages when no fabric is attached)."""
         msgs: List[CoherenceMsg] = []
         d = self.directory
         for page in self.pages_for(offset, n):
             st = d.state(page, host)
-            if st in (MODIFIED, SHARED):
-                self.stats.read_hits += 1
+            if st in (MODIFIED, EXCLUSIVE, SHARED):
+                self._bump(journal, "read_hits")
                 continue
-            self.stats.read_misses += 1
+            self._bump(journal, "read_misses")
             owner = d.owner(page)
             if owner is not None and owner != host:
                 # Dirty-read forward: the owner's cache has the only fresh copy;
                 # it is written back through the owner's uplink and the owner
                 # downgrades M -> S before the reader's fetch.
-                self.stats.forwards += 1
-                self.stats.writebacks += 1
-                self.stats.bytes_moved += self.page_bytes
+                self._bump(journal, "forwards")
+                self._bump(journal, "writebacks")
+                self._bump(journal, "bytes_moved", self.page_bytes)
                 msgs.append(CoherenceMsg(
                     self._path(fabric, owner), self.page_bytes, "forward"))
-                d.set_state(page, owner, SHARED)
-            self.stats.bytes_moved += self.page_bytes
+                self._set(journal, page, owner, SHARED)
+            else:
+                # A clean exclusive peer silently downgrades (its copy stays
+                # valid, memory is up to date — no message needed).
+                for peer, peer_st in d.holders(page).items():
+                    if peer != host and peer_st == EXCLUSIVE:
+                        self._set(journal, page, peer, SHARED)
+            self._bump(journal, "bytes_moved", self.page_bytes)
             msgs.append(CoherenceMsg(
                 self._path(fabric, host), self.page_bytes, "fetch"))
-            d.set_state(page, host, SHARED)
+            # Sole reader lands in E (upgradeable without an RFO); any company
+            # means S.
+            others = any(h != host for h in d.holders(page))
+            self._set(journal, page, host, SHARED if others else EXCLUSIVE)
         return msgs
 
-    def plan_write(self, fabric, host: int, offset: int, n: int
+    def _upgrade(self, fabric, host: int, page: int,
+                 journal: Optional[DirectoryJournal],
+                 msgs: List[CoherenceMsg]) -> None:
+        """Take M on one page for `host`: the shared core of an eager write
+        miss and a fence drain. Appends this upgrade's protocol messages."""
+        d = self.directory
+        st = d.state(page, host)
+        if st == MODIFIED:
+            return
+        if st == EXCLUSIVE:
+            # Sole clean copy: silent upgrade — the E state's whole purpose.
+            self._bump(journal, "e_upgrades")
+            self._set(journal, page, host, MODIFIED)
+            return
+        self._bump(journal, "write_misses")
+        for peer, peer_st in d.holders(page).items():
+            if peer == host:
+                continue
+            if peer_st == MODIFIED:
+                # Peer holds the only fresh copy: flush it to the pool,
+                # then invalidate — the expensive half of false sharing.
+                self._bump(journal, "writebacks")
+                self._bump(journal, "bytes_moved", self.page_bytes)
+                msgs.append(CoherenceMsg(
+                    self._path(fabric, peer), self.page_bytes, "writeback"))
+            self._bump(journal, "invalidations")
+            self._bump(journal, "msg_bytes", MSG_BYTES)
+            msgs.append(CoherenceMsg(
+                self._path(fabric, peer), MSG_BYTES, "invalidate"))
+            self._set(journal, page, peer, None)
+        if st is None:
+            # Read-for-ownership: the writer needs the page's current bytes
+            # before modifying part of it.
+            self._bump(journal, "bytes_moved", self.page_bytes)
+            msgs.append(CoherenceMsg(
+                self._path(fabric, host), self.page_bytes, "fetch"))
+        self._set(journal, page, host, MODIFIED)
+
+    def plan_write(self, fabric, host: int, offset: int, n: int,
+                   journal: Optional[DirectoryJournal] = None
                    ) -> List[CoherenceMsg]:
-        """Directory transitions + protocol messages for `host` writing a range."""
+        """Directory transitions + protocol messages for `host` writing a range.
+
+        Eager segments upgrade to M immediately (invalidations/writebacks per
+        page); release segments absorb non-M/E pages into the host's
+        write-combining buffer and emit nothing until ``plan_fence``."""
         msgs: List[CoherenceMsg] = []
         d = self.directory
         for page in self.pages_for(offset, n):
             st = d.state(page, host)
             if st == MODIFIED:
-                self.stats.write_hits += 1
+                self._bump(journal, "write_hits")
                 continue
-            self.stats.write_misses += 1
-            for peer, peer_st in d.holders(page).items():
-                if peer == host:
-                    continue
-                if peer_st == MODIFIED:
-                    # Peer holds the only fresh copy: flush it to the pool,
-                    # then invalidate — the expensive half of false sharing.
-                    self.stats.writebacks += 1
-                    self.stats.bytes_moved += self.page_bytes
-                    msgs.append(CoherenceMsg(
-                        self._path(fabric, peer), self.page_bytes, "writeback"))
-                self.stats.invalidations += 1
-                self.stats.msg_bytes += MSG_BYTES
-                msgs.append(CoherenceMsg(
-                    self._path(fabric, peer), MSG_BYTES, "invalidate"))
-                d.drop_host(page, peer)
-            if st is None:
-                # Read-for-ownership: the writer needs the page's current bytes
-                # before modifying part of it.
-                self.stats.bytes_moved += self.page_bytes
-                msgs.append(CoherenceMsg(
-                    self._path(fabric, host), self.page_bytes, "fetch"))
-            d.set_state(page, host, MODIFIED)
+            if st == EXCLUSIVE:
+                self._bump(journal, "write_hits")
+                self._upgrade(fabric, host, page, journal, msgs)
+                continue
+            if self.consistency == RELEASE:
+                pending = self.wc.setdefault(host, set())
+                if page not in pending:
+                    if journal is not None:
+                        journal.record_wc(self, host, page, added=True)
+                    pending.add(page)
+                self._bump(journal, "wc_writes")
+                continue
+            self._upgrade(fabric, host, page, journal, msgs)
         return msgs
 
-    def plan_detach(self, fabric, host: int) -> List[CoherenceMsg]:
-        """Flush `host` out of the directory: dirty pages write back, clean
-        entries just drop. Called when an attachment is released."""
+    def plan_fence(self, fabric, host: int,
+                   journal: Optional[DirectoryJournal] = None
+                   ) -> List[CoherenceMsg]:
+        """Release fence: drain `host`'s write-combining buffer.
+
+        Every pending page runs the M-upgrade protocol exactly once — however
+        many writes it absorbed since the last fence — and the buffer empties.
+        No-op (and uncounted) when nothing is pending, so fencing an eager
+        segment is free."""
         msgs: List[CoherenceMsg] = []
+        pending = self.wc.get(host)
+        if not pending:
+            return msgs
+        for page in sorted(pending):
+            if journal is not None:
+                journal.record_wc(self, host, page, added=False)
+            self._upgrade(fabric, host, page, journal, msgs)
+        pending.clear()
+        self.wc.pop(host, None)
+        self._bump(journal, "fences")
+        return msgs
+
+    def pending_pages(self, host: Optional[int] = None) -> int:
+        """Write-combined pages awaiting a fence (for one host, or all)."""
+        if host is not None:
+            return len(self.wc.get(host, ()))
+        return sum(len(p) for p in self.wc.values())
+
+    def plan_detach(self, fabric, host: int,
+                    journal: Optional[DirectoryJournal] = None
+                    ) -> List[CoherenceMsg]:
+        """Flush `host` out of the directory: pending write-combined pages are
+        fenced first (detach is a release point), dirty pages write back, clean
+        entries just drop. Called when an attachment is released."""
+        msgs = self.plan_fence(fabric, host, journal)
         d = self.directory
         for page in d.cached_pages(host):
             if d.state(page, host) == MODIFIED:
-                self.stats.writebacks += 1
-                self.stats.bytes_moved += self.page_bytes
+                self._bump(journal, "writebacks")
+                self._bump(journal, "bytes_moved", self.page_bytes)
                 msgs.append(CoherenceMsg(
                     self._path(fabric, host), self.page_bytes, "writeback"))
-            d.drop_host(page, host)
+            self._set(journal, page, host, None)
         return msgs
 
     # ------------------------------------------------------------------ queries
@@ -288,6 +481,8 @@ class SharedSegment:
             "num_pages": self.num_pages,
             "home_host": self.home_host,
             "port": self.port,
+            "consistency": self.consistency,
+            "pending_pages": self.pending_pages(),
             "attached_hosts": sorted(self.attached_hosts),
             "stats": self.stats.as_dict(),
         }

@@ -31,6 +31,8 @@ cache-line loads (TPU cores cannot load from host memory), and ``memmove`` is id
 from __future__ import annotations
 
 import dataclasses
+import inspect
+import os
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -38,7 +40,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.coherence import CoherenceStats, SharedSegment, total_stats
+from repro.core.coherence import (
+    _CONSISTENCY_MODES,
+    EAGER,
+    CoherenceStats,
+    DirectoryJournal,
+    SharedSegment,
+    total_stats,
+)
 from repro.core.fabric import Fabric, Transfer
 from repro.core.hw import V5E, HardwareModel
 from repro.core.policy import PlacementPolicy, StaticPlacement
@@ -55,6 +64,25 @@ _PREFERRED_KINDS = {LOCAL_MEMORY: "device", REMOTE_MEMORY: "pinned_host"}
 # Fake virtual-address space: page-aligned, monotonically increasing. Gives the API the
 # paper's void*-shaped surface while remaining a pure lookup key.
 _PAGE = 4096
+
+
+def _debug_check_enabled() -> bool:
+    """EMUCXL_CHECK=1 runs the directory invariant after every planned
+    coherence batch (sync and flush paths). Read per call so tests can toggle
+    it with monkeypatch; CI's test job sets it for the whole suite."""
+    return os.environ.get("EMUCXL_CHECK", "") not in ("", "0")
+
+
+def _call_with_consistency(fn, consistency: str, *args):
+    """Invoke a placement hook, passing ``consistency=`` only when the hook
+    accepts it — older/third-party policies keep their two-argument shape."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        params = {}
+    if "consistency" in params:
+        return fn(*args, consistency=consistency)
+    return fn(*args)
 
 
 class EmuCXLError(RuntimeError):
@@ -165,6 +193,9 @@ class EmuCXL:
         self._used_local: Dict[int, int] = {0: 0}
         self._pool = SharedPool(0)
         self._segments: Dict[int, SharedSegment] = {}
+        # Segment ids are per-instance (and reset by init()) so independent
+        # libraries/sessions mint deterministic, non-leaking sids from 0.
+        self._next_sid = 0
         # Protocol counters of destroyed segments — coherence_stats()["total"]
         # stays cumulative (like modeled_time) across segment lifecycles.
         self._retired_coherence = CoherenceStats()
@@ -215,6 +246,7 @@ class EmuCXL:
             )
             self._used_local = {h: 0 for h in range(num_hosts)}
             self._pool = SharedPool(pool_capacity, num_hosts, host_quota)
+            self._next_sid = 0
             self._initialized = True
 
     def exit(self) -> None:
@@ -581,10 +613,13 @@ class EmuCXL:
             return self._allocs[rec.segment.backing_addr]
         return rec
 
-    def _plan_dma(self, rec: Allocation, offset: int, n: int,
-                  write: bool) -> "_AccessPlan":
+    def _plan_dma(self, rec: Allocation, offset: int, n: int, write: bool,
+                  journal: Optional[DirectoryJournal] = None) -> "_AccessPlan":
         """Plan a compute <-> tier DMA on one allocation: bounds, coherence
-        protocol (for shared segments), fabric routes, fallback constants."""
+        protocol (for shared segments), fabric routes, fallback constants.
+
+        `journal` (batch planning only) records every coherence mutation so a
+        mid-batch failure can unwind transitions planned by earlier ops."""
         self._bounds(rec, offset, n)
         plan = _AccessPlan()
         if n <= 0:
@@ -592,7 +627,8 @@ class EmuCXL:
         if rec.segment is not None:
             seg = rec.segment
             planner = seg.plan_write if write else seg.plan_read
-            self._route_msgs(plan, planner(self.fabric, rec.host, offset, n))
+            self._route_msgs(
+                plan, planner(self.fabric, rec.host, offset, n, journal))
             # The access itself hits the host's now-coherent cached copy.
             plan.hw_charges.append(
                 (LOCAL_MEMORY, self.hw.transfer_time(n, LOCAL_MEMORY)))
@@ -630,8 +666,8 @@ class EmuCXL:
             return (self.fabric.pool_link(srec.port),)
         return (self.fabric.pool_link(srec.port), self.fabric.pool_link(drec.port))
 
-    def _plan_copy(self, srec: Allocation, drec: Allocation,
-                   n: int) -> "_AccessPlan":
+    def _plan_copy(self, srec: Allocation, drec: Allocation, n: int,
+                   journal: Optional[DirectoryJournal] = None) -> "_AccessPlan":
         """Plan an allocation-to-allocation copy (memcpy/resize), including the
         coherence protocol when either side is a shared mapping."""
         self._bounds(srec, 0, n)
@@ -645,8 +681,8 @@ class EmuCXL:
             # LOCAL access + protocol messages for the coherent side, ordinary
             # DMA for a private side). A write hit therefore crosses no link —
             # the protocol, not the payload, decides the fabric traffic.
-            for half in (self._plan_dma(srec, 0, n, write=False),
-                         self._plan_dma(drec, 0, n, write=True)):
+            for half in (self._plan_dma(srec, 0, n, write=False, journal=journal),
+                         self._plan_dma(drec, 0, n, write=True, journal=journal)):
                 plan.hw_charges.extend(half.hw_charges)
                 plan.routes.extend(half.routes)
             return plan
@@ -658,6 +694,49 @@ class EmuCXL:
         else:
             plan.hw_charges.append((drec.node, self.hw.transfer_time(n, drec.node)))
         return plan
+
+    def _plan_fence(self, rec: Allocation,
+                    journal: Optional[DirectoryJournal] = None) -> "_AccessPlan":
+        """Plan a release fence on one segment mapping: drain `rec.host`'s
+        write-combining buffer into M-upgrades (invalidations/writebacks/RFO
+        fetches), routed like any other coherence messages."""
+        if rec.segment is None:
+            raise EmuCXLError(
+                f"address {rec.address:#x} is not a shared-segment mapping; "
+                f"fence targets coherent attachments"
+            )
+        plan = _AccessPlan()
+        self._route_msgs(
+            plan, rec.segment.plan_fence(self.fabric, rec.host, journal))
+        return plan
+
+    def fence(self, address: Union[int, Allocation, None] = None) -> float:
+        """``emucxl_fence``: publish write-combined stores (release semantics).
+
+        With `address` (a segment mapping), fences that (segment, host) pair;
+        with None, fences every pending (segment, host) pair in the instance.
+        Returns the modeled seconds the fence's protocol traffic occupied —
+        0.0 when nothing was pending (eager segments fence for free)."""
+        with self._lock:
+            self._require_init()
+            plan = _AccessPlan()
+            if address is not None:
+                rec = self._resolve(address)
+                plan = self._plan_fence(rec)
+                self._touch(rec)
+            else:
+                for seg in self._segments.values():
+                    for host in sorted(seg.wc):
+                        self._route_msgs(
+                            plan, seg.plan_fence(self.fabric, host))
+            return self._run_plan(plan)
+
+    def _maybe_check(self) -> None:
+        """EMUCXL_CHECK=1 debug mode: assert the directory invariant (single
+        M/E owner, exclusivity) across all live segments."""
+        if _debug_check_enabled():
+            for seg in self._segments.values():
+                seg.directory.check()
 
     def _run_plan(self, plan: "_AccessPlan") -> float:
         """Synchronously execute a plan's transfers and charge modeled time.
@@ -679,6 +758,7 @@ class EmuCXL:
         for tier, t in plan.hw_charges:
             self.modeled_time[tier] += t
             elapsed += t
+        self._maybe_check()
         return elapsed
 
     # ------------------------------------------------------------------ data movement
@@ -740,15 +820,19 @@ class EmuCXL:
 
     # ------------------------------------------------------------------ shared segments
     def share(self, size: int, host: int = 0, page_bytes: int = _PAGE,
-              writers: Optional[Sequence[int]] = None) -> SharedSegment:
+              writers: Optional[Sequence[int]] = None,
+              consistency: str = EAGER) -> SharedSegment:
         """Create a hardware-coherent shared segment of `size` bytes.
 
         One pooled allocation backs the segment (charged to `host`'s quota —
         the *only* charge no matter how many hosts attach); its pool port comes
-        from the placement policy, which may use the `writers` hint to co-locate
-        the segment's port away from other write-heavy segments
-        (``SharingAwarePlacement``). Returns the ``SharedSegment``; call
-        ``attach`` to map it for a host.
+        from the placement policy, which may use the `writers` hint and the
+        consistency mode to co-locate the segment's port away from other
+        write-heavy segments (``SharingAwarePlacement`` weighs
+        ``consistency="release"`` segments lighter — write combining defuses
+        their invalidation storms). Returns the ``SharedSegment``; call
+        ``attach`` to map it for a host, and — for release segments —
+        ``fence`` to publish write-combined stores.
         """
         with self._lock:
             self._require_init()
@@ -757,6 +841,11 @@ class EmuCXL:
                 # Validated before anything is charged — a failed share must
                 # not leak a pool charge or placement-policy state.
                 raise EmuCXLError(f"invalid segment page_bytes {page_bytes}")
+            if consistency not in _CONSISTENCY_MODES:
+                raise EmuCXLError(
+                    f"unknown consistency {consistency!r}; options: "
+                    f"{list(_CONSISTENCY_MODES)}"
+                )
             writer_hosts = list(writers) if writers is not None else [host]
             for w in writer_hosts:
                 self._check_host(w)
@@ -765,24 +854,34 @@ class EmuCXL:
             picker = (getattr(self.placement, "select_port_for_segment", None)
                       if self.fabric is not None else None)
             if picker is not None:
-                port = picker(self.fabric, writer_hosts)
+                port = _call_with_consistency(
+                    picker, consistency, self.fabric, writer_hosts)
                 # the policy just charged this weight to the port; pay it back
                 # on any failure below (and on destroy)
-                weight = getattr(self.placement, "segment_weight",
-                                 lambda w: 1)(writer_hosts)
+                weigher = getattr(self.placement, "segment_weight",
+                                  lambda w: 1)
+                weight = _call_with_consistency(
+                    weigher, consistency, writer_hosts)
+            backing_addr = None
             try:
                 if port is not None and not 0 <= port < self.fabric.pool_ports:
                     raise EmuCXLError(
                         f"placement returned invalid pool port {port}")
                 backing_addr = self.alloc(size, REMOTE_MEMORY, host, _port=port)
+                seg = SharedSegment(size, page_bytes, backing_addr, host,
+                                    self._allocs[backing_addr].port,
+                                    sid=self._next_sid, consistency=consistency)
             except Exception:
+                # A failed share must not leak: pay the policy weight back AND
+                # release the backing charge if the alloc had already landed.
+                if backing_addr is not None:
+                    self.free(backing_addr)
                 releaser = getattr(self.placement, "release_segment_port", None)
                 if releaser is not None and weight:
                     releaser(port, weight)
                 raise
+            self._next_sid += 1
             backing = self._allocs[backing_addr]
-            seg = SharedSegment(size, page_bytes, backing_addr, host,
-                                backing.port)
             seg.placement_weight = weight
             backing.segment = seg
             self._segments[seg.sid] = seg
@@ -1133,3 +1232,16 @@ def emucxl_memcpy(dst, src, size: int) -> int:
 
 def emucxl_memmove(dst, src, size: int) -> int:
     return emucxl_memcpy(dst, src, size)
+
+
+def emucxl_fence(address=None) -> float:
+    """Release fence (v1 spelling): publish write-combined stores.
+
+    With `address` (a shared-segment mapping), fences that mapping's (segment,
+    host); with no argument, fences everything pending in the default
+    instance. Returns the modeled seconds of protocol traffic the fence
+    emitted (0.0 when nothing was pending)."""
+    session = _facade._require_session()
+    if address is None:
+        return session.fence()
+    return session.fence(_facade.lookup(address))

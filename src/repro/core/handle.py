@@ -259,6 +259,11 @@ class Buffer:
         """Unmap a shared-segment attachment (see ``CXLSession.detach``)."""
         self._session.detach(self)
 
+    def fence(self) -> float:
+        """Release fence on this attachment's segment for this host (see
+        ``CXLSession.fence``); returns the modeled fence time."""
+        return self._session.fence(self)
+
     def __repr__(self) -> str:
         try:
             return (f"Buffer(handle={self._index}:{self._generation}, "

@@ -122,9 +122,12 @@ class SharingAwarePlacement:
     sharing one port serialize each other's invalidation storms. This policy
     tracks, per port, the writer-host weight of segments already placed there
     and assigns each new segment the port with the least accumulated writer
-    weight (ties: live link occupancy, then lowest index). Plain allocations
-    fall back to congestion-aware behavior so the policy is a drop-in
-    ``placement=`` for ``EmuCXL.init`` / ``CXLSession``.
+    weight (ties: live link occupancy, then lowest index). Write-combining
+    segments (``consistency="release"``) charge half weight: their upgrades
+    batch at fences, so their invalidation pressure on the port is a fraction
+    of an eager segment's. Plain allocations fall back to congestion-aware
+    behavior so the policy is a drop-in ``placement=`` for ``EmuCXL.init`` /
+    ``CXLSession``.
     """
 
     fallback_port: int = 0
@@ -139,13 +142,19 @@ class SharingAwarePlacement:
         return fabric.least_loaded_port()
 
     @staticmethod
-    def segment_weight(writer_hosts) -> int:
+    def segment_weight(writer_hosts, consistency: str = "eager") -> int:
         """The load a segment charges its port — ONE formula, used both when
-        charging (select) and when releasing (destroy/failed share)."""
-        return max(len(set(writer_hosts)), 1)
+        charging (select) and when releasing (destroy/failed share). Release
+        segments count each writer at half weight (rounded up): fences batch
+        their invalidation traffic."""
+        writers = max(len(set(writer_hosts)), 1)
+        if consistency == "release":
+            return max((writers + 1) // 2, 1)
+        return writers
 
-    def select_port_for_segment(self, fabric, writer_hosts) -> int:
-        weight = self.segment_weight(writer_hosts)
+    def select_port_for_segment(self, fabric, writer_hosts,
+                                consistency: str = "eager") -> int:
+        weight = self.segment_weight(writer_hosts, consistency)
         port = min(
             range(fabric.pool_ports),
             key=lambda j: (self._port_writer_weight.get(j, 0),

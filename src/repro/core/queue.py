@@ -7,9 +7,9 @@ through the emulated address space — `next` pointers are emucxl addresses stor
 remote) memory space. Node layout (16 bytes): int64 data | int64 next (0 == NULL).
 
 ``OpQueue`` is the v2 session scheduler (beyond the paper, toward CXL 3.0's queued
-transactions): ``CXLSession.submit`` enqueues read/write/migrate/memcpy/memset
-operations as Future-style ``Ticket``s, and ``flush()`` completes the whole batch
-at once. Every op with a fabric path is registered in flight *together*
+transactions): ``CXLSession.submit`` enqueues read/write/migrate/memcpy/memset/
+fence operations as Future-style ``Ticket``s, and ``flush()`` completes the whole
+batch at once. Every op with a fabric path is registered in flight *together*
 (``Fabric.begin``) before a single ``drain()``, so concurrent ops — e.g. eight
 hosts migrating simultaneously — genuinely contend for links and the batch
 makespan reflects overlap, not the serial sum a loop of v1 calls would charge.
@@ -143,6 +143,15 @@ class MemsetOp:
     size: Optional[int] = None
 
 
+@dataclasses.dataclass
+class FenceOp:
+    """Release fence on `buf`'s shared segment for `buf`'s host: drain the
+    write-combining buffer, emitting the batched invalidations/writebacks as
+    part of this batch's overlapped fabric span."""
+
+    buf: Any
+
+
 class Ticket:
     """Future-style completion token for one submitted operation.
 
@@ -190,7 +199,7 @@ class Ticket:
 class _Plan:
     """Flush-time execution plan for one ticket (internal)."""
 
-    kind: str                       # noop|read|write|migrate|memcpy|memset
+    kind: str                       # noop|read|write|migrate|memcpy|memset|fence
     buf: Any = None                 # primary buffer handle (dst for memcpy)
     src: Any = None                 # source handle (memcpy only)
     # In-flight fabric Transfers, if routed. A coherent access owns several:
@@ -205,6 +214,9 @@ class _Plan:
     value_byte: int = 0
     node: int = 0                   # migrate destination
     staged_addr: Optional[int] = None   # migrate destination allocation
+    # Coherence-journal position before this op planned: an apply-phase failure
+    # unwinds the journal back to the first failed op's mark.
+    journal_mark: int = 0
 
     @property
     def hw_time(self) -> float:
@@ -252,7 +264,7 @@ class OpQueue:
         if isinstance(op, MemcpyOp):
             self._check_buf(op.dst)
             self._check_buf(op.src)
-        elif isinstance(op, (ReadOp, WriteOp, MigrateOp, MemsetOp)):
+        elif isinstance(op, (ReadOp, WriteOp, MigrateOp, MemsetOp, FenceOp)):
             self._check_buf(op.buf)
             if isinstance(op, WriteOp):
                 # Snapshot the payload now: the ticket is Future-style, so the
@@ -275,7 +287,7 @@ class OpQueue:
                 ticket._fail(ecxl.EmuCXLError("operation cancelled before flush"))
 
     # ------------------------------------------------------------------ planning
-    def _plan_one(self, lib, fabric, op) -> _Plan:
+    def _plan_one(self, lib, fabric, op, journal) -> _Plan:
         hw = lib.hw
         if isinstance(op, MigrateOp):
             rec = lib._resolve(op.buf.address)
@@ -304,8 +316,12 @@ class OpQueue:
             drec = lib._resolve(op.dst.address)
             srec = lib._resolve(op.src.address)
             plan = _Plan("memcpy", buf=op.dst, src=op.src, n=op.size)
-            return plan.begin_routes(fabric, lib._plan_copy(srec, drec, op.size))
+            return plan.begin_routes(
+                fabric, lib._plan_copy(srec, drec, op.size, journal))
         rec = lib._resolve(op.buf.address)
+        if isinstance(op, FenceOp):
+            plan = _Plan("fence", buf=op.buf)
+            return plan.begin_routes(fabric, lib._plan_fence(rec, journal))
         if isinstance(op, ReadOp):
             n = (rec.size - op.offset) if op.size is None else op.size
             plan = _Plan("read", buf=op.buf, n=n, offset=op.offset)
@@ -321,7 +337,8 @@ class OpQueue:
             plan = _Plan("memset", buf=op.buf, n=n, value_byte=op.value & 0xFF)
             write = True
         return plan.begin_routes(
-            fabric, lib._plan_dma(rec, plan.offset, plan.n, write=write))
+            fabric, lib._plan_dma(rec, plan.offset, plan.n, write=write,
+                                  journal=journal))
 
     # ------------------------------------------------------------------ apply
     def _apply_one(self, lib, plan: _Plan):
@@ -329,6 +346,11 @@ class OpQueue:
         the same batch (e.g. a migrate) are observed."""
         if plan.kind == "noop":
             return plan.buf
+        if plan.kind == "fence":
+            # The protocol work happened at plan time (directory upgrades) and
+            # in the batch's fabric span; the fence has no data effect.
+            lib._touch(lib._resolve(plan.buf.address))
+            return True
         if plan.kind == "migrate":
             rec = lib._resolve(plan.buf.address)
             new_rec = lib._allocs[plan.staged_addr]
@@ -377,9 +399,14 @@ class OpQueue:
         per-tier split ill-defined. Fallback ops charge their own tier, exactly
         like their synchronous counterparts.
 
-        Known limit: coherence-directory transitions planned by earlier ops in
-        a batch that later fails planning are not unwound (allocations and
-        fabric transfers are). Modeled state only — see ROADMAP open items.
+        Every coherence-directory transition (and stats / write-combining
+        mutation) planned by the batch is recorded in a ``DirectoryJournal``;
+        if planning fails mid-batch the journal replays in reverse, so a failed
+        batch leaves directory holders, per-segment stats, and pending
+        write-combining buffers byte-identical to the pre-batch state — the
+        same all-or-nothing guarantee staged allocations and fabric transfers
+        already had. An apply-phase failure unwinds the journal back to the
+        first op that never took effect (earlier ops in the batch committed).
         """
         lib = self._session.lib
         with lib._lock:
@@ -395,16 +422,22 @@ class OpQueue:
             fabric = lib.fabric
             start = fabric.clock if fabric is not None else 0.0
             plans: List[Tuple[Ticket, _Plan]] = []
+            journal = ecxl.DirectoryJournal()
             serial = 0.0
             try:
                 for t in tickets:
-                    plan = self._plan_one(lib, fabric, t.op)
+                    mark = journal.mark()
+                    plan = self._plan_one(lib, fabric, t.op, journal)
+                    plan.journal_mark = mark
                     plans.append((t, plan))
                     serial += plan.hw_time
+                lib._maybe_check()      # EMUCXL_CHECK: planned batch invariant
             except Exception as e:
-                # Mid-batch failure (quota/capacity/stale handle): release staged
-                # destinations and deregister in-flight transfers; sources are
+                # Mid-batch failure (quota/capacity/stale handle/bounds):
+                # replay the coherence journal in reverse, release staged
+                # destinations, and deregister in-flight transfers; sources are
                 # untouched, every ticket in the batch fails with the cause.
+                journal.rollback()
                 for _, plan in plans:
                     for transfer in plan.transfers:
                         fabric.cancel(transfer)
@@ -429,9 +462,12 @@ class OpQueue:
                 except Exception as e:
                     # Earlier tickets in the batch completed; this one and every
                     # later one must not be left pending (result() would return
-                    # None) — fail them all with the cause, and release the
-                    # staged migrate destinations that never committed so the
-                    # tier isn't leaked (mirrors the plan-phase rollback).
+                    # None) — fail them all with the cause, unwind the
+                    # coherence transitions the failed ops planned (earlier,
+                    # committed ops keep theirs), and release the staged
+                    # migrate destinations that never committed so the tier
+                    # isn't leaked (mirrors the plan-phase rollback).
+                    journal.rollback(plan.journal_mark)
                     for t2, p2 in plans[i:]:
                         t2._fail(e)
                         if (p2.staged_addr is not None

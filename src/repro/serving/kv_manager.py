@@ -50,11 +50,19 @@ class SharedPrefixKV:
 
     Coherence granularity is one KV page (all layers' K and V for `page_size`
     tokens), so invalidations track exactly the pages an update touches.
+
+    The segment uses release consistency by default: ``publish`` writes every
+    prefix page into the host's write-combining buffer and emits the whole
+    upgrade — RFO fetches, and on re-publish the back-invalidations to every
+    importer — under ONE fence, so the fabric sees one overlapped protocol
+    burst instead of a per-page invalidation storm. Pass
+    ``consistency="eager"`` to publish page-at-a-time (the pre-fence model).
     """
 
     def __init__(self, session: CXLSession, num_layers: int, num_pages: int,
                  page_size: int, kv_heads: int, head_dim: int,
-                 dtype=jnp.float32, home_host: int = 0):
+                 dtype=jnp.float32, home_host: int = 0,
+                 consistency: str = "release"):
         self.L, self.page, self.K, self.hd = num_layers, page_size, kv_heads, head_dim
         self.dtype = dtype
         self.num_pages = num_pages
@@ -66,6 +74,7 @@ class SharedPrefixKV:
         self.segment = session.share(
             num_pages * self.page_bytes, host=home_host,
             page_bytes=self.page_bytes, writers=[home_host],
+            consistency=consistency,
         )
         self._maps: Dict[int, object] = {}     # host -> attachment Buffer
         self.token_ids: Optional[List[int]] = None   # set by publish()
@@ -119,6 +128,10 @@ class SharedPrefixKV:
                 )
             buf.write(self._page_payload(pool, ref.hot_slot),
                       offset=p * self.page_bytes)
+        # One release fence publishes every page: the upgrades (and, on a
+        # re-publish, the back-invalidations to all importers) overlap in a
+        # single fabric burst. No-op for an eager segment.
+        buf.fence()
         if token_ids is not None:
             self.token_ids = [int(t) for t in token_ids]
         self.publishes += 1
@@ -134,7 +147,9 @@ class SharedPrefixKV:
                 f"prefix page update must supply {self.page_bytes} bytes, got "
                 f"{flat.size}"
             )
-        self.attach(host).write(flat, offset=page_idx * self.page_bytes)
+        buf = self.attach(host)
+        buf.write(flat, offset=page_idx * self.page_bytes)
+        buf.fence()     # publish: back-invalidates every host caching the page
         self.updates += 1
 
     def read_page(self, host: int, page_idx: int) -> np.ndarray:

@@ -1,17 +1,25 @@
-"""Coherent shared segments: directory protocol, fabric routing, session API,
-async parity, placement, and the shared-prefix KV middleware."""
+"""Coherent shared segments: directory protocol (M/E/S), fabric routing,
+session API, async parity, release consistency / write-combining fences,
+placement, and the shared-prefix KV middleware."""
 
 import numpy as np
 import pytest
 
 from repro.core import emucxl as ecxl
 from repro.core.api import CXLSession
-from repro.core.coherence import MODIFIED, MSG_BYTES, SHARED, SharedSegment
+from repro.core.coherence import (
+    EXCLUSIVE,
+    MODIFIED,
+    MSG_BYTES,
+    SHARED,
+    CoherenceError,
+    SharedSegment,
+)
 from repro.core.emucxl import EmuCXL, EmuCXLError
 from repro.core.fabric import Fabric
 from repro.core.handle import StaleHandleError
 from repro.core.policy import SharingAwarePlacement
-from repro.core.queue import ReadOp, WriteOp
+from repro.core.queue import FenceOp, ReadOp, WriteOp
 from repro.serving.kv_manager import PagedKVPool, SharedPrefixKV
 
 
@@ -148,6 +156,230 @@ def test_memcpy_from_invalid_attachment_pays_protocol():
         sess.memcpy(dst, b, 64)                  # host1 reads: forward + fetch
         assert seg.stats.read_misses == misses + 1
         assert seg.stats.forwards == 1
+
+
+# ------------------------------------------------------------------ E state
+def test_sole_reader_lands_in_exclusive():
+    with make_session(num_hosts=3) as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096)
+        a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+        a.read(0, 64)
+        assert seg.directory.holders(0) == {0: EXCLUSIVE}
+        b.read(0, 64)                      # company: E downgrades silently
+        assert seg.directory.holders(0) == {0: SHARED, 1: SHARED}
+        assert seg.stats.forwards == 0     # clean copy — no dirty-read forward
+
+
+def test_exclusive_upgrades_to_modified_without_rfo():
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096)
+        a = sess.attach(seg, host=0)
+        a.read(0, 64)                      # E
+        before = seg.stats.as_dict()
+        links_before = {k: v["bytes_carried"]
+                        for k, v in sess.fabric_stats().items()}
+        a.write(np.ones(64, np.uint8))     # silent E -> M
+        after = seg.stats.as_dict()
+        assert seg.directory.holders(0) == {0: MODIFIED}
+        assert after["e_upgrades"] == before["e_upgrades"] + 1
+        assert after["write_misses"] == before["write_misses"]
+        assert after["bytes_moved"] == before["bytes_moved"]     # no RFO fetch
+        assert after["invalidations"] == before["invalidations"]
+        links_after = {k: v["bytes_carried"]
+                       for k, v in sess.fabric_stats().items()}
+        assert links_after == links_before  # nothing crossed the fabric
+
+
+def test_writer_invalidates_exclusive_peer_without_writeback():
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096)
+        a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+        a.read(0, 64)                      # host0: E (clean)
+        wb_before = seg.stats.writebacks
+        b.write(np.ones(64, np.uint8))     # invalidate E peer; no dirty flush
+        assert seg.directory.holders(0) == {1: MODIFIED}
+        assert seg.stats.invalidations == 1
+        assert seg.stats.writebacks == wb_before
+        seg.directory.check()
+
+
+def test_check_rejects_exclusive_with_company():
+    seg = SharedSegment(4096, 4096, backing_addr=0, home_host=0, port=0)
+    seg.directory.set_state(0, 0, EXCLUSIVE)
+    seg.directory.set_state(0, 1, SHARED)
+    with pytest.raises(CoherenceError, match="E at host 0"):
+        seg.directory.check()
+
+
+# ------------------------------------------------------------------ release consistency
+def test_release_writes_buffer_until_fence():
+    with make_session(num_hosts=3) as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096,
+                         consistency="release")
+        a, b, c = (sess.attach(seg, host=h) for h in range(3))
+        b.read(0, 64)
+        c.read(0, 64)                      # two clean sharers
+        a.write(np.ones(64, np.uint8))
+        a.write(np.ones(64, np.uint8))     # combined into the same pending page
+        assert seg.pending_pages(0) == 1
+        assert seg.stats.wc_writes == 2
+        assert seg.stats.invalidations == 0          # nothing published yet
+        assert seg.directory.state(0, 0) is None     # no M taken yet
+        t = a.fence()
+        assert t > 0                       # the fence paid the protocol traffic
+        assert seg.pending_pages(0) == 0
+        assert seg.stats.fences == 1
+        assert seg.stats.invalidations == 2          # both sharers, once each
+        assert seg.directory.holders(0) == {0: MODIFIED}
+        assert a.fence() == 0.0            # nothing pending: free
+
+
+def test_fence_combining_beats_eager_storm():
+    """K alternating same-page writes: eager ping-pongs M per write; release
+    pays ONE upgrade per host per fence."""
+    def run(consistency):
+        with make_session() as sess:
+            seg = sess.share(4096, host=0, page_bytes=4096,
+                             consistency=consistency)
+            a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+            w = np.ones(32, np.uint8)
+            for _ in range(8):
+                a.write(w)
+                b.write(w, offset=64)
+            if consistency == "release":
+                a.fence()
+                b.fence()
+            return seg.stats.invalidations + seg.stats.writebacks
+
+    assert run("release") < run("eager")
+
+
+def test_fence_traffic_rides_the_fabric():
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096,
+                         consistency="release")
+        a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+        b.read(0, 64)                       # host1: clean copy to invalidate
+        a.write(np.ones(64, np.uint8))
+        before = {k: v["bytes_carried"] for k, v in sess.fabric_stats().items()}
+        sess.fence(a)
+        after = {k: v["bytes_carried"] for k, v in sess.fabric_stats().items()}
+        # invalidation flit to host1, RFO page fetch to host0, all via the port
+        assert after["host1"] - before["host1"] == MSG_BYTES
+        assert after["host0"] - before["host0"] == 4096
+        assert after["pool0"] - before["pool0"] == 4096 + MSG_BYTES
+
+
+def test_detach_fences_pending_writes():
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096,
+                         consistency="release")
+        a = sess.attach(seg, host=1)
+        a.write(np.ones(64, np.uint8))      # buffered
+        assert seg.pending_pages(1) == 1
+        a.detach()                          # release point: fence + writeback
+        assert seg.pending_pages() == 0
+        assert seg.stats.fences == 1
+        assert seg.stats.writebacks == 1    # the fenced M page flushed out
+        assert seg.directory.cached_pages(1) == []
+
+
+def test_session_fence_none_drains_all_segments():
+    with make_session(num_hosts=2) as sess:
+        seg1 = sess.share(4096, host=0, consistency="release")
+        seg2 = sess.share(4096, host=0, consistency="release")
+        a = sess.attach(seg1, host=0)
+        b = sess.attach(seg2, host=1)
+        a.write(np.ones(16, np.uint8))
+        b.write(np.ones(16, np.uint8))
+        assert seg1.pending_pages() + seg2.pending_pages() == 2
+        sess.fence()                        # no target: everything pending
+        assert seg1.pending_pages() + seg2.pending_pages() == 0
+        assert seg1.stats.fences == seg2.stats.fences == 1
+
+
+def test_fence_on_private_buffer_raises():
+    with make_session() as sess:
+        buf = sess.alloc(4096, ecxl.REMOTE_MEMORY, host=0)
+        with pytest.raises(EmuCXLError, match="not a shared-segment mapping"):
+            sess.fence(buf)
+
+
+def test_async_fence_matches_sync_accounting():
+    def traffic(use_async):
+        with make_session() as sess:
+            seg = sess.share(4096, host=0, page_bytes=4096,
+                             consistency="release")
+            a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+            b.read(0, 64)
+            payload = np.arange(64, dtype=np.uint8)
+            if use_async:
+                sess.submit(WriteOp(a, payload), FenceOp(a))
+                sess.flush()
+            else:
+                a.write(payload)
+                a.fence()
+            links = {k: v["bytes_carried"] for k, v in sess.fabric_stats().items()}
+            return links, dict(sess.modeled_time), seg.stats.as_dict()
+
+    sync_links, sync_time, sync_stats = traffic(False)
+    async_links, async_time, async_stats = traffic(True)
+    assert sync_links == async_links
+    assert sync_stats == async_stats
+    for node in sync_time:
+        assert sync_time[node] == pytest.approx(async_time[node])
+
+
+def test_v1_emucxl_fence():
+    ecxl.emucxl_init(local_capacity=1 << 22, remote_capacity=1 << 24,
+                     num_hosts=2, fabric=Fabric(num_hosts=2, pool_ports=1))
+    try:
+        sess = ecxl.default_session()
+        seg = sess.share(4096, host=0, consistency="release")
+        buf = sess.attach(seg, host=0)
+        addr = ecxl._facade.register(buf)
+        ecxl.emucxl_write(np.ones(64, np.uint8), 0, addr)
+        assert seg.pending_pages(0) == 1
+        assert ecxl.emucxl_fence(addr) > 0
+        assert seg.pending_pages(0) == 0
+        assert ecxl.emucxl_fence() == 0.0   # fence-all with nothing pending
+    finally:
+        ecxl.emucxl_exit()
+
+
+def test_share_rejects_unknown_consistency():
+    with make_session() as sess:
+        with pytest.raises(EmuCXLError, match="consistency"):
+            sess.share(4096, host=0, consistency="tso")
+        assert sess.stats(ecxl.REMOTE_MEMORY) == 0   # nothing charged
+
+
+# ------------------------------------------------------------------ debug check
+def test_emucxl_check_catches_corrupted_directory(monkeypatch):
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096)
+        a = sess.attach(seg, host=0)
+        monkeypatch.setenv("EMUCXL_CHECK", "1")
+        a.write(np.ones(16, np.uint8))      # healthy op passes the check
+        seg.directory.set_state(0, 1, MODIFIED)   # corrupt: two M owners
+        with pytest.raises(CoherenceError, match="two M owners"):
+            a.read(0, 16)
+        monkeypatch.setenv("EMUCXL_CHECK", "0")
+        seg.directory.set_state(0, 1, None)  # undo so close() stays clean
+
+
+def test_emucxl_check_covers_flush_path(monkeypatch):
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096)
+        a = sess.attach(seg, host=0)
+        monkeypatch.setenv("EMUCXL_CHECK", "1")
+        seg.directory.set_state(0, 0, MODIFIED)
+        seg.directory.set_state(0, 1, MODIFIED)
+        sess.submit(WriteOp(a, np.ones(16, np.uint8)))
+        with pytest.raises(CoherenceError, match="two M owners"):
+            sess.flush()
+        monkeypatch.setenv("EMUCXL_CHECK", "0")
+        seg.directory.set_state(0, 1, None)
 
 
 # ------------------------------------------------------------------ lifecycle
@@ -411,6 +643,48 @@ def test_shared_prefix_close_releases_everything():
 
 
 # ------------------------------------------------------------------ misc
+def test_segment_ids_scoped_per_instance():
+    """sids are per-EmuCXL (and reset by init), not a process-global counter:
+    two fresh sessions both mint sid 0 — deterministic across test order."""
+    with make_session() as s1:
+        first = s1.share(4096, host=0)
+        second = s1.share(4096, host=0)
+        assert (first.sid, second.sid) == (0, 1)
+    with make_session() as s2:
+        assert s2.share(4096, host=0).sid == 0
+    lib = EmuCXL()
+    lib.init(1 << 20, 1 << 20)
+    try:
+        assert lib.share(4096).sid == 0
+    finally:
+        lib.exit()
+    lib.init(1 << 20, 1 << 20)     # re-init resets the counter too
+    try:
+        assert lib.share(4096).sid == 0
+    finally:
+        lib.exit()
+
+
+def test_release_segments_weigh_lighter_in_placement():
+    placement = SharingAwarePlacement()
+    assert placement.segment_weight([0, 1, 2, 3]) == 4
+    assert placement.segment_weight([0, 1, 2, 3], consistency="release") == 2
+    assert placement.segment_weight([0], consistency="release") == 1
+    with make_session(num_hosts=4, pool_ports=2, placement=placement) as sess:
+        eager = sess.share(4096, host=0, writers=[0, 1])                 # w=2
+        rel1 = sess.share(4096, host=2, writers=[2, 3],
+                          consistency="release")                         # w=1
+        rel2 = sess.share(4096, host=2, writers=[2, 3],
+                          consistency="release")                         # w=1
+        assert rel1.port != eager.port     # steered off the loaded port
+        assert rel2.port == rel1.port      # two release segs ~ one eager
+        assert eager.placement_weight == 2
+        assert rel1.placement_weight == rel2.placement_weight == 1
+        for seg in (eager, rel1, rel2):
+            sess.destroy(seg)
+        assert placement._port_writer_weight == {}   # weights paid back
+
+
 def test_segment_ids_and_introspection():
     with make_session() as sess:
         seg = sess.share(8192, host=1, page_bytes=4096)

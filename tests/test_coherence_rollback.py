@@ -1,0 +1,180 @@
+"""Transactional coherence: a failed flush leaves the directory untouched.
+
+The regression guard for the directory undo-journal: any async batch whose
+planning fails mid-way (bounds, short payload, pinned-segment migrate, quota)
+must leave directory holders, per-segment stats, write-combining buffers, and
+``coherence_stats()`` byte-identical to the pre-batch snapshot — under random
+op interleavings (hypothesis or the seeded stub) and in deterministic twins
+that pin each failure mode.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import emucxl as ecxl
+from repro.core.api import CXLSession
+from repro.core.coherence import DirectoryJournal
+from repro.core.emucxl import EmuCXLError
+from repro.core.fabric import Fabric
+from repro.core.queue import FenceOp, MemsetOp, MigrateOp, ReadOp, WriteOp
+
+NUM_HOSTS = 3
+PAGE = 4096
+PAGES = 4
+
+
+def make_session(fabric=True, consistency="eager"):
+    f = Fabric(num_hosts=NUM_HOSTS, pool_ports=2) if fabric else None
+    sess = CXLSession(1 << 22, 1 << 24, num_hosts=NUM_HOSTS, fabric=f)
+    seg = sess.share(PAGES * PAGE, host=0, page_bytes=PAGE,
+                     consistency=consistency)
+    bufs = [sess.attach(seg, host=h) for h in range(NUM_HOSTS)]
+    return sess, seg, bufs
+
+
+def snapshot(sess, seg):
+    return (
+        seg.directory.snapshot(),
+        seg.stats.as_dict(),
+        {h: set(p) for h, p in seg.wc.items()},
+        copy.deepcopy(sess.coherence_stats()),
+    )
+
+
+def warm_up(seg, bufs, pattern):
+    """Pre-batch traffic so rollback must restore a non-trivial directory."""
+    for i, (host, write) in enumerate(pattern):
+        page = i % PAGES
+        if write:
+            bufs[host].write(np.ones(32, np.uint8), offset=page * PAGE)
+        else:
+            bufs[host].read(page * PAGE, 32)
+    if seg.consistency == "release":
+        bufs[0].fence()
+
+
+def submit_coherent_ops(sess, bufs, ops):
+    for kind, host, page in ops:
+        buf = bufs[host]
+        if kind == 0:
+            sess.submit(ReadOp(buf, page * PAGE, 32))
+        elif kind == 1:
+            sess.submit(WriteOp(buf, np.ones(32, np.uint8), offset=page * PAGE))
+        elif kind == 2:
+            sess.submit(MemsetOp(buf, value=7, size=32))
+        else:
+            sess.submit(FenceOp(buf))
+
+
+_FAILERS = [
+    ("short-payload", lambda sess, bufs:
+        sess.submit(WriteOp(bufs[0], np.ones(4, np.uint8), size=64))),
+    ("out-of-bounds", lambda sess, bufs:
+        sess.submit(ReadOp(bufs[1], PAGES * PAGE, 64))),
+    ("pinned-migrate", lambda sess, bufs:
+        sess.submit(MigrateOp(bufs[2], ecxl.LOCAL_MEMORY))),
+]
+
+_OP = st.tuples(st.integers(0, 3), st.integers(0, NUM_HOSTS - 1),
+                st.integers(0, PAGES - 1))
+_WARM = st.tuples(st.integers(0, NUM_HOSTS - 1), st.booleans())
+
+
+@pytest.mark.parametrize("consistency", ["eager", "release"])
+@pytest.mark.parametrize("with_fabric", [True, False],
+                         ids=["fabric", "no-fabric"])
+@settings(max_examples=15)
+@given(warm=st.lists(_WARM, min_size=0, max_size=8),
+       before=st.lists(_OP, min_size=0, max_size=8),
+       after=st.lists(_OP, min_size=0, max_size=8),
+       failer=st.integers(0, len(_FAILERS) - 1))
+def test_failed_flush_restores_coherence_state(consistency, with_fabric,
+                                               warm, before, after, failer):
+    sess, seg, bufs = make_session(with_fabric, consistency)
+    try:
+        warm_up(seg, bufs, warm)
+        pre = snapshot(sess, seg)
+        modeled_pre = dict(sess.modeled_time)
+        submit_coherent_ops(sess, bufs, before)
+        _FAILERS[failer][1](sess, bufs)      # the op that fails at plan time
+        submit_coherent_ops(sess, bufs, after)
+        with pytest.raises(EmuCXLError):
+            sess.flush()
+        assert snapshot(sess, seg) == pre, (
+            f"failed batch ({_FAILERS[failer][0]}) leaked coherence state"
+        )
+        # a failed batch also charges no modeled time
+        assert dict(sess.modeled_time) == modeled_pre
+        if with_fabric:
+            assert sess.fabric.idle()
+        # the directory still works: a clean batch afterwards succeeds
+        submit_coherent_ops(sess, bufs, before + after)
+        sess.flush()
+    finally:
+        sess.close()
+
+
+def test_failed_flush_rolls_back_directory_deterministic():
+    """Pinned twin of the property: known transitions, known rollback."""
+    sess, seg, bufs = make_session()
+    try:
+        bufs[0].write(np.ones(32, np.uint8))             # host0: M on page 0
+        bufs[1].read(PAGE, 32)                           # host1: E on page 1
+        pre = snapshot(sess, seg)
+        sess.submit(
+            WriteOp(bufs[2], np.ones(32, np.uint8)),     # would steal page 0
+            ReadOp(bufs[0], PAGE, 32),                   # would downgrade E
+            WriteOp(bufs[1], np.ones(4, np.uint8), size=64),   # fails planning
+        )
+        with pytest.raises(EmuCXLError, match="supplies 4 bytes"):
+            sess.flush()
+        assert snapshot(sess, seg) == pre
+        # the planned-but-rolled-back transitions really would have happened
+        bufs[2].write(np.ones(32, np.uint8))
+        assert seg.directory.holders(0) == {2: "M"}
+    finally:
+        sess.close()
+
+
+def test_failed_flush_restores_write_combining_buffer():
+    sess, seg, bufs = make_session(consistency="release")
+    try:
+        bufs[0].write(np.ones(32, np.uint8))             # pending page 0
+        pre = snapshot(sess, seg)
+        assert seg.pending_pages(0) == 1
+        sess.submit(
+            WriteOp(bufs[0], np.ones(32, np.uint8), offset=PAGE),  # page 1
+            FenceOp(bufs[0]),                            # would drain both
+            ReadOp(bufs[1], PAGES * PAGE, 64),           # fails planning
+        )
+        with pytest.raises(EmuCXLError, match="out-of-bounds"):
+            sess.flush()
+        assert snapshot(sess, seg) == pre
+        assert seg.pending_pages(0) == 1                 # page 1 un-buffered,
+        assert seg.wc[0] == {0}                          # page 0 re-buffered
+    finally:
+        sess.close()
+
+
+def test_journal_partial_rollback_marks():
+    """rollback(mark) unwinds only the entries recorded after the mark."""
+    sess, seg, bufs = make_session()
+    try:
+        journal = DirectoryJournal()
+        seg.plan_write(sess.fabric, 0, 0, 32, journal)       # host0 M page 0
+        mark = journal.mark()
+        seg.plan_read(sess.fabric, 1, 0, 32, journal)        # forward, S+S
+        seg.plan_write(sess.fabric, 2, 0, 32, journal)       # host2 steals M
+        journal.rollback(mark)
+        assert seg.directory.holders(0) == {0: "M"}          # first op kept
+        assert seg.stats.write_misses == 1
+        assert seg.stats.forwards == 0
+        journal.rollback()
+        assert seg.directory.holders(0) == {}
+        assert seg.stats.as_dict() == {k: 0 for k in seg.stats.as_dict()}
+    finally:
+        sess.close()

@@ -126,10 +126,38 @@ def test_shim_never_allocated_address(v1):
 
 
 def test_shim_free_size_validation(v1):
+    """The `size` arg kept for API fidelity is validated, not decorative: a
+    mismatch raises the precise v1 error family and frees NOTHING."""
     a = emucxl_alloc(100, LOCAL_MEMORY)
-    with pytest.raises(EmuCXLError, match="size mismatch"):
+    emucxl_write(np.arange(16, dtype=np.uint8), 0, a)
+    before = emucxl_stats(LOCAL_MEMORY)
+    with pytest.raises(EmuCXLError, match=r"size mismatch: allocation is 100"):
         emucxl_free(a, 200)
-    emucxl_free(a, 100)
+    with pytest.raises(EmuCXLError, match="size mismatch"):
+        emucxl_free(a, 0)
+    # the failed frees were rejected before any state changed
+    assert emucxl_stats(LOCAL_MEMORY) == before
+    assert np.array_equal(emucxl_read(a, 0, 16), np.arange(16, dtype=np.uint8))
+    emucxl_free(a, 100)          # the true size passes
+    assert emucxl_stats(LOCAL_MEMORY) == before - 100
+    with pytest.raises(EmuCXLError, match="double free"):
+        emucxl_free(a, 100)      # staleness still diagnosed after a mismatch
+
+
+def test_shim_free_size_validation_on_segment_attachment(v1):
+    """emucxl_free of a coherent attachment (= detach) validates size too."""
+    sess = default_session()
+    seg = sess.share(8192, host=0)
+    buf = sess.attach(seg, host=0)
+    from repro.core.emucxl import _facade
+
+    addr = _facade.register(buf)
+    with pytest.raises(EmuCXLError, match="size mismatch"):
+        emucxl_free(addr, 4096)
+    assert seg.attachments            # still attached
+    emucxl_free(addr, 8192)           # correct size detaches
+    assert not seg.attachments
+    sess.destroy(seg)
 
 
 def test_shim_adopts_direct_default_instance_addresses(v1):
