@@ -21,10 +21,23 @@ Two experiments over core/coherence.py:
    per host publishes them — asserted to emit strictly fewer protocol
    messages than eager MESI-lite at >= 2 hosts.
 
+3. **Write-combining capacity sweep**: the same cross-host write stream
+   replayed over release segments with ``wc_capacity`` in {1, 4, 16, 64, ∞}.
+   A bounded buffer force-drains its LRU pending page when full, so protocol
+   messages fall monotonically as the buffer deepens — the eager↔fenced trade
+   is a *continuous spectrum*, not a cliff: asserted that ``wc_capacity=1``
+   lands within 10% of eager MESI-lite's message count and that the unbounded
+   end does no forced drains (today's fenced counts).
+
+4. **Fence epochs**: N hosts' fences submitted in ONE async batch drain
+   concurrently (one fabric wave) instead of serially; asserted makespan <=
+   the serial sync-fence sum.
+
 ``--json PATH`` dumps the headline numbers (bytes shared vs copied,
-invalidation counts, modeled speedup, eager-vs-fenced message counts) for the
-CI artifact; ``--smoke`` runs a seconds-scale configuration and enforces the
-acceptance asserts.
+invalidation counts, modeled speedup, eager-vs-fenced message counts, the
+capacity sweep, epoch-vs-serial fence makespans) for the CI artifact;
+``--smoke`` runs a seconds-scale configuration and enforces the acceptance
+asserts.
 
 CSV columns: name,us_per_call,derived — consistent with benchmarks/run.py.
 """
@@ -33,12 +46,12 @@ from __future__ import annotations
 
 import argparse
 import json
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core import emucxl as ecxl
-from repro.core.api import CXLSession
+from repro.core.api import CXLSession, FenceOp
 from repro.core.fabric import Fabric
 from repro.core.policy import SharingAwarePlacement
 from repro.serving.kv_manager import PagedKVPool, SharedPrefixKV
@@ -184,6 +197,91 @@ def bench_false_sharing(writes_per_host: int = 16,
     }
 
 
+def _protocol_msgs(stats) -> int:
+    return stats.invalidations + stats.writebacks + stats.forwards
+
+
+def bench_capacity_sweep(num_hosts: int = 2, pages: int = 80, rounds: int = 3,
+                         capacities=(1, 4, 16, 64, None)
+                         ) -> Dict[str, object]:
+    # pages exceeds the largest finite capacity so EVERY sweep point binds:
+    # with pages <= 64 the {64, None} ends would measure the same config.
+    """One cross-host write stream, replayed per write-combining capacity.
+
+    Each round, every host sweeps all pages in turn (host-major passes — the
+    migratory sharing pattern), then everyone fences once at the end. Deep
+    buffers absorb a whole pass and publish it in one fence burst; shallow
+    buffers force-drain pending pages mid-pass, and each early upgrade steals
+    M from the previous pass's owner — sliding the message count continuously
+    up toward eager MESI-lite as the capacity shrinks to 1."""
+    def run(consistency: str, wc_capacity: Optional[int]) -> Dict[str, int]:
+        with CXLSession(1 << 22, 1 << 24, num_hosts=num_hosts,
+                        fabric=Fabric(num_hosts=num_hosts,
+                                      pool_ports=1)) as sess:
+            seg = sess.share(pages * 4096, host=0, page_bytes=4096,
+                             consistency=consistency, wc_capacity=wc_capacity)
+            bufs = [sess.attach(seg, host=h) for h in range(num_hosts)]
+            payload = np.arange(64, dtype=np.uint8)
+            for _ in range(rounds):
+                for buf in bufs:
+                    for p in range(pages):
+                        buf.write(payload, offset=p * 4096)
+            for buf in bufs:
+                buf.fence()
+            s = seg.stats
+            return {
+                "protocol_msgs": _protocol_msgs(s),
+                "invalidations": s.invalidations,
+                "writebacks": s.writebacks,
+                "forced_drains": s.forced_drains,
+                "forced_drain_pages": s.forced_drain_pages,
+                "wc_writes": s.wc_writes,
+                "fences": s.fences,
+            }
+
+    eager = run("eager", None)
+    sweep = [dict(wc_capacity=cap, **run("release", cap))
+             for cap in capacities]
+    return {
+        "num_hosts": num_hosts,
+        "pages": pages,
+        "rounds": rounds,
+        "eager_protocol_msgs": eager["protocol_msgs"],
+        "sweep": sweep,
+    }
+
+
+def bench_fence_epochs(num_hosts: int = 2, pages: int = 8
+                       ) -> Dict[str, object]:
+    """All hosts' fences in one async batch vs the serial sync-fence sum."""
+    def prepared():
+        sess = CXLSession(1 << 22, 1 << 24, num_hosts=num_hosts,
+                          fabric=Fabric(num_hosts=num_hosts, pool_ports=1))
+        seg = sess.share(pages * 4096, host=0, page_bytes=4096,
+                         consistency="release", wc_capacity=None)
+        bufs = [sess.attach(seg, host=h) for h in range(num_hosts)]
+        payload = np.arange(64, dtype=np.uint8)
+        for buf in bufs:
+            for p in range(pages):
+                buf.write(payload, offset=p * 4096)
+        return sess, bufs
+
+    sess, bufs = prepared()
+    with sess:
+        sess.submit(*[FenceOp(buf) for buf in bufs])
+        overlapped = sess.flush()
+    sess, bufs = prepared()
+    with sess:
+        serial = sum(buf.fence() for buf in bufs)
+    return {
+        "num_hosts": num_hosts,
+        "pages": pages,
+        "epoch_makespan_s": overlapped,
+        "serial_fence_s": serial,
+        "overlap_speedup": serial / overlapped if overlapped > 0 else 1.0,
+    }
+
+
 def bench(hosts=(2, 4), prefix_pages: int = 4, rounds: int = 3,
           writes_per_host: int = 16, check: bool = False
           ) -> tuple[List[str], Dict[str, object]]:
@@ -240,6 +338,52 @@ def bench(hosts=(2, 4), prefix_pages: int = 4, rounds: int = 3,
                     f"{fs['same_page']['protocol_msgs']})"
                 )
                 assert fs["combining_ratio"] > 1.0
+    cs = bench_capacity_sweep(num_hosts=max(hosts), rounds=rounds)
+    artifact["capacity_sweep"] = cs
+    sweep_summary = ";".join(
+        f"cap{'inf' if r['wc_capacity'] is None else r['wc_capacity']}="
+        f"{r['protocol_msgs']}" for r in cs["sweep"])
+    rows.append(
+        f"coherence_capacity_sweep_h{cs['num_hosts']},0,"
+        f"eager_msgs={cs['eager_protocol_msgs']},{sweep_summary}"
+    )
+    fe = bench_fence_epochs(num_hosts=max(hosts))
+    artifact["fence_epochs"] = fe
+    rows.append(
+        f"coherence_fence_epochs_h{fe['num_hosts']},0,"
+        f"epoch_makespan_s={fe['epoch_makespan_s']:.3e},"
+        f"serial_fence_s={fe['serial_fence_s']:.3e},"
+        f"overlap_speedup={fe['overlap_speedup']:.2f}x"
+    )
+    if check:
+        msgs = [r["protocol_msgs"] for r in cs["sweep"]]
+        for shallow, deep in zip(msgs, msgs[1:]):
+            # monotone within 5% tolerance: deepening the WC buffer must not
+            # meaningfully increase protocol traffic
+            assert deep <= shallow * 1.05, (
+                f"capacity sweep not monotone: {msgs} "
+                f"(eager={cs['eager_protocol_msgs']})"
+            )
+        assert msgs[-1] < msgs[0], (
+            f"deepening the buffer must shed protocol traffic: {msgs}"
+        )
+        cap1 = cs["sweep"][0]
+        assert cap1["wc_capacity"] == 1
+        assert (abs(cap1["protocol_msgs"] - cs["eager_protocol_msgs"])
+                <= 0.10 * cs["eager_protocol_msgs"]), (
+            f"wc_capacity=1 must land within 10% of eager message counts "
+            f"({cap1['protocol_msgs']} vs {cs['eager_protocol_msgs']})"
+        )
+        unbounded = cs["sweep"][-1]
+        assert unbounded["wc_capacity"] is None
+        assert unbounded["forced_drains"] == 0, (
+            "an unbounded buffer must never force-drain (legacy fenced "
+            "behavior)"
+        )
+        assert fe["epoch_makespan_s"] <= fe["serial_fence_s"] * (1 + 1e-9), (
+            f"epoch-scheduled fences must not cost more than serial fencing "
+            f"({fe['epoch_makespan_s']} vs {fe['serial_fence_s']})"
+        )
     return rows, artifact
 
 

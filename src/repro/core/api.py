@@ -33,7 +33,7 @@ from typing import Dict, List, Optional, Union
 
 import numpy as np
 
-from repro.core.coherence import SharedSegment
+from repro.core.coherence import DEFAULT_WC_CAPACITY, SharedSegment
 from repro.core.emucxl import (
     REMOTE_MEMORY,
     EmuCXL,
@@ -209,7 +209,9 @@ class CXLSession:
 
     # ------------------------------------------------------------------ shared segments
     def share(self, size: int, host: int = 0, page_bytes: int = 4096,
-              writers=None, consistency: str = "eager") -> SharedSegment:
+              writers=None, consistency: str = "eager",
+              wc_capacity: Optional[int] = DEFAULT_WC_CAPACITY
+              ) -> SharedSegment:
         """Create a hardware-coherent shared segment (core/coherence.py).
 
         One pooled copy of the bytes, charged once to `host`'s quota; any host
@@ -218,10 +220,13 @@ class CXLSession:
         sharing-aware placement can pick the segment's pool port.
         ``consistency="release"`` enables write-combining: writes buffer
         locally per (segment, host) and only publish — invalidations,
-        writebacks — at a ``fence()``."""
+        writebacks — at a ``fence()``. The buffer holds at most `wc_capacity`
+        pages per host (None = unbounded); overflowing it force-drains the
+        LRU pending page through the normal upgrade protocol."""
         with self._lib._lock:
             self._check_open()
-            return self._lib.share(size, host, page_bytes, writers, consistency)
+            return self._lib.share(size, host, page_bytes, writers,
+                                   consistency, wc_capacity)
 
     def attach(self, segment: SharedSegment, host: int = 0) -> Buffer:
         """Map `segment` for `host`; returns a Buffer over the shared bytes.
@@ -280,18 +285,26 @@ class CXLSession:
         makespan. Sugar for submitting MigrateOps and flushing.
 
         All-or-nothing staging: if any move fails validation, the moves already
-        enqueued are withdrawn — none of the batch leaks into a later flush."""
-        tickets = []
-        try:
-            for move in moves:
-                buf, node = move[0], move[1]
-                host = move[2] if len(move) > 2 else None
-                tickets.append(self.submit(MigrateOp(buf, node, host)))
-        except Exception:
-            for ticket in tickets:
-                self.queue.cancel(ticket)
-            raise
-        return self.flush()
+        enqueued are withdrawn — none of the batch leaks into a later flush.
+        The flush is scoped to this batch's own tickets: operations submitted
+        earlier stay queued for the caller's next ``flush()`` and neither
+        execute here nor fold into the returned makespan."""
+        # One critical section from first staging to flush: without it a
+        # concurrent flush() could drain (or race) the half-staged batch.
+        with self._lib._lock:
+            self._check_open()
+            tickets = []
+            try:
+                for move in moves:
+                    buf, node = move[0], move[1]
+                    host = move[2] if len(move) > 2 else None
+                    tickets.append(
+                        self.queue.submit(MigrateOp(buf, node, host)))
+            except Exception:
+                for ticket in tickets:
+                    self.queue.cancel(ticket)
+                raise
+            return self.queue.flush(only=tickets)
 
     # ------------------------------------------------------------------ async queue
     def submit(self, *ops) -> Union[Ticket, List[Ticket]]:
@@ -299,12 +312,27 @@ class CXLSession:
 
         Nothing executes until ``flush()`` (or a ticket's ``result()``) — all ops
         pending at that moment complete as ONE overlapped batch on the fabric.
-        """
-        self._check_open()
-        tickets = [self.queue.submit(op) for op in ops]
-        if not tickets:
-            raise EmuCXLError("submit() needs at least one operation")
-        return tickets[0] if len(tickets) == 1 else tickets
+
+        All-or-nothing staging: if any op fails validation (stale handle,
+        unknown op type, foreign buffer), the ops already enqueued by this
+        call are withdrawn — a partially-staged submit never leaves tickets
+        silently pending to execute on an unrelated later flush."""
+        # Stage the whole group under one lock hold: a concurrent flush()
+        # between stagings could execute the early tickets before a later op
+        # fails validation, breaking the withdraw-on-failure guarantee.
+        with self._lib._lock:
+            self._check_open()
+            if not ops:
+                raise EmuCXLError("submit() needs at least one operation")
+            tickets: List[Ticket] = []
+            try:
+                for op in ops:
+                    tickets.append(self.queue.submit(op))
+            except Exception:
+                for ticket in tickets:
+                    self.queue.cancel(ticket)
+                raise
+            return tickets[0] if len(tickets) == 1 else tickets
 
     def flush(self) -> float:
         """Complete every pending op; returns the batch's modeled makespan."""

@@ -44,12 +44,24 @@ same writes to disjoint pages settle into silent M hits.
 
 **Release consistency / write-combining** (``consistency="release"``): instead
 of upgrading to M eagerly on every write, a fenced segment absorbs each host's
-writes into a per-(segment, host) write-combining buffer (a set of pending
-pages) and only runs the M-upgrade protocol — invalidations, writebacks, RFO
-fetches — when the host issues a ``fence()``. K writes to one page between
-fences collapse into ONE upgrade, which is what defuses false-sharing storms;
-the cost is the weaker model (peers may read stale bytes until the fence, the
-CXL.mem analogue of releasing a lock).
+writes into a per-(segment, host) write-combining buffer (an LRU-ordered set
+of pending pages) and only runs the M-upgrade protocol — invalidations,
+writebacks, RFO fetches — when the host issues a ``fence()``. K writes to one
+page between fences collapse into ONE upgrade, which is what defuses
+false-sharing storms; the cost is the weaker model (peers may read stale bytes
+until the fence, the CXL.mem analogue of releasing a lock). A host reading a
+page it has write-combined sees its own pending store (store forwarding) — a
+read hit, no fabric fetch.
+
+The buffer is **capacity-bounded** (``wc_capacity`` pages per host, default
+``DEFAULT_WC_CAPACITY``; ``None`` = unbounded): a real WC/snoop buffer is a
+finite hardware structure, so when a host's pending set is full the next
+distinct page forces a **partial drain** — the least-recently-written pending
+page is evicted through the normal M-upgrade protocol (journaled like any
+other planner mutation) and counted in ``forced_drains``/``forced_drain_pages``.
+Shrinking the capacity slides release consistency continuously toward eager
+MESI-lite: at ``wc_capacity=1`` nearly every distinct-page write drains its
+predecessor, matching eager message counts to within the one-page lag.
 
 **Transactional planning**: every directory/stats/write-buffer mutation the
 planners make can be recorded in a ``DirectoryJournal``. ``OpQueue.flush``
@@ -77,6 +89,11 @@ EAGER = "eager"
 RELEASE = "release"
 _CONSISTENCY_MODES = (EAGER, RELEASE)
 
+# Write-combining buffer depth (pages per host) a release segment gets unless
+# share(..., wc_capacity=) overrides it. 64 entries is the scale of a real
+# WC/snoop buffer; pass wc_capacity=None for the (pre-bound) unbounded model.
+DEFAULT_WC_CAPACITY = 64
+
 # Control-message payload for an invalidation (a snoop/back-invalidate carries a
 # physical address + opcode — one flit, modeled as a cache line on the wire).
 MSG_BYTES = 64
@@ -101,6 +118,9 @@ class CoherenceStats:
     e_upgrades: int = 0            # silent E -> M upgrades (no RFO, no inval)
     wc_writes: int = 0             # writes absorbed by a write-combining buffer
     fences: int = 0                # release fences that drained pending pages
+    fence_coalesced: int = 0       # back-to-back fences folded into one drain
+    forced_drains: int = 0         # capacity evictions (full WC buffer)
+    forced_drain_pages: int = 0    # pages upgraded early by forced drains
     bytes_moved: int = 0           # page payloads moved by the protocol
     msg_bytes: int = 0             # control-message bytes (invalidations)
 
@@ -138,7 +158,9 @@ class DirectoryJournal:
 
     def __init__(self):
         # ("dir", seg, page, host, old_state) | ("stat", seg, field, delta)
-        # | ("wc", seg, host, page, added)
+        # | ("wc+", seg, host, page) — page appended at the MRU end
+        # | ("wc-", seg, host, page, pos) — page removed from LRU position pos
+        # | ("wc~", seg, host, page, pos) — page moved from pos to the MRU end
         self._entries: List[Tuple] = []
 
     def __len__(self) -> int:
@@ -155,9 +177,29 @@ class DirectoryJournal:
     def record_stat(self, seg: "SharedSegment", field: str, delta: int) -> None:
         self._entries.append(("stat", seg, field, delta))
 
-    def record_wc(self, seg: "SharedSegment", host: int, page: int,
-                  added: bool) -> None:
-        self._entries.append(("wc", seg, host, page, added))
+    def record_wc_add(self, seg: "SharedSegment", host: int, page: int) -> None:
+        self._entries.append(("wc+", seg, host, page))
+
+    def record_wc_remove(self, seg: "SharedSegment", host: int, page: int,
+                         pos: int) -> None:
+        self._entries.append(("wc-", seg, host, page, pos))
+
+    def record_wc_touch(self, seg: "SharedSegment", host: int, page: int,
+                        pos: int) -> None:
+        self._entries.append(("wc~", seg, host, page, pos))
+
+    @staticmethod
+    def _wc_insert_at(seg: "SharedSegment", host: int, page: int,
+                      pos: int) -> None:
+        """Re-place `page` at LRU position `pos` — rollback must restore the
+        buffer's *order* byte-identically, or a replayed batch would evict a
+        different victim than the original would have."""
+        pending = seg.wc.setdefault(host, {})
+        order = [p for p in pending if p != page]
+        order.insert(pos, page)
+        pending.clear()
+        for p in order:
+            pending[p] = None
 
     def rollback(self, to_mark: int = 0) -> None:
         """Undo every recorded mutation after `to_mark`, newest first."""
@@ -170,15 +212,17 @@ class DirectoryJournal:
             elif kind == "stat":
                 _, _, field, delta = entry
                 setattr(seg.stats, field, getattr(seg.stats, field) - delta)
-            else:  # wc
-                _, _, host, page, added = entry
-                pending = seg.wc.setdefault(host, set())
-                if added:
-                    pending.discard(page)
-                else:
-                    pending.add(page)
-                if not pending:
-                    seg.wc.pop(host, None)
+            elif kind == "wc+":
+                _, _, host, page = entry
+                pending = seg.wc.get(host)
+                if pending is not None:
+                    pending.pop(page, None)
+                    if not pending:
+                        seg.wc.pop(host, None)
+            else:  # "wc-" undoes a removal, "wc~" undoes a move-to-MRU: both
+                # re-place the page at its recorded LRU position.
+                _, _, host, page, pos = entry
+                self._wc_insert_at(seg, host, page, pos)
 
 
 class Directory:
@@ -257,13 +301,19 @@ class SharedSegment:
 
     def __init__(self, size: int, page_bytes: int, backing_addr: int,
                  home_host: int, port: int, sid: Optional[int] = None,
-                 consistency: str = EAGER):
+                 consistency: str = EAGER,
+                 wc_capacity: Optional[int] = DEFAULT_WC_CAPACITY):
         if page_bytes <= 0:
             raise CoherenceError(f"invalid page_bytes {page_bytes}")
         if consistency not in _CONSISTENCY_MODES:
             raise CoherenceError(
                 f"unknown consistency {consistency!r}; options: "
                 f"{list(_CONSISTENCY_MODES)}"
+            )
+        if wc_capacity is not None and wc_capacity < 1:
+            raise CoherenceError(
+                f"invalid wc_capacity {wc_capacity}; need >= 1 page per host "
+                f"(or None for an unbounded buffer)"
             )
         self.sid = next(SharedSegment._next_id) if sid is None else sid
         self.size = size
@@ -273,11 +323,14 @@ class SharedSegment:
         self.home_host = home_host
         self.port = port
         self.consistency = consistency
+        self.wc_capacity = wc_capacity
         self.directory = Directory(self.num_pages)
         self.stats = CoherenceStats()
         # Release consistency: host -> pages written but not yet fenced (the
-        # write-combining buffer; empty/absent for eager segments).
-        self.wc: Dict[int, Set[int]] = {}
+        # write-combining buffer; empty/absent for eager segments). The inner
+        # dict is an *ordered set*: iteration order is LRU -> MRU write
+        # recency, which picks the victim when the buffer hits wc_capacity.
+        self.wc: Dict[int, Dict[int, None]] = {}
         self.attachments: Set[int] = set()     # attachment addresses
         self.attached_hosts: Dict[int, int] = {}   # host -> attachment count
         self.destroyed = False
@@ -305,6 +358,39 @@ class SharedSegment:
             journal.record_stat(self, field, amount)
         setattr(self.stats, field, getattr(self.stats, field) + amount)
 
+    # Write-combining buffer mutators: every change is journaled with enough
+    # positional information to restore the LRU *order*, not just membership.
+    def _wc_add(self, journal: Optional[DirectoryJournal], host: int,
+                page: int) -> None:
+        if journal is not None:
+            journal.record_wc_add(self, host, page)
+        self.wc.setdefault(host, {})[page] = None
+
+    def _wc_remove(self, journal: Optional[DirectoryJournal], host: int,
+                   page: int) -> None:
+        pending = self.wc[host]
+        if journal is not None:
+            # The hot removals (forced-drain eviction, fence drain) always
+            # take the LRU head — O(1); the list scan only runs off that path.
+            pos = (0 if next(iter(pending)) == page
+                   else list(pending).index(page))
+            journal.record_wc_remove(self, host, page, pos)
+        del pending[page]
+        if not pending:
+            self.wc.pop(host, None)
+
+    def _wc_touch(self, journal: Optional[DirectoryJournal], host: int,
+                  page: int) -> None:
+        """Refresh `page` to most-recently-written (it stays pending)."""
+        pending = self.wc[host]
+        if next(reversed(pending)) == page:
+            return
+        if journal is not None:
+            journal.record_wc_touch(self, host, page,
+                                    list(pending).index(page))
+        del pending[page]
+        pending[page] = None
+
     # ------------------------------------------------------------------ protocol
     def _path(self, fabric, host: int) -> Tuple[str, ...]:
         """Fabric route between `host`'s cache and this segment's pool port.
@@ -327,6 +413,13 @@ class SharedSegment:
         for page in self.pages_for(offset, n):
             st = d.state(page, host)
             if st in (MODIFIED, EXCLUSIVE, SHARED):
+                self._bump(journal, "read_hits")
+                continue
+            if page in self.wc.get(host, ()):
+                # Store forwarding: the host is reading bytes it has
+                # write-combined but not yet fenced — its own pending store is
+                # the freshest copy, so there is nothing to fetch. (Without
+                # this, a host paid a fabric fetch for bytes it just wrote.)
                 self._bump(journal, "read_hits")
                 continue
             self._bump(journal, "read_misses")
@@ -401,7 +494,10 @@ class SharedSegment:
 
         Eager segments upgrade to M immediately (invalidations/writebacks per
         page); release segments absorb non-M/E pages into the host's
-        write-combining buffer and emit nothing until ``plan_fence``."""
+        write-combining buffer and emit nothing until ``plan_fence`` — unless
+        the buffer is at ``wc_capacity``, in which case the least-recently
+        written pending page is force-drained through the normal upgrade
+        protocol to make room (a real WC buffer's capacity eviction)."""
         msgs: List[CoherenceMsg] = []
         d = self.directory
         for page in self.pages_for(offset, n):
@@ -414,11 +510,19 @@ class SharedSegment:
                 self._upgrade(fabric, host, page, journal, msgs)
                 continue
             if self.consistency == RELEASE:
-                pending = self.wc.setdefault(host, set())
-                if page not in pending:
-                    if journal is not None:
-                        journal.record_wc(self, host, page, added=True)
-                    pending.add(page)
+                pending = self.wc.get(host)
+                if pending is not None and page in pending:
+                    self._wc_touch(journal, host, page)
+                    self._bump(journal, "wc_writes")
+                    continue
+                if (self.wc_capacity is not None and pending is not None
+                        and len(pending) >= self.wc_capacity):
+                    victim = next(iter(pending))     # LRU pending page
+                    self._wc_remove(journal, host, victim)
+                    self._bump(journal, "forced_drains")
+                    self._bump(journal, "forced_drain_pages")
+                    self._upgrade(fabric, host, victim, journal, msgs)
+                self._wc_add(journal, host, page)
                 self._bump(journal, "wc_writes")
                 continue
             self._upgrade(fabric, host, page, journal, msgs)
@@ -430,19 +534,17 @@ class SharedSegment:
         """Release fence: drain `host`'s write-combining buffer.
 
         Every pending page runs the M-upgrade protocol exactly once — however
-        many writes it absorbed since the last fence — and the buffer empties.
+        many writes it absorbed since the last fence — and the buffer empties,
+        draining in LRU order (so each journaled removal is the O(1) head).
         No-op (and uncounted) when nothing is pending, so fencing an eager
         segment is free."""
         msgs: List[CoherenceMsg] = []
         pending = self.wc.get(host)
         if not pending:
             return msgs
-        for page in sorted(pending):
-            if journal is not None:
-                journal.record_wc(self, host, page, added=False)
+        for page in list(pending):
+            self._wc_remove(journal, host, page)
             self._upgrade(fabric, host, page, journal, msgs)
-        pending.clear()
-        self.wc.pop(host, None)
         self._bump(journal, "fences")
         return msgs
 
@@ -482,6 +584,7 @@ class SharedSegment:
             "home_host": self.home_host,
             "port": self.port,
             "consistency": self.consistency,
+            "wc_capacity": self.wc_capacity,
             "pending_pages": self.pending_pages(),
             "attached_hosts": sorted(self.attached_hosts),
             "stats": self.stats.as_dict(),

@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core.coherence import (
     _CONSISTENCY_MODES,
+    DEFAULT_WC_CAPACITY,
     EAGER,
     CoherenceStats,
     DirectoryJournal,
@@ -73,16 +74,19 @@ def _debug_check_enabled() -> bool:
     return os.environ.get("EMUCXL_CHECK", "") not in ("", "0")
 
 
-def _call_with_consistency(fn, consistency: str, *args):
-    """Invoke a placement hook, passing ``consistency=`` only when the hook
-    accepts it — older/third-party policies keep their two-argument shape."""
+def _call_with_hints(fn, hints: Dict[str, object], *args):
+    """Invoke a placement hook, passing each hint keyword only when the hook
+    accepts it — older/third-party policies keep their narrower signatures
+    (two positional args, or ``consistency=`` but no ``wc_capacity=``). A
+    hook declaring ``**kwargs`` receives every hint."""
     try:
         params = inspect.signature(fn).parameters
     except (TypeError, ValueError):
         params = {}
-    if "consistency" in params:
-        return fn(*args, consistency=consistency)
-    return fn(*args)
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return fn(*args, **hints)
+    accepted = {k: v for k, v in hints.items() if k in params}
+    return fn(*args, **accepted)
 
 
 class EmuCXLError(RuntimeError):
@@ -821,18 +825,24 @@ class EmuCXL:
     # ------------------------------------------------------------------ shared segments
     def share(self, size: int, host: int = 0, page_bytes: int = _PAGE,
               writers: Optional[Sequence[int]] = None,
-              consistency: str = EAGER) -> SharedSegment:
+              consistency: str = EAGER,
+              wc_capacity: Optional[int] = DEFAULT_WC_CAPACITY
+              ) -> SharedSegment:
         """Create a hardware-coherent shared segment of `size` bytes.
 
         One pooled allocation backs the segment (charged to `host`'s quota —
         the *only* charge no matter how many hosts attach); its pool port comes
-        from the placement policy, which may use the `writers` hint and the
-        consistency mode to co-locate the segment's port away from other
-        write-heavy segments (``SharingAwarePlacement`` weighs
-        ``consistency="release"`` segments lighter — write combining defuses
-        their invalidation storms). Returns the ``SharedSegment``; call
-        ``attach`` to map it for a host, and — for release segments —
-        ``fence`` to publish write-combined stores.
+        from the placement policy, which may use the `writers` hint, the
+        consistency mode, and `wc_capacity` to co-locate the segment's port
+        away from other write-heavy segments (``SharingAwarePlacement`` weighs
+        ``consistency="release"`` segments lighter the deeper their
+        write-combining buffer — combining defuses their invalidation storms).
+        `wc_capacity` bounds the per-host write-combining buffer in pages
+        (default ``DEFAULT_WC_CAPACITY``; None = unbounded; ignored by eager
+        segments, which never buffer): a full buffer force-drains its LRU
+        pending page through the normal upgrade protocol. Returns the
+        ``SharedSegment``; call ``attach`` to map it for a host, and — for
+        release segments — ``fence`` to publish write-combined stores.
         """
         with self._lock:
             self._require_init()
@@ -846,22 +856,27 @@ class EmuCXL:
                     f"unknown consistency {consistency!r}; options: "
                     f"{list(_CONSISTENCY_MODES)}"
                 )
+            if wc_capacity is not None and wc_capacity < 1:
+                raise EmuCXLError(
+                    f"invalid wc_capacity {wc_capacity}; need >= 1 page per "
+                    f"host (or None for an unbounded buffer)"
+                )
             writer_hosts = list(writers) if writers is not None else [host]
             for w in writer_hosts:
                 self._check_host(w)
+            hints = {"consistency": consistency, "wc_capacity": wc_capacity}
             port = None
             weight = 0
             picker = (getattr(self.placement, "select_port_for_segment", None)
                       if self.fabric is not None else None)
             if picker is not None:
-                port = _call_with_consistency(
-                    picker, consistency, self.fabric, writer_hosts)
+                port = _call_with_hints(
+                    picker, hints, self.fabric, writer_hosts)
                 # the policy just charged this weight to the port; pay it back
                 # on any failure below (and on destroy)
                 weigher = getattr(self.placement, "segment_weight",
                                   lambda w: 1)
-                weight = _call_with_consistency(
-                    weigher, consistency, writer_hosts)
+                weight = _call_with_hints(weigher, hints, writer_hosts)
             backing_addr = None
             try:
                 if port is not None and not 0 <= port < self.fabric.pool_ports:
@@ -870,7 +885,8 @@ class EmuCXL:
                 backing_addr = self.alloc(size, REMOTE_MEMORY, host, _port=port)
                 seg = SharedSegment(size, page_bytes, backing_addr, host,
                                     self._allocs[backing_addr].port,
-                                    sid=self._next_sid, consistency=consistency)
+                                    sid=self._next_sid, consistency=consistency,
+                                    wc_capacity=wc_capacity)
             except Exception:
                 # A failed share must not leak: pay the policy weight back AND
                 # release the backing charge if the alloc had already landed.

@@ -123,6 +123,7 @@ class Fabric:
         self.clock = 0.0
         self._tids = itertools.count()
         self._active: Dict[int, Transfer] = {}
+        self._cancelled: set = set()    # tids aborted by cancel(), for drain()
 
     def _add_link(self, link: Link) -> None:
         self.links[link.name] = link
@@ -226,12 +227,13 @@ class Fabric:
 
         Reverses begin()'s registration and stats so a failed multi-part
         operation doesn't leave the fabric permanently occupied. No-op if the
-        transfer already completed. peak_concurrency is intentionally left as
-        observed.
+        transfer already completed (it happened; there is nothing to abort).
+        peak_concurrency is intentionally left as observed.
         """
         t = self._active.pop(transfer.tid, None)
         if t is None:
             return
+        self._cancelled.add(t.tid)
         for name in t.path:
             link = self.links[name]
             link.active.discard(t.tid)
@@ -243,15 +245,28 @@ class Fabric:
 
         Other in-flight transfers make proportional progress; contention is the
         whole point. Returns the completion time of `transfer`, or the final
-        clock when draining everything.
+        clock when draining everything. Draining a cancel()ed transfer raises
+        a precise error immediately instead of spinning the clock forward and
+        failing with an opaque "never completed".
         """
         if transfer is None:
             while self._step():
                 pass
+            # Everything in flight has resolved: cancelled tids can no longer
+            # be usefully diagnosed, so drop them (the set must not grow for
+            # the fabric's lifetime in failure-heavy workloads).
+            self._cancelled.clear()
             return self.clock
         while transfer.completed_at is None:
+            if transfer.tid in self._cancelled:
+                raise FabricError(
+                    f"transfer {transfer.tid} was cancelled before completion"
+                )
             if not self._step():
-                raise FabricError(f"transfer {transfer.tid} never completed")
+                raise FabricError(
+                    f"transfer {transfer.tid} never completed (not registered "
+                    f"with this fabric?)"
+                )
         return transfer.completed_at
 
     def transfer(self, path: Iterable[str], nbytes: int) -> float:

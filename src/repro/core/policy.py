@@ -142,19 +142,28 @@ class SharingAwarePlacement:
         return fabric.least_loaded_port()
 
     @staticmethod
-    def segment_weight(writer_hosts, consistency: str = "eager") -> int:
+    def segment_weight(writer_hosts, consistency: str = "eager",
+                       wc_capacity: Optional[int] = None) -> int:
         """The load a segment charges its port — ONE formula, used both when
         charging (select) and when releasing (destroy/failed share). Release
-        segments count each writer at half weight (rounded up): fences batch
-        their invalidation traffic."""
+        segments count their writers at half weight (rounded up): fences batch
+        their invalidation traffic. A bounded write-combining buffer scales
+        that discount back toward eager weight — at ``wc_capacity=1`` nearly
+        every write force-drains immediately, so the segment's invalidation
+        pressure IS eager pressure; deep buffers (or None = unbounded) earn
+        the full half-weight discount."""
         writers = max(len(set(writer_hosts)), 1)
-        if consistency == "release":
-            return max((writers + 1) // 2, 1)
-        return writers
+        if consistency != "release":
+            return writers
+        half = max((writers + 1) // 2, 1)
+        if wc_capacity is None:
+            return half
+        return half + (writers - half) // wc_capacity
 
     def select_port_for_segment(self, fabric, writer_hosts,
-                                consistency: str = "eager") -> int:
-        weight = self.segment_weight(writer_hosts, consistency)
+                                consistency: str = "eager",
+                                wc_capacity: Optional[int] = None) -> int:
+        weight = self.segment_weight(writer_hosts, consistency, wc_capacity)
         port = min(
             range(fabric.pool_ports),
             key=lambda j: (self._port_writer_weight.get(j, 0),

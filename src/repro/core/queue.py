@@ -16,9 +16,20 @@ makespan reflects overlap, not the serial sum a loop of v1 calls would charge.
 Ops without a fabric path fall back to the uncontended hw constants and are
 summed serially (there is no contention model to overlap them under).
 
+**Fence epochs**: a ``FenceOp`` is a release point, not just another op. The
+batch is partitioned into epochs per (segment, host) *stream*: ops on the same
+stream submitted after its fence may not overlap the fence's drain traffic
+(they begin in the next fabric wave), while independent ops — other buffers,
+segments, or hosts — planned after the fence still share the fence's fabric
+span, which is what a CXL switch's queued transactions actually permit.
+Back-to-back fences on one stream with no intervening write coalesce into one
+drain (the ``fence_coalesced`` stat): the second fence has nothing left to
+publish.
+
 Batch semantics: costs are planned against start-of-batch placement (the ops are
-"concurrent"); data effects apply in submission order, so a read submitted after
-a write of the same buffer observes it.
+"concurrent" up to fence ordering); data effects apply in submission order, so a
+read submitted after a write of the same buffer observes it — per-host program
+order within a segment is preserved regardless of how waves overlap.
 """
 
 from __future__ import annotations
@@ -157,7 +168,8 @@ class Ticket:
 
     ``result()`` forces a flush of the owning queue if the batch has not been
     completed yet, then returns the op's value (ndarray for reads, the Buffer for
-    migrate/memset, True for writes/memcpy) or re-raises the batch failure.
+    migrate/memset, True for writes/memcpy/fences) or re-raises the batch
+    failure.
     ``modeled_time`` is this op's own modeled duration inside the batch — the
     batch *makespan* (what a caller actually waits) is returned by ``flush()``.
     """
@@ -202,8 +214,11 @@ class _Plan:
     kind: str                       # noop|read|write|migrate|memcpy|memset|fence
     buf: Any = None                 # primary buffer handle (dst for memcpy)
     src: Any = None                 # source handle (memcpy only)
-    # In-flight fabric Transfers, if routed. A coherent access owns several:
-    # its data DMA plus every coherence message it triggered.
+    # Fabric routes this op wants: (link path, payload bytes). They are NOT
+    # begun at plan time — flush's wave scheduler begins them when the op's
+    # fence epoch starts, filling `transfers` with the in-flight Transfers.
+    routes: List[Tuple[Tuple[str, ...], int]] = dataclasses.field(
+        default_factory=list)
     transfers: List[Any] = dataclasses.field(default_factory=list)
     # Uncontended fallback charges: (tier, seconds) — the same per-tier split
     # the sync path charges (EmuCXL._AccessPlan), so parity holds exactly.
@@ -214,6 +229,15 @@ class _Plan:
     value_byte: int = 0
     node: int = 0                   # migrate destination
     staged_addr: Optional[int] = None   # migrate destination allocation
+    # Fence-epoch bookkeeping: the (sid, host) streams this op belongs to (a
+    # memcpy may touch two), the subset it *writes*, the coalescing metadata
+    # for fences, and the fabric wave flush assigned it to.
+    streams: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    write_streams: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)
+    segment: Any = None             # fence target segment (coalesced stat)
+    fence_drained: int = 0          # pages this fence drained (0 = no-op fence)
+    wave: int = 0
     # Coherence-journal position before this op planned: an apply-phase failure
     # unwinds the journal back to the first failed op's mark.
     journal_mark: int = 0
@@ -222,12 +246,11 @@ class _Plan:
     def hw_time(self) -> float:
         return sum(t for _, t in self.hw_charges)
 
-    def begin_routes(self, fabric, access_plan) -> "_Plan":
-        """Adopt a lib ``_AccessPlan``: register its routes in flight now (the
-        whole batch overlaps) and carry its fallback charges."""
+    def adopt(self, access_plan) -> "_Plan":
+        """Adopt a lib ``_AccessPlan``: carry its fallback charges and queue
+        its fabric routes for the wave scheduler."""
         self.hw_charges.extend(access_plan.hw_charges)
-        for path, nbytes in access_plan.routes:
-            self.transfers.append(fabric.begin(path, nbytes))
+        self.routes.extend(access_plan.routes)
         return self
 
 
@@ -287,6 +310,13 @@ class OpQueue:
                 ticket._fail(ecxl.EmuCXLError("operation cancelled before flush"))
 
     # ------------------------------------------------------------------ planning
+    @staticmethod
+    def _stream_of(rec) -> List[Tuple[int, int]]:
+        """The (sid, host) fence stream a record belongs to ([] if private)."""
+        if rec.segment is None:
+            return []
+        return [(rec.segment.sid, rec.host)]
+
     def _plan_one(self, lib, fabric, op, journal) -> _Plan:
         hw = lib.hw
         if isinstance(op, MigrateOp):
@@ -304,7 +334,7 @@ class OpQueue:
                          staged_addr=new_addr)
             path = lib._fabric_path(rec, op.node, target_host, new_rec.port)
             if path is not None:
-                plan.transfers.append(fabric.begin(path, rec.size))
+                plan.routes.append((path, rec.size))
             elif op.node != rec.node or op.node == ecxl.LOCAL_MEMORY:
                 plan.hw_charges.append(
                     (ecxl.REMOTE_MEMORY, hw.migrate_time(rec.size)))
@@ -316,29 +346,39 @@ class OpQueue:
             drec = lib._resolve(op.dst.address)
             srec = lib._resolve(op.src.address)
             plan = _Plan("memcpy", buf=op.dst, src=op.src, n=op.size)
-            return plan.begin_routes(
-                fabric, lib._plan_copy(srec, drec, op.size, journal))
+            plan.write_streams = self._stream_of(drec)
+            plan.streams = plan.write_streams + [
+                s for s in self._stream_of(srec)
+                if s not in plan.write_streams]
+            return plan.adopt(lib._plan_copy(srec, drec, op.size, journal))
         rec = lib._resolve(op.buf.address)
+        stream = self._stream_of(rec)
         if isinstance(op, FenceOp):
-            plan = _Plan("fence", buf=op.buf)
-            return plan.begin_routes(fabric, lib._plan_fence(rec, journal))
+            plan = _Plan("fence", buf=op.buf, streams=stream,
+                         segment=rec.segment)
+            if rec.segment is not None:
+                plan.fence_drained = rec.segment.pending_pages(rec.host)
+            return plan.adopt(lib._plan_fence(rec, journal))
         if isinstance(op, ReadOp):
             n = (rec.size - op.offset) if op.size is None else op.size
-            plan = _Plan("read", buf=op.buf, n=n, offset=op.offset)
+            plan = _Plan("read", buf=op.buf, n=n, offset=op.offset,
+                         streams=stream)
             write = False
         elif isinstance(op, WriteOp):
             flat = np.asarray(op.data, dtype=np.uint8).reshape(-1)
             n = op.size if op.size is not None else flat.size
             lib._validate_payload(flat, n)
-            plan = _Plan("write", buf=op.buf, n=n, offset=op.offset, data=flat)
+            plan = _Plan("write", buf=op.buf, n=n, offset=op.offset, data=flat,
+                         streams=stream, write_streams=stream)
             write = True
         else:  # MemsetOp
             n = rec.size if op.size is None else op.size
-            plan = _Plan("memset", buf=op.buf, n=n, value_byte=op.value & 0xFF)
+            plan = _Plan("memset", buf=op.buf, n=n, value_byte=op.value & 0xFF,
+                         streams=stream, write_streams=stream)
             write = True
-        return plan.begin_routes(
-            fabric, lib._plan_dma(rec, plan.offset, plan.n, write=write,
-                                  journal=journal))
+        return plan.adopt(
+            lib._plan_dma(rec, plan.offset, plan.n, write=write,
+                          journal=journal))
 
     # ------------------------------------------------------------------ apply
     def _apply_one(self, lib, plan: _Plan):
@@ -384,14 +424,25 @@ class OpQueue:
         return plan.buf
 
     # ------------------------------------------------------------------ flush
-    def flush(self) -> float:
+    def flush(self, only: Optional[List[Ticket]] = None) -> float:
         """Complete every pending op as ONE overlapped batch; returns the modeled
-        makespan (virtual seconds the whole batch occupies).
+        makespan (virtual seconds the whole batch occupies). With `only`, flush
+        just those still-pending tickets (in submission order) and leave the
+        rest queued — ``CXLSession.migrate_batch`` scopes itself this way so it
+        never drains unrelated ops into its own makespan.
 
-        Fabric-routed ops are begun together and drained once, so they share link
-        bandwidth exactly as concurrent hosts would; fallback (uncontended) ops
-        are summed serially and overlap with the fabric span, since they occupy
-        different modeled resources (HBM/local engines vs fabric links).
+        Fabric-routed ops are scheduled in **fence-epoch waves**: every op
+        starts in wave 0 except ops on a (segment, host) stream that a
+        ``FenceOp`` already closed in this batch — those begin one wave later,
+        after the fence's drain traffic (and everything else in flight)
+        completes. Within a wave, transfers are begun together and drained
+        once, so they share link bandwidth exactly as concurrent hosts would;
+        a batch with no fences is exactly the old single-wave behavior.
+        Fallback (uncontended) ops are summed serially and overlap with the
+        fabric span, since they occupy different modeled resources (HBM/local
+        engines vs fabric links). A fence that drains nothing opens no new
+        wave; if it trails another fence on its stream with no intervening
+        write, the pair coalesces into one drain (``fence_coalesced``).
 
         modeled_time convention: the overlapped fabric span is charged once to
         REMOTE_MEMORY (the fabric engine's counter, matching ``migrate_batch``),
@@ -410,7 +461,13 @@ class OpQueue:
         """
         lib = self._session.lib
         with lib._lock:
-            tickets, self._pending = self._pending, []
+            if only is None:
+                tickets, self._pending = self._pending, []
+            else:
+                chosen = {id(t) for t in only}
+                tickets = [t for t in self._pending if id(t) in chosen]
+                self._pending = [t for t in self._pending
+                                 if id(t) not in chosen]
             if not tickets:
                 return 0.0
             try:
@@ -424,30 +481,64 @@ class OpQueue:
             plans: List[Tuple[Ticket, _Plan]] = []
             journal = ecxl.DirectoryJournal()
             serial = 0.0
+            # Fence epochs: stream -> wave index its *next* op lands in, and
+            # whether the stream's last epoch boundary was a fence with no
+            # write since (the coalescing precondition).
+            stream_epoch: dict = {}
+            fenced_since_write: dict = {}
             try:
                 for t in tickets:
                     mark = journal.mark()
                     plan = self._plan_one(lib, fabric, t.op, journal)
                     plan.journal_mark = mark
+                    plan.wave = max(
+                        (stream_epoch.get(s, 0) for s in plan.streams),
+                        default=0)
+                    if plan.kind == "fence":
+                        key = plan.streams[0]
+                        if plan.fence_drained:
+                            # Same-stream ops after this fence may not overlap
+                            # its drain: they start in the next fabric wave.
+                            stream_epoch[key] = plan.wave + 1
+                            fenced_since_write[key] = True
+                        elif fenced_since_write.get(key):
+                            # Back-to-back fences, nothing written between:
+                            # one drain serves both. (A no-op fence with no
+                            # draining fence behind it coalesces nothing —
+                            # there is no drain to fold into.)
+                            plan.segment._bump(journal, "fence_coalesced")
+                    else:
+                        for s in plan.write_streams:
+                            fenced_since_write[s] = False
                     plans.append((t, plan))
                     serial += plan.hw_time
                 lib._maybe_check()      # EMUCXL_CHECK: planned batch invariant
             except Exception as e:
                 # Mid-batch failure (quota/capacity/stale handle/bounds):
-                # replay the coherence journal in reverse, release staged
-                # destinations, and deregister in-flight transfers; sources are
-                # untouched, every ticket in the batch fails with the cause.
+                # replay the coherence journal in reverse and release staged
+                # destinations; no fabric transfer has begun yet (routes are
+                # deferred to the wave scheduler below), sources are untouched,
+                # and every ticket in the batch fails with the cause.
                 journal.rollback()
                 for _, plan in plans:
-                    for transfer in plan.transfers:
-                        fabric.cancel(transfer)
                     if plan.staged_addr is not None:
                         lib.free(plan.staged_addr)
                 for t in tickets:
                     t._fail(e)
                 raise
             if fabric is not None:
-                fabric_span = fabric.drain() - start
+                last_wave = max((p.wave for _, p in plans), default=0)
+                for wave in range(last_wave + 1):
+                    for _, plan in plans:
+                        if plan.wave != wave:
+                            continue
+                        for path, nbytes in plan.routes:
+                            plan.transfers.append(fabric.begin(path, nbytes))
+                    # The wave barrier: everything in flight (this wave's
+                    # transfers plus any pre-batch stragglers) completes before
+                    # the next epoch's streams may begin.
+                    fabric.drain()
+                fabric_span = fabric.clock - start
                 makespan = max(fabric_span, serial)
                 lib.modeled_time[ecxl.REMOTE_MEMORY] += fabric_span
             else:

@@ -234,6 +234,58 @@ def test_migrate_batch_sugar():
         assert all(not b.is_local for b in bufs)
 
 
+def test_partial_submit_unwinds_earlier_tickets():
+    """Regression (batch-staging leak): submit(*ops) enqueued left-to-right,
+    so a validation failure on a later op left the earlier tickets silently
+    pending — they executed on the next unrelated flush."""
+    with make_session() as sess:
+        a = sess.alloc(64, ecxl.LOCAL_MEMORY)
+        b = sess.alloc(64, ecxl.LOCAL_MEMORY)
+        stale = sess.alloc(64, ecxl.LOCAL_MEMORY)
+        stale.free()
+        with pytest.raises(StaleHandleError):
+            sess.submit(WriteOp(a, np.full(64, 7, np.uint8)),
+                        MemsetOp(b, 9),
+                        ReadOp(stale, 0, 16))
+        assert sess.pending_ops == 0           # nothing staged behind our back
+        sess.flush()
+        assert np.all(a.read(0, 64) == 0)      # the withdrawn write never ran
+        assert np.all(b.read(0, 64) == 0)
+
+
+def test_submit_on_closed_session_reports_closed():
+    sess = make_session()
+    sess.close()
+    with pytest.raises(EmuCXLError, match="session is closed"):
+        sess.submit()           # closed beats the empty-args diagnostic
+
+
+def test_partial_submit_rejects_unknown_op_type():
+    with make_session() as sess:
+        buf = sess.alloc(64, ecxl.LOCAL_MEMORY)
+        with pytest.raises(EmuCXLError, match="unknown operation type"):
+            sess.submit(WriteOp(buf, np.ones(64, np.uint8)), object())
+        assert sess.pending_ops == 0
+
+
+def test_migrate_batch_flushes_only_its_own_tickets():
+    """migrate_batch must not drain previously-submitted unrelated ops into
+    its batch (or fold them into the returned makespan)."""
+    with make_session(num_hosts=2,
+                      fabric=Fabric(num_hosts=2, pool_ports=1)) as sess:
+        moved = sess.alloc(1 << 16, ecxl.LOCAL_MEMORY)
+        other = sess.alloc(64, ecxl.LOCAL_MEMORY)
+        sess.submit(MemsetOp(other, 3))        # unrelated, stays queued
+        makespan = sess.migrate_batch([(moved, ecxl.REMOTE_MEMORY)])
+        assert makespan > 0
+        assert not moved.is_local              # the batch's own move ran
+        assert sess.pending_ops == 1           # the memset is still pending
+        assert np.all(other.read(0, 64) == 0)  # ... and has not applied
+        # the unrelated op completes on the caller's own flush, not ours
+        sess.flush()
+        assert np.all(other.read(0, 64) == 3)
+
+
 def test_migrate_batch_unwinds_on_staging_failure():
     """A bad move mid-batch withdraws the already-enqueued moves: nothing stays
     pending to execute behind the caller's back on a later flush."""

@@ -354,6 +354,212 @@ def test_share_rejects_unknown_consistency():
         assert sess.stats(ecxl.REMOTE_MEMORY) == 0   # nothing charged
 
 
+# ------------------------------------------------ bounded write combining
+def test_read_of_own_pending_page_is_store_forwarded():
+    """Regression (store forwarding): a host reading a page it has
+    write-combined but not fenced was charged a read_miss plus a fabric
+    fetch — paying the fabric for bytes it just wrote."""
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096, consistency="release")
+        a = sess.attach(seg, host=0)
+        a.write(np.arange(64, dtype=np.uint8))
+        assert seg.pending_pages(0) == 1
+        before = {k: v["bytes_carried"] for k, v in sess.fabric_stats().items()}
+        got = a.read(0, 64)
+        np.testing.assert_array_equal(got, np.arange(64, dtype=np.uint8))
+        assert seg.stats.read_hits == 1
+        assert seg.stats.read_misses == 0
+        assert {k: v["bytes_carried"] for k, v in sess.fabric_stats().items()} \
+            == before                        # no fetch crossed the fabric
+        # a DIFFERENT host reading the page still misses as before
+        b = sess.attach(seg, host=1)
+        b.read(0, 64)
+        assert seg.stats.read_misses == 1
+
+
+def test_wc_capacity_forces_lru_partial_drain():
+    with make_session() as sess:
+        seg = sess.share(4 * 4096, host=0, page_bytes=4096,
+                         consistency="release", wc_capacity=2)
+        a = sess.attach(seg, host=0)
+        for p in range(3):
+            a.write(np.ones(16, np.uint8), offset=p * 4096)
+        # page 0 (least recently written) was evicted through the upgrade
+        # protocol; pages 1 and 2 are still combining
+        assert list(seg.wc[0]) == [1, 2]
+        assert seg.stats.forced_drains == 1
+        assert seg.stats.forced_drain_pages == 1
+        assert seg.directory.holders(0) == {0: MODIFIED}
+        assert seg.stats.write_misses == 1           # the drain, not the writes
+        # re-writing a pending page refreshes recency instead of evicting
+        a.write(np.ones(16, np.uint8), offset=1 * 4096)
+        assert list(seg.wc[0]) == [2, 1]
+        a.write(np.ones(16, np.uint8), offset=3 * 4096)
+        assert list(seg.wc[0]) == [1, 3]             # page 2 was the LRU victim
+        assert seg.stats.forced_drains == 2
+        t = a.fence()
+        assert t > 0
+        assert seg.pending_pages() == 0
+        assert seg.describe()["wc_capacity"] == 2
+
+
+def test_wc_capacity_one_approaches_eager_costs():
+    """The continuity end of the spectrum: at capacity 1, a distinct-page
+    write stream pays an upgrade per write (lagging one page), not one
+    batched burst at the fence."""
+    def protocol_msgs(wc_capacity, consistency="release"):
+        with make_session() as sess:
+            seg = sess.share(4 * 4096, host=0, page_bytes=4096,
+                             consistency=consistency, wc_capacity=wc_capacity)
+            a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+            for r in range(3):
+                for p in range(4):
+                    a.write(np.ones(8, np.uint8), offset=p * 4096)
+                    b.write(np.ones(8, np.uint8), offset=p * 4096)
+            a.fence()
+            b.fence()
+            s = seg.stats
+            return s.invalidations + s.writebacks + s.forwards
+    eager = protocol_msgs(None, consistency="eager")
+    cap1 = protocol_msgs(1)
+    unbounded = protocol_msgs(None)
+    assert unbounded < cap1 <= eager
+
+
+def test_share_rejects_invalid_wc_capacity():
+    with make_session() as sess:
+        with pytest.raises(EmuCXLError, match="wc_capacity"):
+            sess.share(4096, host=0, consistency="release", wc_capacity=0)
+        assert sess.stats(ecxl.REMOTE_MEMORY) == 0   # nothing charged
+    lib = EmuCXL()
+    lib.init(1 << 20, 1 << 20)
+    try:
+        with pytest.raises(EmuCXLError, match="wc_capacity"):
+            lib.share(4096, consistency="release", wc_capacity=-3)
+    finally:
+        lib.exit()
+
+
+def test_v1_share_accepts_wc_capacity():
+    lib = EmuCXL()
+    lib.init(1 << 20, 1 << 20)
+    try:
+        seg = lib.share(2 * 4096, consistency="release", wc_capacity=1)
+        addr = lib.attach(seg, host=0)
+        lib.write(np.ones(8, np.uint8), 0, addr)
+        lib.write(np.ones(8, np.uint8), 4096, addr)   # evicts page 0
+        assert seg.stats.forced_drains == 1
+        lib.detach(addr)
+        lib.destroy_segment(seg)
+    finally:
+        lib.exit()
+
+
+# ------------------------------------------------------------ fence epochs
+def test_back_to_back_fences_coalesce():
+    with make_session() as sess:
+        seg = sess.share(2 * 4096, host=0, page_bytes=4096,
+                         consistency="release")
+        a = sess.attach(seg, host=0)
+        sess.submit(WriteOp(a, np.ones(16, np.uint8)),
+                    FenceOp(a), FenceOp(a), FenceOp(a))
+        sess.flush()
+        assert seg.stats.fences == 1             # one real drain ...
+        assert seg.stats.fence_coalesced == 2    # ... absorbed the other two
+        # a write between fences breaks the chain: the second fence publishes
+        # fresh work (a new page) and is a real drain, not a coalesce
+        sess.submit(FenceOp(a),
+                    WriteOp(a, np.ones(16, np.uint8), offset=4096),
+                    FenceOp(a))
+        sess.flush()
+        assert seg.stats.fences == 2
+        assert seg.stats.fence_coalesced == 2
+
+
+def test_no_op_fences_with_no_drain_coalesce_nothing():
+    """fence_coalesced means 'folded into a real drain': fences on a segment
+    nobody wrote have no drain to fold into and must not count."""
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096, consistency="release")
+        a = sess.attach(seg, host=0)
+        sess.submit(FenceOp(a), FenceOp(a))
+        sess.flush()
+        assert seg.stats.fences == 0
+        assert seg.stats.fence_coalesced == 0
+
+
+def test_placement_hook_with_var_kwargs_receives_all_hints():
+    """A forward-compatible policy declaring **hints must see every hint, not
+    a silently-empty dict."""
+    seen = {}
+
+    class KwargsPolicy(SharingAwarePlacement):
+        def select_port_for_segment(self, fabric, writer_hosts, **hints):
+            seen.update(hints)
+            return 0
+
+    with make_session(placement=KwargsPolicy()) as sess:
+        sess.share(4096, host=0, consistency="release", wc_capacity=7)
+    assert seen["consistency"] == "release"
+    assert seen["wc_capacity"] == 7
+
+
+def test_independent_fences_overlap_in_one_batch():
+    """Two hosts' fences submitted together drain concurrently: the batch
+    makespan beats fencing the same state serially (sync fence per host)."""
+    def pending_state(sess_factory):
+        sess = sess_factory()
+        seg = sess.share(8 * 4096, host=0, page_bytes=4096,
+                         consistency="release")
+        bufs = [sess.attach(seg, host=h) for h in range(2)]
+        for h, buf in enumerate(bufs):
+            for p in range(4):
+                buf.write(np.ones(64, np.uint8), offset=p * 4096)
+        return sess, seg, bufs
+
+    sess, seg, bufs = pending_state(lambda: make_session(num_hosts=2))
+    with sess:
+        sess.submit(FenceOp(bufs[0]), FenceOp(bufs[1]))
+        overlapped = sess.flush()
+    sess, seg, bufs = pending_state(lambda: make_session(num_hosts=2))
+    with sess:
+        serial = bufs[0].fence() + bufs[1].fence()
+    assert overlapped < serial
+
+
+def test_post_fence_ops_on_same_stream_wait_for_the_drain():
+    """An op on the fenced (segment, host) stream submitted after the fence
+    begins in the next fabric wave; an independent host's identical op
+    overlaps the fence's drain traffic in the same wave."""
+    def makespan(post_op_host):
+        with make_session(num_hosts=2) as sess:
+            seg = sess.share(8 * 4096, host=0, page_bytes=4096,
+                             consistency="release")
+            bufs = [sess.attach(seg, host=h) for h in range(2)]
+            for p in range(4):
+                bufs[0].write(np.ones(64, np.uint8), offset=p * 4096)
+            # page 7 is untouched: reading it is a genuine fetch either way
+            sess.submit(FenceOp(bufs[0]),
+                        ReadOp(bufs[post_op_host], 7 * 4096, 4096))
+            return sess.flush()
+    # host0's own post-fence read waits out the drain (second wave); host1's
+    # identical read shares the drain's fabric span — fence ordering costs
+    assert makespan(0) > makespan(1)
+
+
+def test_fence_epoch_wave_preserves_read_your_writes():
+    """Release-segment data semantics across an intra-batch fence: the
+    post-fence read still observes the pre-fence write (program order)."""
+    with make_session() as sess:
+        seg = sess.share(4096, host=0, page_bytes=4096, consistency="release")
+        a = sess.attach(seg, host=0)
+        payload = np.arange(64, dtype=np.uint8)
+        tickets = sess.submit(WriteOp(a, payload), FenceOp(a), ReadOp(a, 0, 64))
+        sess.flush()
+        assert tickets[1].result() is True
+        np.testing.assert_array_equal(tickets[2].result(), payload)
+
+
 # ------------------------------------------------------------------ debug check
 def test_emucxl_check_catches_corrupted_directory(monkeypatch):
     with make_session() as sess:
@@ -670,6 +876,16 @@ def test_release_segments_weigh_lighter_in_placement():
     assert placement.segment_weight([0, 1, 2, 3]) == 4
     assert placement.segment_weight([0, 1, 2, 3], consistency="release") == 2
     assert placement.segment_weight([0], consistency="release") == 1
+    # the half-weight discount scales with write-combining depth: a capacity-1
+    # buffer force-drains nearly every write, so its port pressure IS eager
+    assert placement.segment_weight([0, 1, 2, 3], consistency="release",
+                                    wc_capacity=1) == 4
+    assert placement.segment_weight([0, 1, 2, 3], consistency="release",
+                                    wc_capacity=2) == 3
+    assert placement.segment_weight([0, 1, 2, 3], consistency="release",
+                                    wc_capacity=64) == 2
+    assert placement.segment_weight([0, 1], consistency="release",
+                                    wc_capacity=1) == 2
     with make_session(num_hosts=4, pool_ports=2, placement=placement) as sess:
         eager = sess.share(4096, host=0, writers=[0, 1])                 # w=2
         rel1 = sess.share(4096, host=2, writers=[2, 3],

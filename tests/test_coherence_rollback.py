@@ -2,10 +2,18 @@
 
 The regression guard for the directory undo-journal: any async batch whose
 planning fails mid-way (bounds, short payload, pinned-segment migrate, quota)
-must leave directory holders, per-segment stats, write-combining buffers, and
-``coherence_stats()`` byte-identical to the pre-batch snapshot — under random
-op interleavings (hypothesis or the seeded stub) and in deterministic twins
-that pin each failure mode.
+must leave directory holders, per-segment stats, write-combining buffers —
+*including their LRU order*, which decides future forced-drain victims — and
+``coherence_stats()`` byte-identical to the pre-batch snapshot, under random
+op interleavings (hypothesis or the seeded stub), with capacity-bounded
+buffers whose forced partial drains are themselves journaled, and in
+deterministic twins that pin each failure mode.
+
+The same generator also pins the fence-epoch scheduler's semantics: a flushed
+batch of random reads/writes/fences produces exactly the read values,
+directory state, protocol counts, and write-combining buffers that the same
+ops run synchronously in submission order produce — per-host program order
+within a segment survives wave overlap.
 """
 
 import copy
@@ -27,11 +35,11 @@ PAGE = 4096
 PAGES = 4
 
 
-def make_session(fabric=True, consistency="eager"):
+def make_session(fabric=True, consistency="eager", wc_capacity=None):
     f = Fabric(num_hosts=NUM_HOSTS, pool_ports=2) if fabric else None
     sess = CXLSession(1 << 22, 1 << 24, num_hosts=NUM_HOSTS, fabric=f)
     seg = sess.share(PAGES * PAGE, host=0, page_bytes=PAGE,
-                     consistency=consistency)
+                     consistency=consistency, wc_capacity=wc_capacity)
     bufs = [sess.attach(seg, host=h) for h in range(NUM_HOSTS)]
     return sess, seg, bufs
 
@@ -40,7 +48,9 @@ def snapshot(sess, seg):
     return (
         seg.directory.snapshot(),
         seg.stats.as_dict(),
-        {h: set(p) for h, p in seg.wc.items()},
+        # list(), not set(): the buffer's LRU *order* picks forced-drain
+        # victims, so rollback must restore it byte-identically.
+        {h: list(p) for h, p in seg.wc.items()},
         copy.deepcopy(sess.coherence_stats()),
     )
 
@@ -84,7 +94,9 @@ _OP = st.tuples(st.integers(0, 3), st.integers(0, NUM_HOSTS - 1),
 _WARM = st.tuples(st.integers(0, NUM_HOSTS - 1), st.booleans())
 
 
-@pytest.mark.parametrize("consistency", ["eager", "release"])
+@pytest.mark.parametrize("consistency,wc_capacity",
+                         [("eager", None), ("release", None), ("release", 2)],
+                         ids=["eager", "release-unbounded", "release-cap2"])
 @pytest.mark.parametrize("with_fabric", [True, False],
                          ids=["fabric", "no-fabric"])
 @settings(max_examples=15)
@@ -92,9 +104,13 @@ _WARM = st.tuples(st.integers(0, NUM_HOSTS - 1), st.booleans())
        before=st.lists(_OP, min_size=0, max_size=8),
        after=st.lists(_OP, min_size=0, max_size=8),
        failer=st.integers(0, len(_FAILERS) - 1))
-def test_failed_flush_restores_coherence_state(consistency, with_fabric,
-                                               warm, before, after, failer):
-    sess, seg, bufs = make_session(with_fabric, consistency)
+def test_failed_flush_restores_coherence_state(consistency, wc_capacity,
+                                               with_fabric, warm, before,
+                                               after, failer):
+    # wc_capacity=2 with 4 pages makes the random batches overflow the
+    # write-combining buffer, so forced partial drains (and their LRU
+    # evictions) are exercised under rollback, not just plain buffering.
+    sess, seg, bufs = make_session(with_fabric, consistency, wc_capacity)
     try:
         warm_up(seg, bufs, warm)
         pre = snapshot(sess, seg)
@@ -155,9 +171,127 @@ def test_failed_flush_restores_write_combining_buffer():
             sess.flush()
         assert snapshot(sess, seg) == pre
         assert seg.pending_pages(0) == 1                 # page 1 un-buffered,
-        assert seg.wc[0] == {0}                          # page 0 re-buffered
+        assert list(seg.wc[0]) == [0]                    # page 0 re-buffered
     finally:
         sess.close()
+
+
+def test_failed_flush_restores_forced_drain_state():
+    """A rolled-back forced drain restores the victim page to its original
+    LRU slot and zeroes the forced-drain counters."""
+    sess, seg, bufs = make_session(consistency="release", wc_capacity=2)
+    try:
+        bufs[0].write(np.ones(32, np.uint8), offset=0)       # pending: [0,
+        bufs[0].write(np.ones(32, np.uint8), offset=PAGE)    #           1]
+        pre = snapshot(sess, seg)
+        assert list(seg.wc[0]) == [0, 1]
+        sess.submit(
+            # Buffer full: planning this write force-drains LRU page 0 ...
+            WriteOp(bufs[0], np.ones(32, np.uint8), offset=2 * PAGE),
+            # ... and this op fails, unwinding the whole batch.
+            ReadOp(bufs[1], PAGES * PAGE, 64),
+        )
+        with pytest.raises(EmuCXLError, match="out-of-bounds"):
+            sess.flush()
+        assert snapshot(sess, seg) == pre
+        assert list(seg.wc[0]) == [0, 1]                 # order restored too
+        assert seg.stats.forced_drains == 0
+        assert seg.directory.holders(0) == {}            # upgrade undone
+        # replaying the same write for real evicts page 0 as planned
+        bufs[0].write(np.ones(32, np.uint8), offset=2 * PAGE)
+        assert list(seg.wc[0]) == [1, 2]
+        assert seg.stats.forced_drains == 1
+        assert seg.directory.holders(0) == {0: "M"}
+    finally:
+        sess.close()
+
+
+def test_rewrite_touch_rollback_restores_lru_order():
+    """Re-writing a pending page moves it to MRU; rollback puts it back."""
+    sess, seg, bufs = make_session(consistency="release", wc_capacity=3)
+    try:
+        for p in range(3):
+            bufs[0].write(np.ones(8, np.uint8), offset=p * PAGE)
+        assert list(seg.wc[0]) == [0, 1, 2]
+        sess.submit(
+            WriteOp(bufs[0], np.ones(8, np.uint8), offset=0),   # touch: 0->MRU
+            ReadOp(bufs[1], PAGES * PAGE, 64),                  # fails
+        )
+        with pytest.raises(EmuCXLError, match="out-of-bounds"):
+            sess.flush()
+        assert list(seg.wc[0]) == [0, 1, 2]
+        bufs[0].write(np.ones(8, np.uint8), offset=0)
+        assert list(seg.wc[0]) == [1, 2, 0]              # the touch, for real
+    finally:
+        sess.close()
+
+
+# ---------------------------------------------------------------- program order
+def _run_ops(sess, seg, bufs, ops, *, async_batch):
+    """Execute the op stream either as one flushed batch or synchronously in
+    submission order; returns the list of read results."""
+    if async_batch:
+        tickets = []
+        for kind, host, page in ops:
+            buf = bufs[host]
+            if kind == 0:
+                tickets.append(sess.submit(ReadOp(buf, page * PAGE, 32)))
+            elif kind == 1:
+                payload = np.full(32, (host * PAGES + page + 1) % 251, np.uint8)
+                sess.submit(WriteOp(buf, payload, offset=page * PAGE))
+            elif kind == 2:
+                sess.submit(MemsetOp(buf, value=host + 1, size=32))
+            else:
+                sess.submit(FenceOp(buf))
+        sess.flush()
+        return [t.result() for t in tickets]
+    out = []
+    for kind, host, page in ops:
+        buf = bufs[host]
+        if kind == 0:
+            out.append(buf.read(page * PAGE, 32))
+        elif kind == 1:
+            payload = np.full(32, (host * PAGES + page + 1) % 251, np.uint8)
+            buf.write(payload, offset=page * PAGE)
+        elif kind == 2:
+            buf.memset(host + 1, 32)
+        else:
+            buf.fence()
+    return out
+
+
+@pytest.mark.parametrize("consistency,wc_capacity",
+                         [("eager", None), ("release", 2)],
+                         ids=["eager", "release-cap2"])
+@settings(max_examples=15)
+@given(ops=st.lists(_OP, min_size=1, max_size=12))
+def test_flush_preserves_program_order(consistency, wc_capacity, ops):
+    """The fence-epoch scheduler only re-times ops; it must not reorder their
+    effects. One flushed batch of random reads/writes/memsets/fences lands on
+    exactly the bytes, read values, directory state, and protocol counts that
+    the same stream run synchronously produces — including forced partial
+    drains, whose victims depend on LRU order."""
+    sess_a, seg_a, bufs_a = make_session(True, consistency, wc_capacity)
+    sess_b, seg_b, bufs_b = make_session(True, consistency, wc_capacity)
+    try:
+        got = _run_ops(sess_a, seg_a, bufs_a, ops, async_batch=True)
+        want = _run_ops(sess_b, seg_b, bufs_b, ops, async_batch=False)
+        assert len(got) == len(want)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+        assert seg_a.directory.snapshot() == seg_b.directory.snapshot()
+        stats_a, stats_b = seg_a.stats.as_dict(), seg_b.stats.as_dict()
+        # fence_coalesced counts batch-level fence folding — a scheduler stat
+        # the serial reference definitionally cannot accrue.
+        stats_a.pop("fence_coalesced"), stats_b.pop("fence_coalesced")
+        assert stats_a == stats_b
+        assert {h: list(p) for h, p in seg_a.wc.items()} == \
+               {h: list(p) for h, p in seg_b.wc.items()}
+        assert np.array_equal(bufs_a[0].read(0, PAGES * PAGE),
+                              bufs_b[0].read(0, PAGES * PAGE))
+    finally:
+        sess_a.close()
+        sess_b.close()
 
 
 def test_journal_partial_rollback_marks():

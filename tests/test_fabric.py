@@ -308,6 +308,34 @@ def test_host_to_host_migrate_charges_time_without_fabric():
     lib.exit()
 
 
+# ------------------------------------------------------------------ cancel/drain
+def test_drain_of_cancelled_transfer_raises_precisely():
+    """A cancel()ed transfer used to drain into an opaque "transfer N never
+    completed"; the error must say what actually happened."""
+    f = clean_fabric()
+    t = f.begin(f.pool_path(0, 0), 1000)
+    other = f.begin(f.pool_path(1, 1), 1000)
+    f.cancel(t)
+    with pytest.raises(FabricError, match="was cancelled before completion"):
+        f.drain(t)
+    # the clock did not spin forward hunting for the dead transfer, and the
+    # unrelated transfer is still drainable
+    assert f.clock == 0.0
+    assert f.drain(other) == other.completed_at
+    assert f.idle()
+
+
+def test_cancel_after_completion_is_a_noop():
+    f = clean_fabric()
+    t = f.begin(f.pool_path(0, 0), 1000)
+    f.drain(t)
+    stats_before = f.stats()
+    f.cancel(t)                      # completed: nothing to abort
+    assert f.stats() == stats_before
+    assert f.drain(t) == t.completed_at   # still resolves, not "cancelled"
+    assert t.elapsed == pytest.approx(1.0)
+
+
 # ------------------------------------------------------------------ serving wiring
 def test_kv_demotion_charged_to_owner_host_link():
     f = clean_fabric(host_bandwidth=1e9, pool_port_bandwidth=1e9)
