@@ -29,15 +29,19 @@ Two experiments over core/coherence.py:
    lands within 10% of eager MESI-lite's message count and that the unbounded
    end does no forced drains (today's fenced counts).
 
-4. **Fence epochs**: N hosts' fences submitted in ONE async batch drain
-   concurrently (one fabric wave) instead of serially; asserted makespan <=
-   the serial sync-fence sum.
+4. **Fence scheduling** (``bench_fence_epochs``): N hosts' fences submitted
+   in ONE async batch drain concurrently instead of serially (asserted
+   makespan <= the serial sync-fence sum); independent fenced streams
+   scheduled by the discrete-event engine finish strictly sooner than under
+   the retired global-barrier wave scheduler (reconstructed as sequential
+   flushes split at the fence boundary); and a fence-free batch's makespan is
+   bit-identical to the begin-all-then-drain schedule it has always had.
 
 ``--json PATH`` dumps the headline numbers (bytes shared vs copied,
 invalidation counts, modeled speedup, eager-vs-fenced message counts, the
-capacity sweep, epoch-vs-serial fence makespans) for the CI artifact;
-``--smoke`` runs a seconds-scale configuration and enforces the acceptance
-asserts.
+capacity sweep, engine-vs-wave and epoch-vs-serial fence makespans) for the
+CI artifact; ``--smoke`` runs a seconds-scale configuration and enforces the
+acceptance asserts.
 
 CSV columns: name,us_per_call,derived — consistent with benchmarks/run.py.
 """
@@ -51,7 +55,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import emucxl as ecxl
-from repro.core.api import CXLSession, FenceOp
+from repro.core.api import CXLSession, FenceOp, WriteOp
 from repro.core.fabric import Fabric
 from repro.core.policy import SharingAwarePlacement
 from repro.serving.kv_manager import PagedKVPool, SharedPrefixKV
@@ -253,7 +257,23 @@ def bench_capacity_sweep(num_hosts: int = 2, pages: int = 80, rounds: int = 3,
 
 def bench_fence_epochs(num_hosts: int = 2, pages: int = 8
                        ) -> Dict[str, object]:
-    """All hosts' fences in one async batch vs the serial sync-fence sum."""
+    """Fence scheduling on the discrete-event engine, three ways.
+
+    1. **Overlapped fences**: all hosts' fences in one async batch vs the
+       serial sync-fence sum (the original epoch experiment — unchanged).
+    2. **Independent streams**: fenced chains (write -> fence -> post-fence
+       write) on their own segments, plus one bulk unfenced stream. The
+       engine's per-stream dependency graph lets each chain's post-fence
+       write begin the instant its *own* fence drains; the retired wave
+       scheduler's global barrier is reconstructed by splitting the batch at
+       the fence boundary into sequential flushes, which stalls every
+       post-fence write behind the bulk stream's wave-0 traffic. Asserted
+       strictly faster at >= 2 streams.
+    3. **Fence-free bit-identity**: a batch with no fences must reproduce the
+       pre-engine schedule exactly — every transfer begun at the same instant,
+       one drain — so its makespan is compared ``==`` (not approx) against a
+       twin fabric evolving the same routes by hand.
+    """
     def prepared():
         sess = CXLSession(1 << 22, 1 << 24, num_hosts=num_hosts,
                           fabric=Fabric(num_hosts=num_hosts, pool_ports=1))
@@ -273,12 +293,116 @@ def bench_fence_epochs(num_hosts: int = 2, pages: int = 8
     sess, bufs = prepared()
     with sess:
         serial = sum(buf.fence() for buf in bufs)
+
+    streams = bench_independent_streams(num_streams=max(num_hosts, 2))
+    nofence = bench_nofence_bitidentity(num_hosts=max(num_hosts, 2))
     return {
         "num_hosts": num_hosts,
         "pages": pages,
         "epoch_makespan_s": overlapped,
         "serial_fence_s": serial,
         "overlap_speedup": serial / overlapped if overlapped > 0 else 1.0,
+        "independent_streams": streams,
+        "nofence_bitidentity": nofence,
+    }
+
+
+def bench_independent_streams(num_streams: int = 2,
+                              bulk_bytes: int = 1 << 16
+                              ) -> Dict[str, object]:
+    """Per-stream dependency graph vs the retired global-barrier wave
+    scheduler, on identical op batches.
+
+    `num_streams` fenced chains — each on its own (segment, host) stream:
+    buffered write, release fence, post-fence write — run alongside one bulk
+    unfenced write on a further host. The wave baseline is reconstructed
+    faithfully: the batch is split at the fence boundary and flushed
+    sequentially, which is exactly what the old scheduler's global
+    ``fabric.drain()`` between waves did to the modeled clock."""
+    num_hosts = num_streams + 1
+    payload = np.arange(64, dtype=np.uint8)
+    bulk = np.zeros(bulk_bytes, np.uint8)
+
+    def setup():
+        sess = CXLSession(1 << 22, 1 << 26, num_hosts=num_hosts,
+                          fabric=Fabric(num_hosts=num_hosts, pool_ports=2))
+        chains = []
+        for h in range(num_streams):
+            seg = sess.share(2 * 4096, host=h, page_bytes=4096,
+                             consistency="release", wc_capacity=None)
+            chains.append(sess.attach(seg, host=h))
+        bulk_buf = sess.alloc(bulk_bytes, ecxl.REMOTE_MEMORY,
+                              host=num_streams)
+        return sess, chains, bulk_buf
+
+    def wave0_ops(chains, bulk_buf):
+        ops = []
+        for buf in chains:
+            ops.append(WriteOp(buf, payload))
+            ops.append(FenceOp(buf))
+        ops.append(WriteOp(bulk_buf, bulk))
+        return ops
+
+    def wave1_ops(chains):
+        return [WriteOp(buf, payload, offset=4096) for buf in chains]
+
+    # engine: one batch, dependencies per stream
+    sess, chains, bulk_buf = setup()
+    with sess:
+        sess.submit(*wave0_ops(chains, bulk_buf))
+        sess.submit(*wave1_ops(chains))
+        engine_makespan = sess.flush()
+    # wave baseline: global barrier == sequential flushes at the fence cut
+    sess, chains, bulk_buf = setup()
+    with sess:
+        sess.submit(*wave0_ops(chains, bulk_buf))
+        wave_makespan = sess.flush()
+        sess.submit(*wave1_ops(chains))
+        wave_makespan += sess.flush()
+    return {
+        "num_streams": num_streams,
+        "bulk_bytes": bulk_bytes,
+        "engine_makespan_s": engine_makespan,
+        "wave_makespan_s": wave_makespan,
+        "stream_speedup": (wave_makespan / engine_makespan
+                           if engine_makespan > 0 else 1.0),
+    }
+
+
+def bench_nofence_bitidentity(num_hosts: int = 2, nbytes: int = 1 << 18
+                              ) -> Dict[str, object]:
+    """A fence-free batch's modeled times must be *bit-identical* to the
+    pre-engine schedule: all transfers begun at one instant, one drain.
+
+    The reference is a twin fabric fed the same pooled-DMA routes by hand —
+    exactly what the old flush did for a batch with no fences."""
+    data = np.zeros(nbytes, np.uint8)
+
+    def setup():
+        fab = Fabric(num_hosts=num_hosts, pool_ports=2)
+        sess = CXLSession(1 << 22, 1 << 26, num_hosts=num_hosts, fabric=fab)
+        bufs = [sess.alloc(nbytes, ecxl.REMOTE_MEMORY, host=h)
+                for h in range(num_hosts)]
+        return fab, sess, bufs
+
+    fab_a, sess_a, bufs_a = setup()
+    with sess_a:
+        sess_a.submit(*[WriteOp(b, data) for b in bufs_a])
+        flush_makespan = sess_a.flush()
+    fab_b, sess_b, bufs_b = setup()
+    with sess_b:
+        start = fab_b.clock
+        for b in bufs_b:
+            rec = sess_b.lib._resolve(b.address)
+            fab_b.begin(fab_b.pool_path(rec.host, rec.port), nbytes)
+        fab_b.drain()
+        manual_makespan = fab_b.clock - start
+    return {
+        "num_hosts": num_hosts,
+        "nbytes": nbytes,
+        "flush_makespan_s": flush_makespan,
+        "manual_makespan_s": manual_makespan,
+        "bit_identical": flush_makespan == manual_makespan,
     }
 
 
@@ -349,11 +473,25 @@ def bench(hosts=(2, 4), prefix_pages: int = 4, rounds: int = 3,
     )
     fe = bench_fence_epochs(num_hosts=max(hosts))
     artifact["fence_epochs"] = fe
+    streams = fe["independent_streams"]
+    nofence = fe["nofence_bitidentity"]
     rows.append(
         f"coherence_fence_epochs_h{fe['num_hosts']},0,"
         f"epoch_makespan_s={fe['epoch_makespan_s']:.3e},"
         f"serial_fence_s={fe['serial_fence_s']:.3e},"
         f"overlap_speedup={fe['overlap_speedup']:.2f}x"
+    )
+    rows.append(
+        f"coherence_independent_streams_s{streams['num_streams']},0,"
+        f"engine_makespan_s={streams['engine_makespan_s']:.3e},"
+        f"wave_makespan_s={streams['wave_makespan_s']:.3e},"
+        f"stream_speedup={streams['stream_speedup']:.2f}x"
+    )
+    rows.append(
+        f"coherence_nofence_bitidentity_h{nofence['num_hosts']},0,"
+        f"flush_makespan_s={nofence['flush_makespan_s']:.9e},"
+        f"manual_makespan_s={nofence['manual_makespan_s']:.9e},"
+        f"bit_identical={nofence['bit_identical']}"
     )
     if check:
         msgs = [r["protocol_msgs"] for r in cs["sweep"]]
@@ -383,6 +521,17 @@ def bench(hosts=(2, 4), prefix_pages: int = 4, rounds: int = 3,
         assert fe["epoch_makespan_s"] <= fe["serial_fence_s"] * (1 + 1e-9), (
             f"epoch-scheduled fences must not cost more than serial fencing "
             f"({fe['epoch_makespan_s']} vs {fe['serial_fence_s']})"
+        )
+        assert streams["num_streams"] >= 2
+        assert streams["engine_makespan_s"] < streams["wave_makespan_s"], (
+            f"per-stream dependency scheduling must beat the global-barrier "
+            f"wave baseline at {streams['num_streams']} streams "
+            f"({streams['engine_makespan_s']} vs {streams['wave_makespan_s']})"
+        )
+        assert nofence["bit_identical"], (
+            f"a fence-free batch must reproduce the pre-engine modeled time "
+            f"bit for bit ({nofence['flush_makespan_s']!r} vs "
+            f"{nofence['manual_makespan_s']!r})"
         )
     return rows, artifact
 

@@ -12,8 +12,8 @@ Run: PYTHONPATH=src python examples/quickstart_v2.py
 import numpy as np
 
 from repro.core import (
-    LOCAL_MEMORY, REMOTE_MEMORY, CXLSession, Fabric, KVStore, MigrateOp, Policy2,
-    ReadOp, StaleHandleError, WriteOp,
+    LOCAL_MEMORY, REMOTE_MEMORY, AcquireOp, CXLSession, Fabric, FenceOp,
+    KVStore, MigrateOp, Policy2, ReadOp, StaleHandleError, WriteOp,
 )
 from repro.core.policy import CongestionAwarePlacement
 
@@ -76,6 +76,20 @@ def main() -> None:
         print("after fence: pending", seg.pending_pages(0),
               "| invalidations:", seg.stats.invalidations,
               "| readers see:", readers[0].read(0, 4))
+
+        # acquire: the read-side pair. In an async batch the AcquireOp stalls
+        # the reader's stream until the peer's release drains — and nothing
+        # else in the batch waits on either (streams are independent).
+        batch = sess.submit(
+            WriteOp(writer, np.full(64, 8, np.uint8), offset=4096),
+            FenceOp(writer),               # release: publish the store
+            AcquireOp(readers[0]),         # host 1 waits for host 0's release
+            ReadOp(readers[0], 4096, 4),   # then reads the published bytes
+        )
+        sess.flush()
+        print("acquire waited", f"{batch[2].modeled_time*1e9:.0f}ns",
+              "for the release; read sees:", batch[3].result(),
+              "| synchronizing acquires:", seg.stats.acquires)
         for r in readers:
             r.detach()
         writer.detach()

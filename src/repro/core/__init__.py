@@ -23,6 +23,7 @@ from repro.core.emucxl import (
     QuotaExceeded,
     default_instance,
     default_session,
+    emucxl_acquire,
     emucxl_alloc,
     emucxl_exit,
     emucxl_fabric_stats,
@@ -44,6 +45,7 @@ from repro.core.emucxl import (
     emucxl_stats,
     emucxl_write,
 )
+from repro.core.engine import EngineError, Job, SimulationEngine
 from repro.core.fabric import Fabric, FabricError, Link, Transfer
 from repro.core.handle import Buffer, HandleTable, StaleHandleError
 from repro.core.hw import V5E, HardwareModel
@@ -60,6 +62,7 @@ from repro.core.policy import (
 )
 from repro.core.pool import LRUTier, SharedPool
 from repro.core.queue import (
+    AcquireOp,
     EmuQueue,
     FenceOp,
     MemcpyOp,
@@ -75,18 +78,19 @@ from repro.core.slab import SlabAllocator, SlabPtr
 __all__ = [
     "LOCAL_MEMORY", "REMOTE_MEMORY", "Allocation", "EmuCXL", "EmuCXLError",
     "OutOfTierMemory", "QuotaExceeded", "default_instance", "default_session",
-    "emucxl_alloc",
+    "emucxl_acquire", "emucxl_alloc",
     "emucxl_exit", "emucxl_fabric_stats", "emucxl_fence", "emucxl_free",
     "emucxl_get_host",
     "emucxl_get_numa_node", "emucxl_get_size", "emucxl_init", "emucxl_is_local",
     "emucxl_memcpy", "emucxl_memmove", "emucxl_memset", "emucxl_migrate",
     "emucxl_migrate_batch", "emucxl_pool_stats", "emucxl_read", "emucxl_resize",
     "emucxl_stats", "emucxl_write", "Fabric", "FabricError", "Link", "Transfer",
+    "SimulationEngine", "Job", "EngineError",
     "V5E", "HardwareModel", "KVStore", "AccessStats", "CongestionAwarePlacement",
     "CongestionAwarePromotion", "Policy1", "Policy2", "StaticPlacement", "Tier",
     "make_policy", "LRUTier", "SharedPool", "EmuQueue", "SlabAllocator", "SlabPtr",
     # v2 session API
     "CXLSession", "as_session", "Buffer", "HandleTable", "StaleHandleError",
     "OpQueue", "Ticket", "ReadOp", "WriteOp", "MigrateOp", "MemcpyOp", "MemsetOp",
-    "FenceOp",
+    "FenceOp", "AcquireOp",
 ]

@@ -43,6 +43,7 @@ from repro.core.handle import Buffer, HandleTable, StaleHandleError
 from repro.core.hw import V5E, HardwareModel
 from repro.core.policy import Policy1, PromotionPolicy
 from repro.core.queue import (
+    AcquireOp,
     FenceOp,
     MemcpyOp,
     MemsetOp,
@@ -56,7 +57,7 @@ from repro.core.queue import (
 __all__ = [
     "CXLSession", "Buffer", "SharedSegment", "StaleHandleError", "as_session",
     "ReadOp", "WriteOp", "MigrateOp", "MemcpyOp", "MemsetOp", "FenceOp",
-    "Ticket", "OpQueue",
+    "AcquireOp", "Ticket", "OpQueue",
 ]
 
 
@@ -263,6 +264,18 @@ class CXLSession:
         with self._lib._lock:
             self._check_open()
             return self._lib.fence(None if buf is None else buf.address)
+
+    def acquire(self, buf: Optional[Buffer] = None) -> float:
+        """Acquire fence: the read-side pair of ``fence``. Later reads through
+        `buf` (or any attachment, with None) observe every write a peer's
+        release fence published before this point. Synchronous calls already
+        have that ordering — prior fences fully drained before returning — so
+        this validates its target and returns 0.0; the modeled wait appears
+        under the async queue (``AcquireOp``), where a batch's in-flight
+        releases exist to be waited on."""
+        with self._lib._lock:
+            self._check_open()
+            return self._lib.acquire(None if buf is None else buf.address)
 
     def coherence_stats(self) -> Dict[str, object]:
         return self._lib.coherence_stats()

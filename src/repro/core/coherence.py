@@ -119,6 +119,7 @@ class CoherenceStats:
     wc_writes: int = 0             # writes absorbed by a write-combining buffer
     fences: int = 0                # release fences that drained pending pages
     fence_coalesced: int = 0       # back-to-back fences folded into one drain
+    acquires: int = 0              # acquire fences that synced on a peer release
     forced_drains: int = 0         # capacity evictions (full WC buffer)
     forced_drain_pages: int = 0    # pages upgraded early by forced drains
     bytes_moved: int = 0           # page payloads moved by the protocol

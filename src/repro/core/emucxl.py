@@ -735,6 +735,34 @@ class EmuCXL:
                             plan, seg.plan_fence(self.fabric, host))
             return self._run_plan(plan)
 
+    def acquire(self, address: Union[int, Allocation, None] = None) -> float:
+        """``emucxl_acquire``: the read-side half of release consistency.
+
+        An acquire guarantees that every write published by a *peer's* release
+        fence before this point is visible to subsequent reads on this
+        mapping. In the synchronous world that guarantee already holds the
+        moment ``fence`` returns — there are no in-flight releases for an
+        acquire to wait on — so a sync acquire validates its target, orders
+        program text, and charges nothing (returns 0.0). The interesting case
+        is the async queue: an ``AcquireOp`` submitted in a batch blocks its
+        (segment, host) stream until the peer release fences planned before it
+        have drained their write-combining traffic (see ``OpQueue.flush``).
+
+        With `address` (a shared-segment mapping), acquires on that (segment,
+        host); with None, a full acquire over every attached segment. Raises
+        on a private (non-segment) address, exactly like ``fence``."""
+        with self._lock:
+            self._require_init()
+            if address is not None:
+                rec = self._resolve(address)
+                if rec.segment is None:
+                    raise EmuCXLError(
+                        f"address {rec.address:#x} is not a shared-segment "
+                        f"mapping; acquire targets coherent attachments"
+                    )
+                self._touch(rec)
+            return 0.0
+
     def _maybe_check(self) -> None:
         """EMUCXL_CHECK=1 debug mode: assert the directory invariant (single
         M/E owner, exclusivity) across all live segments."""
@@ -1261,3 +1289,18 @@ def emucxl_fence(address=None) -> float:
     if address is None:
         return session.fence()
     return session.fence(_facade.lookup(address))
+
+
+def emucxl_acquire(address=None) -> float:
+    """Acquire fence (v1 spelling): the read-side pair of ``emucxl_fence``.
+
+    Guarantees later reads through `address` (or any mapping, with no
+    argument) observe every write a peer's release fence published before
+    this point. Synchronous execution already provides that ordering, so the
+    call validates its target and returns 0.0 — the modeled wait only becomes
+    nonzero under the async queue's ``AcquireOp``, where in-flight releases
+    exist to wait on."""
+    session = _facade._require_session()
+    if address is None:
+        return session.acquire()
+    return session.acquire(_facade.lookup(address))

@@ -195,10 +195,18 @@ class Fabric:
             for t in flowing
         }
 
-    def _step(self) -> bool:
-        """Advance virtual time to the next event; returns False when idle."""
+    def _step(self, limit: Optional[float] = None) -> List[Transfer]:
+        """Advance virtual time to the next internal event (a transfer's data
+        starting to flow, or a transfer completing), capped at `limit` when
+        given. Returns the transfers that completed at the new clock — an
+        empty list when idle, or when the cap cut the step short of any
+        completion. With ``limit=None`` the fluid evolution is exactly the
+        classic uncapped step; a capped step at an intermediate instant makes
+        identical proportional progress, just split in two."""
         if not self._active:
-            return False
+            if limit is not None and limit > self.clock:
+                self.clock = limit
+            return []
         active = list(self._active.values())
         flowing = [t for t in active if t.ready_at <= self.clock + _EPS]
         waiting = [t for t in active if t.ready_at > self.clock + _EPS]
@@ -208,10 +216,13 @@ class Fabric:
             + [t.ready_at - self.clock for t in waiting]
         )
         dt = max(dt, 0.0)
+        if limit is not None:
+            dt = min(dt, max(limit - self.clock, 0.0))
         busy_links = {name for t in flowing for name in t.path}
         for name in busy_links:
             self.links[name].stats.busy_time += dt
         self.clock += dt
+        completed: List[Transfer] = []
         for t in flowing:
             t.remaining -= rates[t.tid] * dt
             if t.remaining <= _EPS * max(t.nbytes, 1):
@@ -220,7 +231,41 @@ class Fabric:
                 del self._active[t.tid]
                 for name in t.path:
                     self.links[name].active.discard(t.tid)
-        return True
+                completed.append(t)
+        return completed
+
+    def step(self) -> List[Transfer]:
+        """Advance to the next internal event; returns transfers that completed.
+
+        Public face of the event loop for `core/engine.py`: the engine calls
+        this when the fabric's next event precedes every scheduled event."""
+        return self._step()
+
+    def next_event_time(self) -> Optional[float]:
+        """Virtual time of the next internal transition, or None when idle.
+
+        Non-mutating twin of `_step`'s dt computation, so a discrete-event
+        loop can merge the fabric's timeline with its own event heap."""
+        if not self._active:
+            return None
+        active = list(self._active.values())
+        flowing = [t for t in active if t.ready_at <= self.clock + _EPS]
+        waiting = [t for t in active if t.ready_at > self.clock + _EPS]
+        rates = self._flow_rates(flowing)
+        dt = min(
+            [t.remaining / rates[t.tid] for t in flowing if rates[t.tid] > 0]
+            + [t.ready_at - self.clock for t in waiting]
+        )
+        return self.clock + max(dt, 0.0)
+
+    def advance_to(self, when: float) -> List[Transfer]:
+        """Advance virtual time to exactly `when`, in-flight transfers making
+        proportional fluid progress; returns every transfer that completed on
+        the way (in completion order). Idle fabric: the clock just jumps."""
+        completed: List[Transfer] = []
+        while self.clock + _EPS < when:
+            completed.extend(self._step(limit=when))
+        return completed
 
     def cancel(self, transfer: Transfer) -> None:
         """Abort an in-flight transfer without advancing time (rollback path).
@@ -250,8 +295,8 @@ class Fabric:
         failing with an opaque "never completed".
         """
         if transfer is None:
-            while self._step():
-                pass
+            while self._active:
+                self._step()
             # Everything in flight has resolved: cancelled tids can no longer
             # be usefully diagnosed, so drop them (the set must not grow for
             # the fabric's lifetime in failure-heavy workloads).
@@ -262,11 +307,12 @@ class Fabric:
                 raise FabricError(
                     f"transfer {transfer.tid} was cancelled before completion"
                 )
-            if not self._step():
+            if not self._active:
                 raise FabricError(
                     f"transfer {transfer.tid} never completed (not registered "
                     f"with this fabric?)"
                 )
+            self._step()
         return transfer.completed_at
 
     def transfer(self, path: Iterable[str], nbytes: int) -> float:

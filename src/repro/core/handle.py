@@ -264,6 +264,11 @@ class Buffer:
         ``CXLSession.fence``); returns the modeled fence time."""
         return self._session.fence(self)
 
+    def acquire(self) -> float:
+        """Acquire fence on this attachment's segment for this host (see
+        ``CXLSession.acquire``); returns the modeled wait (0.0 sync)."""
+        return self._session.acquire(self)
+
     def __repr__(self) -> str:
         try:
             return (f"Buffer(handle={self._index}:{self._generation}, "

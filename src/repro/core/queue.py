@@ -8,28 +8,30 @@ remote) memory space. Node layout (16 bytes): int64 data | int64 next (0 == NULL
 
 ``OpQueue`` is the v2 session scheduler (beyond the paper, toward CXL 3.0's queued
 transactions): ``CXLSession.submit`` enqueues read/write/migrate/memcpy/memset/
-fence operations as Future-style ``Ticket``s, and ``flush()`` completes the whole
-batch at once. Every op with a fabric path is registered in flight *together*
-(``Fabric.begin``) before a single ``drain()``, so concurrent ops — e.g. eight
-hosts migrating simultaneously — genuinely contend for links and the batch
-makespan reflects overlap, not the serial sum a loop of v1 calls would charge.
-Ops without a fabric path fall back to the uncontended hw constants and are
-summed serially (there is no contention model to overlap them under).
+fence/acquire operations as Future-style ``Ticket``s, and ``flush()`` completes
+the whole batch at once on the discrete-event engine (``core/engine.py``): each
+op becomes a job whose fabric transfers begin the instant its dependencies
+resolve, so concurrent ops — e.g. eight hosts migrating simultaneously —
+genuinely contend for links and the batch makespan reflects overlap, not the
+serial sum a loop of v1 calls would charge. Ops without a fabric path fall back
+to the uncontended hw constants and are summed serially (there is no contention
+model to overlap them under).
 
-**Fence epochs**: a ``FenceOp`` is a release point, not just another op. The
-batch is partitioned into epochs per (segment, host) *stream*: ops on the same
-stream submitted after its fence may not overlap the fence's drain traffic
-(they begin in the next fabric wave), while independent ops — other buffers,
-segments, or hosts — planned after the fence still share the fence's fabric
-span, which is what a CXL switch's queued transactions actually permit.
-Back-to-back fences on one stream with no intervening write coalesce into one
-drain (the ``fence_coalesced`` stat): the second fence has nothing left to
-publish.
+**Streams and fences**: a ``FenceOp`` is a release point, not just another op,
+and an ``AcquireOp`` is its read-side pair. Flush builds a per-(segment, host)
+*stream* dependency graph and executes it on the discrete-event engine
+(``core/engine.py``): an op waits only on its own streams' preceding fence
+drain (and an acquire on its segment's prior peer releases) — never on
+unrelated streams' traffic, which is what a CXL switch's queued transactions
+actually permit. Back-to-back fences on one stream with no intervening write
+coalesce into one drain (the ``fence_coalesced`` stat): the second fence has
+nothing left to publish. An acquire with no prior peer release in the batch
+synchronizes with nothing and costs nothing.
 
 Batch semantics: costs are planned against start-of-batch placement (the ops are
 "concurrent" up to fence ordering); data effects apply in submission order, so a
 read submitted after a write of the same buffer observes it — per-host program
-order within a segment is preserved regardless of how waves overlap.
+order within a segment is preserved regardless of how the schedule overlaps.
 """
 
 from __future__ import annotations
@@ -41,6 +43,7 @@ import jax
 import numpy as np
 
 from repro.core import emucxl as ecxl
+from repro.core.engine import SimulationEngine
 
 _NODE_BYTES = 16
 _NULL = 0
@@ -163,15 +166,28 @@ class FenceOp:
     buf: Any
 
 
+@dataclasses.dataclass
+class AcquireOp:
+    """Acquire fence on `buf`'s shared segment for `buf`'s host: block this
+    (segment, host) stream until every peer release fence planned earlier in
+    the batch has drained its write-combined pages. With no prior peer release
+    in the batch it is a pure no-op — nothing to synchronize with, zero
+    modeled charge."""
+
+    buf: Any
+
+
 class Ticket:
     """Future-style completion token for one submitted operation.
 
     ``result()`` forces a flush of the owning queue if the batch has not been
     completed yet, then returns the op's value (ndarray for reads, the Buffer for
-    migrate/memset, True for writes/memcpy/fences) or re-raises the batch
-    failure.
-    ``modeled_time`` is this op's own modeled duration inside the batch — the
-    batch *makespan* (what a caller actually waits) is returned by ``flush()``.
+    migrate/memset, True for writes/memcpy/fences/acquires) or re-raises the
+    batch failure.
+    ``modeled_time`` is this op's own modeled duration inside the batch — its
+    transfers' fabric span plus fallback charges, or for an ``AcquireOp`` the
+    virtual seconds its stream stalled on peer releases. The batch *makespan*
+    (what a caller actually waits) is returned by ``flush()``.
     """
 
     __slots__ = ("op", "_queue", "_state", "_value", "_error", "modeled_time")
@@ -211,12 +227,12 @@ class Ticket:
 class _Plan:
     """Flush-time execution plan for one ticket (internal)."""
 
-    kind: str                       # noop|read|write|migrate|memcpy|memset|fence
+    kind: str               # noop|read|write|migrate|memcpy|memset|fence|acquire
     buf: Any = None                 # primary buffer handle (dst for memcpy)
     src: Any = None                 # source handle (memcpy only)
     # Fabric routes this op wants: (link path, payload bytes). They are NOT
-    # begun at plan time — flush's wave scheduler begins them when the op's
-    # fence epoch starts, filling `transfers` with the in-flight Transfers.
+    # begun at plan time — flush's engine begins them the instant the op's
+    # dependencies resolve, filling `transfers` with the in-flight Transfers.
     routes: List[Tuple[Tuple[str, ...], int]] = dataclasses.field(
         default_factory=list)
     transfers: List[Any] = dataclasses.field(default_factory=list)
@@ -229,15 +245,20 @@ class _Plan:
     value_byte: int = 0
     node: int = 0                   # migrate destination
     staged_addr: Optional[int] = None   # migrate destination allocation
-    # Fence-epoch bookkeeping: the (sid, host) streams this op belongs to (a
+    # Stream bookkeeping: the (sid, host) streams this op belongs to (a
     # memcpy may touch two), the subset it *writes*, the coalescing metadata
-    # for fences, and the fabric wave flush assigned it to.
+    # for fences, and the dependency edges flush wired for the engine.
     streams: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
     write_streams: List[Tuple[int, int]] = dataclasses.field(
         default_factory=list)
-    segment: Any = None             # fence target segment (coalesced stat)
+    segment: Any = None             # fence/acquire target segment
     fence_drained: int = 0          # pages this fence drained (0 = no-op fence)
-    wave: int = 0
+    # Plans this op must wait on before its transfers may enter the fabric:
+    # the last draining fence/synchronizing acquire on each of its streams,
+    # plus (for an acquire) the batch's prior peer release fences.
+    deps: List["_Plan"] = dataclasses.field(default_factory=list)
+    acquired: int = 0               # peer release fences this acquire synced on
+    acquire_wait: float = 0.0       # virtual seconds this acquire blocked for
     # Coherence-journal position before this op planned: an apply-phase failure
     # unwinds the journal back to the first failed op's mark.
     journal_mark: int = 0
@@ -248,7 +269,7 @@ class _Plan:
 
     def adopt(self, access_plan) -> "_Plan":
         """Adopt a lib ``_AccessPlan``: carry its fallback charges and queue
-        its fabric routes for the wave scheduler."""
+        its fabric routes for the event engine."""
         self.hw_charges.extend(access_plan.hw_charges)
         self.routes.extend(access_plan.routes)
         return self
@@ -287,7 +308,8 @@ class OpQueue:
         if isinstance(op, MemcpyOp):
             self._check_buf(op.dst)
             self._check_buf(op.src)
-        elif isinstance(op, (ReadOp, WriteOp, MigrateOp, MemsetOp, FenceOp)):
+        elif isinstance(op, (ReadOp, WriteOp, MigrateOp, MemsetOp, FenceOp,
+                             AcquireOp)):
             self._check_buf(op.buf)
             if isinstance(op, WriteOp):
                 # Snapshot the payload now: the ticket is Future-style, so the
@@ -359,6 +381,17 @@ class OpQueue:
             if rec.segment is not None:
                 plan.fence_drained = rec.segment.pending_pages(rec.host)
             return plan.adopt(lib._plan_fence(rec, journal))
+        if isinstance(op, AcquireOp):
+            if rec.segment is None:
+                raise ecxl.EmuCXLError(
+                    f"address {rec.address:#x} is not a shared-segment "
+                    f"mapping; acquire targets coherent attachments"
+                )
+            # No protocol traffic of its own: the waiting (if any) is pure
+            # ordering, wired by flush as dependencies on the batch's prior
+            # peer release fences.
+            return _Plan("acquire", buf=op.buf, streams=stream,
+                         segment=rec.segment)
         if isinstance(op, ReadOp):
             n = (rec.size - op.offset) if op.size is None else op.size
             plan = _Plan("read", buf=op.buf, n=n, offset=op.offset,
@@ -386,9 +419,10 @@ class OpQueue:
         the same batch (e.g. a migrate) are observed."""
         if plan.kind == "noop":
             return plan.buf
-        if plan.kind == "fence":
+        if plan.kind in ("fence", "acquire"):
             # The protocol work happened at plan time (directory upgrades) and
-            # in the batch's fabric span; the fence has no data effect.
+            # in the batch's fabric span; neither fence side has a data effect
+            # of its own (an acquire is pure ordering).
             lib._touch(lib._resolve(plan.buf.address))
             return True
         if plan.kind == "migrate":
@@ -431,18 +465,24 @@ class OpQueue:
         rest queued — ``CXLSession.migrate_batch`` scopes itself this way so it
         never drains unrelated ops into its own makespan.
 
-        Fabric-routed ops are scheduled in **fence-epoch waves**: every op
-        starts in wave 0 except ops on a (segment, host) stream that a
-        ``FenceOp`` already closed in this batch — those begin one wave later,
-        after the fence's drain traffic (and everything else in flight)
-        completes. Within a wave, transfers are begun together and drained
-        once, so they share link bandwidth exactly as concurrent hosts would;
-        a batch with no fences is exactly the old single-wave behavior.
+        Fabric-routed ops execute on the **discrete-event engine**
+        (``core/engine.py``) under a per-(segment, host)-stream dependency
+        graph: an op's transfers enter the fabric the instant the last
+        draining ``FenceOp`` (or synchronizing ``AcquireOp``) on its *own*
+        streams completes — never later, and never because an unrelated
+        stream fenced. An ``AcquireOp`` additionally waits on its segment's
+        prior peer release fences in the batch, which is the read-side
+        guarantee of release consistency; with no prior peer release it
+        depends on nothing and is free. Dependency-free ops all begin at the
+        batch's start instant and share link bandwidth exactly as concurrent
+        hosts would; a batch with no fences therefore reproduces the single
+        begin-all-then-drain schedule (and its modeled times) bit for bit.
         Fallback (uncontended) ops are summed serially and overlap with the
         fabric span, since they occupy different modeled resources (HBM/local
-        engines vs fabric links). A fence that drains nothing opens no new
-        wave; if it trails another fence on its stream with no intervening
-        write, the pair coalesces into one drain (``fence_coalesced``).
+        engines vs fabric links). A fence that drains nothing creates no
+        dependency edge; if it trails another fence on its stream with no
+        intervening write, the pair coalesces into one drain
+        (``fence_coalesced``).
 
         modeled_time convention: the overlapped fabric span is charged once to
         REMOTE_MEMORY (the fabric engine's counter, matching ``migrate_batch``),
@@ -481,32 +521,52 @@ class OpQueue:
             plans: List[Tuple[Ticket, _Plan]] = []
             journal = ecxl.DirectoryJournal()
             serial = 0.0
-            # Fence epochs: stream -> wave index its *next* op lands in, and
-            # whether the stream's last epoch boundary was a fence with no
-            # write since (the coalescing precondition).
-            stream_epoch: dict = {}
+            # Stream dependency graph: stream -> the last plan that closed it
+            # (a draining fence, or an acquire that synchronized); whether the
+            # stream's last boundary was a fence with no write since (the
+            # coalescing precondition); and, per segment, the release fences
+            # planned so far — what a later acquire must wait on.
+            last_barrier: dict = {}
             fenced_since_write: dict = {}
+            seg_releases: dict = {}     # sid -> [(host, fence plan), ...]
             try:
                 for t in tickets:
                     mark = journal.mark()
                     plan = self._plan_one(lib, fabric, t.op, journal)
                     plan.journal_mark = mark
-                    plan.wave = max(
-                        (stream_epoch.get(s, 0) for s in plan.streams),
-                        default=0)
+                    for s in plan.streams:
+                        dep = last_barrier.get(s)
+                        if dep is not None and dep not in plan.deps:
+                            plan.deps.append(dep)
                     if plan.kind == "fence":
                         key = plan.streams[0]
                         if plan.fence_drained:
                             # Same-stream ops after this fence may not overlap
-                            # its drain: they start in the next fabric wave.
-                            stream_epoch[key] = plan.wave + 1
+                            # its drain: they depend on it in the engine.
+                            last_barrier[key] = plan
                             fenced_since_write[key] = True
+                            seg_releases.setdefault(key[0], []).append(
+                                (key[1], plan))
                         elif fenced_since_write.get(key):
                             # Back-to-back fences, nothing written between:
                             # one drain serves both. (A no-op fence with no
                             # draining fence behind it coalesces nothing —
                             # there is no drain to fold into.)
                             plan.segment._bump(journal, "fence_coalesced")
+                    elif plan.kind == "acquire":
+                        # The read-side pair: wait for every peer host's
+                        # release fence planned before this point, so reads
+                        # after the acquire observe the published pages.
+                        key = plan.streams[0]
+                        for host, fence_plan in seg_releases.get(key[0], ()):
+                            if host != key[1] and fence_plan not in plan.deps:
+                                plan.deps.append(fence_plan)
+                                plan.acquired += 1
+                        if plan.acquired:
+                            plan.segment._bump(journal, "acquires")
+                            # Later ops on this stream order behind the
+                            # acquire, not the (foreign) fences directly.
+                            last_barrier[key] = plan
                     else:
                         for s in plan.write_streams:
                             fenced_since_write[s] = False
@@ -517,7 +577,7 @@ class OpQueue:
                 # Mid-batch failure (quota/capacity/stale handle/bounds):
                 # replay the coherence journal in reverse and release staged
                 # destinations; no fabric transfer has begun yet (routes are
-                # deferred to the wave scheduler below), sources are untouched,
+                # deferred to the event engine below), sources are untouched,
                 # and every ticket in the batch fails with the cause.
                 journal.rollback()
                 for _, plan in plans:
@@ -527,17 +587,37 @@ class OpQueue:
                     t._fail(e)
                 raise
             if fabric is not None:
-                last_wave = max((p.wave for _, p in plans), default=0)
-                for wave in range(last_wave + 1):
-                    for _, plan in plans:
-                        if plan.wave != wave:
-                            continue
-                        for path, nbytes in plan.routes:
-                            plan.transfers.append(fabric.begin(path, nbytes))
-                    # The wave barrier: everything in flight (this wave's
-                    # transfers plus any pre-batch stragglers) completes before
-                    # the next epoch's streams may begin.
-                    fabric.drain()
+                # Execute the dependency graph on the discrete-event engine.
+                # Jobs exist for every plan that moves fabric bytes, waits on
+                # another plan, or is itself waited on (a route-less barrier
+                # completes instantly once its own deps do). Dependency-free
+                # jobs all begin at the batch start instant, so a fence-free
+                # batch evolves exactly like one begin-all-then-drain wave.
+                engine = SimulationEngine(fabric)
+                barrier_ids = {id(d) for _, p in plans for d in p.deps}
+                jobs: dict = {}
+                for _, plan in plans:
+                    if plan.routes or plan.deps or id(plan) in barrier_ids:
+                        jobs[id(plan)] = engine.job(plan.routes,
+                                                    label=plan.kind)
+                for _, plan in plans:
+                    job = jobs.get(id(plan))
+                    if job is None:
+                        continue
+                    for dep in plan.deps:
+                        dep_job = jobs.get(id(dep))
+                        if dep_job is not None:
+                            job.after(dep_job)
+                engine.run()
+                for _, plan in plans:
+                    job = jobs.get(id(plan))
+                    if job is not None:
+                        plan.transfers = job.transfers
+                        if plan.kind == "acquire":
+                            # An acquire's modeled cost is the wait itself:
+                            # how long its stream stalled for peer releases.
+                            plan.acquire_wait = max(
+                                0.0, job.completed_at - start)
                 fabric_span = fabric.clock - start
                 makespan = max(fabric_span, serial)
                 lib.modeled_time[ecxl.REMOTE_MEMORY] += fabric_span
@@ -570,7 +650,7 @@ class OpQueue:
                             if not committed:
                                 lib.free(p2.staged_addr)
                     raise
-                elapsed = plan.hw_time + max(
+                elapsed = plan.hw_time + plan.acquire_wait + max(
                     (tr.elapsed for tr in plan.transfers), default=0.0
                 )
                 t._complete(value, elapsed)

@@ -9,11 +9,12 @@ op interleavings (hypothesis or the seeded stub), with capacity-bounded
 buffers whose forced partial drains are themselves journaled, and in
 deterministic twins that pin each failure mode.
 
-The same generator also pins the fence-epoch scheduler's semantics: a flushed
-batch of random reads/writes/fences produces exactly the read values,
-directory state, protocol counts, and write-combining buffers that the same
-ops run synchronously in submission order produce — per-host program order
-within a segment survives wave overlap.
+The same generator also pins the stream scheduler's semantics: a flushed
+batch of random reads/writes/fences/acquires produces exactly the read
+values, directory state, protocol counts, and write-combining buffers that
+the same ops run synchronously in submission order produce — per-host program
+order within a segment survives however the dependency graph overlaps the
+schedule.
 """
 
 import copy
@@ -28,7 +29,8 @@ from repro.core.api import CXLSession
 from repro.core.coherence import DirectoryJournal
 from repro.core.emucxl import EmuCXLError
 from repro.core.fabric import Fabric
-from repro.core.queue import FenceOp, MemsetOp, MigrateOp, ReadOp, WriteOp
+from repro.core.queue import (AcquireOp, FenceOp, MemsetOp, MigrateOp, ReadOp,
+                              WriteOp)
 
 NUM_HOSTS = 3
 PAGE = 4096
@@ -76,8 +78,10 @@ def submit_coherent_ops(sess, bufs, ops):
             sess.submit(WriteOp(buf, np.ones(32, np.uint8), offset=page * PAGE))
         elif kind == 2:
             sess.submit(MemsetOp(buf, value=7, size=32))
-        else:
+        elif kind == 3:
             sess.submit(FenceOp(buf))
+        else:
+            sess.submit(AcquireOp(buf))
 
 
 _FAILERS = [
@@ -89,7 +93,7 @@ _FAILERS = [
         sess.submit(MigrateOp(bufs[2], ecxl.LOCAL_MEMORY))),
 ]
 
-_OP = st.tuples(st.integers(0, 3), st.integers(0, NUM_HOSTS - 1),
+_OP = st.tuples(st.integers(0, 4), st.integers(0, NUM_HOSTS - 1),
                 st.integers(0, PAGES - 1))
 _WARM = st.tuples(st.integers(0, NUM_HOSTS - 1), st.booleans())
 
@@ -226,6 +230,62 @@ def test_rewrite_touch_rollback_restores_lru_order():
         sess.close()
 
 
+def test_failed_flush_between_release_and_pending_acquire():
+    """A batch that fails after a release fence but before the acquire that
+    would synchronize with it unwinds everything: the fence's drain (directory
+    upgrades, WC buffer, fences counter) and the acquire's `acquires` stat —
+    and the would-be reader still observes only pre-batch bytes."""
+    sess, seg, bufs = make_session(consistency="release")
+    try:
+        bufs[0].write(np.full(32, 9, np.uint8))          # pending page 0
+        pre = snapshot(sess, seg)
+        assert seg.pending_pages(0) == 1
+        sess.submit(
+            FenceOp(bufs[0]),                            # release: drains page 0
+            ReadOp(bufs[1], PAGES * PAGE, 64),           # fails planning
+            AcquireOp(bufs[1]),                          # pending acquire
+            ReadOp(bufs[1], 0, 32),
+        )
+        with pytest.raises(EmuCXLError, match="out-of-bounds"):
+            sess.flush()
+        assert snapshot(sess, seg) == pre
+        assert seg.pending_pages(0) == 1                 # release un-published
+        assert seg.stats.fences == 0
+        assert seg.stats.acquires == 0
+        if sess.fabric is not None:
+            assert sess.fabric.idle()
+        # replayed cleanly, the same chain publishes and synchronizes
+        t = sess.submit(
+            FenceOp(bufs[0]), AcquireOp(bufs[1]), ReadOp(bufs[1], 0, 32))
+        sess.flush()
+        assert seg.stats.fences == 1
+        assert seg.stats.acquires == 1
+        np.testing.assert_array_equal(t[2].result(),
+                                      np.full(32, 9, np.uint8))
+    finally:
+        sess.close()
+
+
+def test_failed_flush_after_acquire_unwinds_acquire_stat():
+    """Failure *after* a synchronized acquire in the batch: the acquire's
+    journaled stat bump rolls back with everything else."""
+    sess, seg, bufs = make_session(consistency="release")
+    try:
+        bufs[0].write(np.ones(32, np.uint8))
+        pre = snapshot(sess, seg)
+        sess.submit(
+            FenceOp(bufs[0]),
+            AcquireOp(bufs[1]),                          # syncs with the fence
+            ReadOp(bufs[1], PAGES * PAGE, 64),           # fails planning
+        )
+        with pytest.raises(EmuCXLError, match="out-of-bounds"):
+            sess.flush()
+        assert snapshot(sess, seg) == pre
+        assert seg.stats.acquires == 0
+    finally:
+        sess.close()
+
+
 # ---------------------------------------------------------------- program order
 def _run_ops(sess, seg, bufs, ops, *, async_batch):
     """Execute the op stream either as one flushed batch or synchronously in
@@ -241,8 +301,10 @@ def _run_ops(sess, seg, bufs, ops, *, async_batch):
                 sess.submit(WriteOp(buf, payload, offset=page * PAGE))
             elif kind == 2:
                 sess.submit(MemsetOp(buf, value=host + 1, size=32))
-            else:
+            elif kind == 3:
                 sess.submit(FenceOp(buf))
+            else:
+                sess.submit(AcquireOp(buf))
         sess.flush()
         return [t.result() for t in tickets]
     out = []
@@ -255,8 +317,10 @@ def _run_ops(sess, seg, bufs, ops, *, async_batch):
             buf.write(payload, offset=page * PAGE)
         elif kind == 2:
             buf.memset(host + 1, 32)
-        else:
+        elif kind == 3:
             buf.fence()
+        else:
+            buf.acquire()
     return out
 
 
@@ -266,11 +330,11 @@ def _run_ops(sess, seg, bufs, ops, *, async_batch):
 @settings(max_examples=15)
 @given(ops=st.lists(_OP, min_size=1, max_size=12))
 def test_flush_preserves_program_order(consistency, wc_capacity, ops):
-    """The fence-epoch scheduler only re-times ops; it must not reorder their
-    effects. One flushed batch of random reads/writes/memsets/fences lands on
-    exactly the bytes, read values, directory state, and protocol counts that
-    the same stream run synchronously produces — including forced partial
-    drains, whose victims depend on LRU order."""
+    """The stream scheduler only re-times ops; it must not reorder their
+    effects. One flushed batch of random reads/writes/memsets/fences/acquires
+    lands on exactly the bytes, read values, directory state, and protocol
+    counts that the same stream run synchronously produces — including forced
+    partial drains, whose victims depend on LRU order."""
     sess_a, seg_a, bufs_a = make_session(True, consistency, wc_capacity)
     sess_b, seg_b, bufs_b = make_session(True, consistency, wc_capacity)
     try:
@@ -281,9 +345,11 @@ def test_flush_preserves_program_order(consistency, wc_capacity, ops):
             np.testing.assert_array_equal(g, w)
         assert seg_a.directory.snapshot() == seg_b.directory.snapshot()
         stats_a, stats_b = seg_a.stats.as_dict(), seg_b.stats.as_dict()
-        # fence_coalesced counts batch-level fence folding — a scheduler stat
-        # the serial reference definitionally cannot accrue.
-        stats_a.pop("fence_coalesced"), stats_b.pop("fence_coalesced")
+        # fence_coalesced and acquires count batch-level scheduling events
+        # (fence folding, acquire-release synchronization) the serial
+        # reference definitionally cannot accrue.
+        for scheduler_stat in ("fence_coalesced", "acquires"):
+            stats_a.pop(scheduler_stat), stats_b.pop(scheduler_stat)
         assert stats_a == stats_b
         assert {h: list(p) for h, p in seg_a.wc.items()} == \
                {h: list(p) for h, p in seg_b.wc.items()}

@@ -1,0 +1,42 @@
+"""Tier-1 enforcement of the docs contract: snippets execute, links resolve.
+
+Delegates to ``tools/check_docs.py`` (the same entry point the CI docs job
+runs) in a subprocess, so the docs' snippets execute in a clean interpreter —
+no state leaks from other tests, and a snippet that leaves a default v1
+session open cannot poison the rest of the suite.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+CHECKER = REPO_ROOT / "tools" / "check_docs.py"
+
+
+def _run(*extra_args):
+    env = dict(os.environ, PYTHONPATH=str(REPO_ROOT / "src"))
+    return subprocess.run(
+        [sys.executable, str(CHECKER), *extra_args],
+        cwd=REPO_ROOT,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+
+
+def test_docs_pages_exist():
+    assert (REPO_ROOT / "docs" / "architecture.md").is_file()
+    assert (REPO_ROOT / "docs" / "consistency-model.md").is_file()
+
+
+def test_docs_links_resolve():
+    proc = _run("--links-only")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_docs_snippets_execute():
+    proc = _run()
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,216 @@
+"""Unit tests for the discrete-event engine (core/engine.py).
+
+The engine is the substrate flush() schedules batches on, so these tests pin
+its contract directly: event ordering, job dependency resolution, co-simulation
+with the fabric's fluid-flow model, and the failure modes (cycles, past
+scheduling, routes without a fabric).
+"""
+
+import pytest
+
+from repro.core.engine import EngineError, SimulationEngine
+from repro.core.fabric import Fabric
+
+
+def make_fabric(**kw):
+    kw.setdefault("num_hosts", 2)
+    kw.setdefault("pool_ports", 2)
+    return Fabric(**kw)
+
+
+# ---------------------------------------------------------------- pure events
+class TestEventLoop:
+    def test_events_fire_in_time_order(self):
+        eng = SimulationEngine()
+        seen = []
+        eng.schedule(3.0, lambda: seen.append("c"))
+        eng.schedule(1.0, lambda: seen.append("a"))
+        eng.schedule(2.0, lambda: seen.append("b"))
+        assert eng.run() == 3.0
+        assert seen == ["a", "b", "c"]
+
+    def test_same_instant_events_fire_in_scheduling_order(self):
+        eng = SimulationEngine()
+        seen = []
+        for tag in ("first", "second", "third"):
+            eng.schedule(1.0, lambda t=tag: seen.append(t))
+        eng.run()
+        assert seen == ["first", "second", "third"]
+
+    def test_event_may_schedule_followup(self):
+        eng = SimulationEngine()
+        seen = []
+
+        def first():
+            seen.append(eng.now)
+            eng.schedule_in(2.0, lambda: seen.append(eng.now))
+
+        eng.schedule(1.0, first)
+        assert eng.run() == 3.0
+        assert seen == [1.0, 3.0]
+
+    def test_cannot_schedule_in_the_past(self):
+        eng = SimulationEngine()
+        eng.schedule(5.0, lambda: eng.schedule(1.0, lambda: None))
+        with pytest.raises(EngineError, match="cannot schedule"):
+            eng.run()
+
+    def test_negative_delay_rejected(self):
+        eng = SimulationEngine()
+        with pytest.raises(EngineError, match="negative delay"):
+            eng.schedule_in(-1.0, lambda: None)
+
+    def test_clock_starts_at_fabric_clock(self):
+        fab = make_fabric()
+        fab.transfer(fab.pool_path(0, 0), 4096)
+        assert fab.clock > 0
+        eng = SimulationEngine(fab)
+        assert eng.now == fab.clock
+
+    def test_routes_require_fabric(self):
+        eng = SimulationEngine()
+        with pytest.raises(EngineError, match="needs a fabric"):
+            eng.job([(("host0", "pool0"), 4096)])
+
+
+# ---------------------------------------------------------------- jobs + deps
+class TestJobs:
+    def test_single_job_matches_sync_transfer(self):
+        fab_a, fab_b = make_fabric(), make_fabric()
+        eng = SimulationEngine(fab_a)
+        job = eng.job([(fab_a.pool_path(0, 0), 1 << 20)])
+        eng.run()
+        expected = fab_b.transfer(fab_b.pool_path(0, 0), 1 << 20)
+        assert job.done
+        assert job.transfers[0].elapsed == expected
+        assert fab_a.clock == fab_b.clock
+
+    def test_independent_jobs_begin_together_and_contend(self):
+        # Two transfers sharing one pool port: same fluid evolution as a
+        # manual begin-both-then-drain on a twin fabric.
+        fab, twin = make_fabric(), make_fabric()
+        eng = SimulationEngine(fab)
+        j1 = eng.job([(fab.pool_path(0, 0), 1 << 20)])
+        j2 = eng.job([(fab.pool_path(1, 0), 1 << 20)])
+        eng.run()
+        twin.begin(twin.pool_path(0, 0), 1 << 20)
+        twin.begin(twin.pool_path(1, 0), 1 << 20)
+        twin.drain()
+        assert j1.began_at == j2.began_at
+        assert fab.clock == twin.clock
+
+    def test_dependent_job_begins_at_dep_completion(self):
+        fab = make_fabric()
+        eng = SimulationEngine(fab)
+        first = eng.job([(fab.pool_path(0, 0), 1 << 20)])
+        second = eng.job([(fab.pool_path(0, 0), 1 << 20)]).after(first)
+        eng.run()
+        assert second.began_at == first.completed_at
+        assert second.completed_at > first.completed_at
+
+    def test_routeless_job_is_instant_ordering_point(self):
+        fab = make_fabric()
+        eng = SimulationEngine(fab)
+        first = eng.job([(fab.pool_path(0, 0), 1 << 20)])
+        barrier = eng.job().after(first)
+        after = eng.job([(fab.pool_path(1, 1), 4096)]).after(barrier)
+        eng.run()
+        assert barrier.began_at == barrier.completed_at == first.completed_at
+        assert after.began_at == barrier.completed_at
+
+    def test_diamond_dependency(self):
+        fab = make_fabric()
+        eng = SimulationEngine(fab)
+        root = eng.job([(fab.pool_path(0, 0), 1 << 18)])
+        left = eng.job([(fab.pool_path(0, 0), 1 << 18)]).after(root)
+        right = eng.job([(fab.pool_path(1, 1), 1 << 18)]).after(root)
+        tail = eng.job([(fab.pool_path(0, 0), 4096)]).after(left).after(right)
+        eng.run()
+        assert tail.began_at == max(left.completed_at, right.completed_at)
+
+    def test_dep_on_done_job_is_noop(self):
+        eng = SimulationEngine()
+        first = eng.job()
+        eng.run()
+        assert first.done
+        second = eng.job().after(first)
+        assert second.ready
+
+    def test_cycle_raises(self):
+        fab = make_fabric()
+        eng = SimulationEngine(fab)
+        a = eng.job([(fab.pool_path(0, 0), 4096)], label="a")
+        b = eng.job([(fab.pool_path(1, 0), 4096)], label="b")
+        a.after(b)
+        b.after(a)
+        with pytest.raises(EngineError, match="never became ready"):
+            eng.run()
+
+    def test_independent_streams_do_not_serialize(self):
+        # The tentpole property in miniature: a dependency chain on stream A
+        # does not delay unrelated stream B, so the makespan is the max of the
+        # two streams, not the wave scheduler's sum-of-epochs.
+        fab = make_fabric()
+        eng = SimulationEngine(fab)
+        a1 = eng.job([(fab.pool_path(0, 0), 1 << 18)])
+        eng.job([(fab.pool_path(0, 0), 1 << 18)]).after(a1)
+        big = eng.job([(fab.pool_path(1, 1), 1 << 22)])
+        makespan = eng.run()
+        # B (the big transfer) never waited on A's chain.
+        assert big.began_at == a1.began_at
+        # Wave baseline on a twin: everything after a1 waits for a full drain.
+        twin = make_fabric()
+        twin.begin(twin.pool_path(0, 0), 1 << 18)
+        twin.drain()
+        twin.begin(twin.pool_path(0, 0), 1 << 18)
+        twin.begin(twin.pool_path(1, 1), 1 << 22)
+        twin.drain()
+        assert makespan < twin.clock
+
+
+# ---------------------------------------------------------------- fabric steps
+class TestFabricCosim:
+    def test_next_event_time_matches_step(self):
+        fab = make_fabric()
+        fab.begin(fab.pool_path(0, 0), 1 << 20)
+        fab.begin(fab.pool_path(1, 0), 1 << 16)
+        while not fab.idle():
+            predicted = fab.next_event_time()
+            fab.step()
+            assert fab.clock == predicted
+        assert fab.next_event_time() is None
+
+    def test_advance_to_partial_progress_preserves_completion_time(self):
+        fab, twin = make_fabric(), make_fabric()
+        t = fab.begin(fab.pool_path(0, 0), 1 << 20)
+        u = twin.begin(twin.pool_path(0, 0), 1 << 20)
+        twin.drain()
+        # chop the same interval into awkward pieces
+        for frac in (0.1, 0.35, 0.5, 0.999):
+            fab.advance_to(u.completed_at * frac)
+            assert t.completed_at is None
+        done = fab.advance_to(u.completed_at * 2)
+        assert done == [t]
+        assert t.completed_at == pytest.approx(u.completed_at, rel=1e-12)
+
+    def test_advance_to_idle_jumps_clock(self):
+        fab = make_fabric()
+        assert fab.advance_to(5.0) == []
+        assert fab.clock == 5.0
+
+    def test_event_between_fabric_events_sees_partial_progress(self):
+        fab = make_fabric()
+        eng = SimulationEngine(fab)
+        job = eng.job([(fab.pool_path(0, 0), 1 << 20)])
+        observed = {}
+
+        def peek():
+            tr = job.transfers[0]
+            observed["remaining"] = tr.remaining
+            observed["at"] = eng.now
+
+        # fire mid-flight: after latency, before completion
+        eng.schedule(fab.path_latency(fab.pool_path(0, 0)) * 2, peek)
+        eng.run()
+        assert 0 < observed["remaining"] < (1 << 20)
+        assert observed["at"] < job.completed_at

@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Execute the docs' Python snippets and validate intra-repo links.
+
+Run from the repo root (CI does) with ``src`` importable::
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Two checks over ``README.md`` and every ``docs/**/*.md``:
+
+1. **Snippets run.** Each ```python fenced block is executed; blocks on the
+   same page share one namespace and run top to bottom, so a page can build
+   state across snippets (and its asserts make the page a test of the code).
+2. **Links resolve.** Every relative ``[text](target)`` must point at a file
+   or directory that exists, resolved against the page's own location.
+   ``http(s)``/``mailto:`` targets and in-page ``#anchors`` are skipped —
+   this is a rot check for the repo's own tree, not a crawler.
+
+Exit status is non-zero on any failure; ``tests/test_docs.py`` wires this
+into the tier-1 suite and CI runs it as a dedicated docs job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+import traceback
+from pathlib import Path
+from typing import Iterator, List, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+# [text](target) — ignore images' extra ! prefix handling (same syntax) and
+# reference-style links (unused in this repo).
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def doc_files() -> List[Path]:
+    files = [REPO_ROOT / "README.md"]
+    files.extend(sorted((REPO_ROOT / "docs").rglob("*.md")))
+    return [f for f in files if f.is_file()]
+
+
+def python_blocks(text: str) -> Iterator[Tuple[int, str]]:
+    """Yield (starting line number, source) for each ```python block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m and m.group(1) == "python":
+            start = i + 2  # 1-based first line of the block body
+            body: List[str] = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield start, "\n".join(body)
+        i += 1
+
+
+def check_snippets(path: Path) -> List[str]:
+    errors: List[str] = []
+    namespace: dict = {"__name__": f"docs_snippet::{path.name}"}
+    for lineno, source in python_blocks(path.read_text()):
+        try:
+            code = compile(source, f"{path}:{lineno}", "exec")
+            exec(code, namespace)  # noqa: S102 - executing our own docs is the point
+        except Exception:
+            tb = traceback.format_exc(limit=4)
+            errors.append(
+                f"{path.relative_to(REPO_ROOT)}:{lineno}: snippet failed\n{tb}")
+    return errors
+
+
+def check_links(path: Path) -> List[str]:
+    errors: List[str] = []
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+                continue
+            resolved = (path.parent / target.split("#", 1)[0]).resolve()
+            if not resolved.is_relative_to(REPO_ROOT):
+                # GitHub site-relative URLs (e.g. the CI badge's
+                # ../../actions/...) point outside the tree — not checkable.
+                continue
+            if not resolved.exists():
+                errors.append(
+                    f"{path.relative_to(REPO_ROOT)}:{lineno}: "
+                    f"broken link -> {target}")
+    return errors
+
+
+def main(argv: List[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--links-only", action="store_true",
+                        help="skip snippet execution (fast rot check)")
+    args = parser.parse_args(argv)
+
+    failures: List[str] = []
+    for path in doc_files():
+        rel = path.relative_to(REPO_ROOT)
+        link_errors = check_links(path)
+        failures.extend(link_errors)
+        if args.links_only:
+            print(f"  links ok: {rel}" if not link_errors else
+                  f"  LINKS BROKEN: {rel}")
+            continue
+        snippet_errors = check_snippets(path)
+        failures.extend(snippet_errors)
+        status = "ok" if not (link_errors or snippet_errors) else "FAILED"
+        print(f"  {status}: {rel}")
+
+    if failures:
+        print(f"\n{len(failures)} docs check failure(s):", file=sys.stderr)
+        for f in failures:
+            print(f"- {f}", file=sys.stderr)
+        return 1
+    print("all docs checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
