@@ -495,7 +495,7 @@ def bench(hosts=(2, 4), prefix_pages: int = 4, rounds: int = 3,
     )
     if check:
         msgs = [r["protocol_msgs"] for r in cs["sweep"]]
-        for shallow, deep in zip(msgs, msgs[1:]):
+        for shallow, deep in zip(msgs, msgs[1:], strict=False):
             # monotone within 5% tolerance: deepening the WC buffer must not
             # meaningfully increase protocol traffic
             assert deep <= shallow * 1.05, (

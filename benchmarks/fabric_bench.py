@@ -112,10 +112,9 @@ def main() -> None:
     ap.add_argument("--hosts", default=None,
                     help="comma-separated host counts (default 1,2,4,8)")
     args = ap.parse_args()
+    hosts = [1, 4] if args.smoke else [1, 2, 4, 8]
     if args.hosts is not None:
         hosts = [int(h) for h in args.hosts.split(",")]
-    else:
-        hosts = [1, 4] if args.smoke else [1, 2, 4, 8]
     pages = 4 if args.smoke else 16
     page_bytes = 256 * 1024 if args.smoke else 2 * 1024 * 1024
     print("name,us_per_call,derived")

@@ -109,7 +109,7 @@ def main() -> None:
     import argparse
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", default=None, choices=list(VARIANTS) + [None])
+    ap.add_argument("--cell", default=None, choices=[*VARIANTS, None])
     ap.add_argument("--label", default=None)
     args = ap.parse_args()
     OUT_DIR.mkdir(parents=True, exist_ok=True)

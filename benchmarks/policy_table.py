@@ -43,7 +43,7 @@ def run_policy_experiment(
     hot_n = n_objects if hot_frac == "random" else max(int(hot_frac * n_objects), 1)
     hot_ids = g.integers(0, hot_n, n_gets)
     all_ids = g.integers(0, n_objects, n_gets)
-    for c, h, a in zip(coins, hot_ids, all_ids):
+    for c, h, a in zip(coins, hot_ids, all_ids, strict=True):
         if hot_frac != "random" and c < 0.9:
             kv.get(f"k{h}")
         else:
@@ -55,7 +55,7 @@ def run_policy_experiment(
 
 def full_table(n_gets: int = 50000) -> List[Dict]:
     rows = []
-    for frac in list(np.round(np.arange(0.1, 1.0, 0.1), 2)) + ["random"]:
+    for frac in [*np.round(np.arange(0.1, 1.0, 0.1), 2), "random"]:
         p1 = run_policy_experiment(frac, Policy1(), n_gets=n_gets)
         p2 = run_policy_experiment(frac, Policy2(), n_gets=n_gets)
         key = float(frac) if frac != "random" else "random"

@@ -91,10 +91,10 @@ def perf_table(arch: str, shape: str) -> str:
         label = p.stem.split("__")[-1]
         if label == "baseline":
             base = d
-    order = ["baseline"] + sorted(
+    order = ["baseline", *sorted(
         p.stem.split("__")[-1] for p in ROOF.glob(f"{arch}__{shape}__*.json")
         if not p.stem.endswith("baseline")
-    )
+    )]
     for label in order:
         p = ROOF / f"{arch}__{shape}__{label}.json"
         if not p.exists():

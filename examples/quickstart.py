@@ -3,6 +3,9 @@
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 
+# This file demonstrates the paper's v1 surface verbatim, which is the point:
+# emucxl: allow-v1
+
 import numpy as np
 
 from repro.core import (

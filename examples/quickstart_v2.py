@@ -73,6 +73,9 @@ def main() -> None:
         print("pending write-combined pages:", seg.pending_pages(0),
               "| invalidations so far:", seg.stats.invalidations)
         writer.fence()                     # ONE upgrade publishes: 2 invalidations
+        readers[0].acquire()               # pair with the fence (free in sync code,
+        #                                    but required — EMUCXL_CHECK=race flags
+        #                                    an unpaired read as a data race)
         print("after fence: pending", seg.pending_pages(0),
               "| invalidations:", seg.stats.invalidations,
               "| readers see:", readers[0].read(0, 4))

@@ -73,6 +73,7 @@ from repro.core.queue import (
     Ticket,
     WriteOp,
 )
+from repro.core.race import RaceDetector, RaceError, RaceReport
 from repro.core.slab import SlabAllocator, SlabPtr
 
 __all__ = [
@@ -93,4 +94,6 @@ __all__ = [
     "CXLSession", "as_session", "Buffer", "HandleTable", "StaleHandleError",
     "OpQueue", "Ticket", "ReadOp", "WriteOp", "MigrateOp", "MemcpyOp", "MemsetOp",
     "FenceOp", "AcquireOp",
+    # happens-before race detection (core/race.py)
+    "RaceDetector", "RaceError", "RaceReport",
 ]

@@ -211,7 +211,8 @@ class CXLSession:
     # ------------------------------------------------------------------ shared segments
     def share(self, size: int, host: int = 0, page_bytes: int = 4096,
               writers=None, consistency: str = "eager",
-              wc_capacity: Optional[int] = DEFAULT_WC_CAPACITY
+              wc_capacity: Optional[int] = DEFAULT_WC_CAPACITY,
+              race_detect: Optional[str] = None
               ) -> SharedSegment:
         """Create a hardware-coherent shared segment (core/coherence.py).
 
@@ -223,11 +224,15 @@ class CXLSession:
         locally per (segment, host) and only publish — invalidations,
         writebacks — at a ``fence()``. The buffer holds at most `wc_capacity`
         pages per host (None = unbounded); overflowing it force-drains the
-        LRU pending page through the normal upgrade protocol."""
+        LRU pending page through the normal upgrade protocol.
+
+        `race_detect` ("off"/"warn"/"raise", default: resolve from
+        ``EMUCXL_CHECK=race``) arms the happens-before race detector on
+        release segments — see core/race.py and docs/consistency-model.md."""
         with self._lib._lock:
             self._check_open()
             return self._lib.share(size, host, page_bytes, writers,
-                                   consistency, wc_capacity)
+                                   consistency, wc_capacity, race_detect)
 
     def attach(self, segment: SharedSegment, host: int = 0) -> Buffer:
         """Map `segment` for `host`; returns a Buffer over the shared bytes.

@@ -81,6 +81,8 @@ import dataclasses
 import itertools
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
+from .race import RaceDetector, resolve_mode
+
 MODIFIED = "M"
 EXCLUSIVE = "E"
 SHARED = "S"
@@ -122,6 +124,7 @@ class CoherenceStats:
     acquires: int = 0              # acquire fences that synced on a peer release
     forced_drains: int = 0         # capacity evictions (full WC buffer)
     forced_drain_pages: int = 0    # pages upgraded early by forced drains
+    races: int = 0                 # conflicts recorded by race_detect="warn"
     bytes_moved: int = 0           # page payloads moved by the protocol
     msg_bytes: int = 0             # control-message bytes (invalidations)
 
@@ -162,6 +165,10 @@ class DirectoryJournal:
         # | ("wc+", seg, host, page) — page appended at the MRU end
         # | ("wc-", seg, host, page, pos) — page removed from LRU position pos
         # | ("wc~", seg, host, page, pos) — page moved from pos to the MRU end
+        # | ("race-w", seg, page, old_epoch) — last-writer epoch overwritten
+        # | ("race-vc", seg, host, old_row) — a host's vector clock replaced
+        # | ("race-rel", seg, host, old_row) — a host's release snapshot
+        # | ("race-log", seg, old_len) — warn-mode race reports appended
         self._entries: List[Tuple] = []
 
     def __len__(self) -> int:
@@ -188,6 +195,25 @@ class DirectoryJournal:
     def record_wc_touch(self, seg: "SharedSegment", host: int, page: int,
                         pos: int) -> None:
         self._entries.append(("wc~", seg, host, page, pos))
+
+    # Race-detector state is planner state too: journaled with deep-copied
+    # old values so rollback restores clocks/epochs/logs byte-identically.
+    def record_race_write(self, seg: "SharedSegment", page: int) -> None:
+        self._entries.append(
+            ("race-w", seg, page, seg.detector.write_epoch.get(page)))
+
+    def record_race_vc(self, seg: "SharedSegment", host: int) -> None:
+        row = seg.detector.vc.get(host)
+        self._entries.append(
+            ("race-vc", seg, host, None if row is None else dict(row)))
+
+    def record_race_rel(self, seg: "SharedSegment", host: int) -> None:
+        row = seg.detector.rel.get(host)
+        self._entries.append(
+            ("race-rel", seg, host, None if row is None else dict(row)))
+
+    def record_race_log(self, seg: "SharedSegment") -> None:
+        self._entries.append(("race-log", seg, len(seg.detector.races)))
 
     @staticmethod
     def _wc_insert_at(seg: "SharedSegment", host: int, page: int,
@@ -220,6 +246,18 @@ class DirectoryJournal:
                     pending.pop(page, None)
                     if not pending:
                         seg.wc.pop(host, None)
+            elif kind == "race-w":
+                _, _, page, old_epoch = entry
+                seg.detector.restore_write(page, old_epoch)
+            elif kind == "race-vc":
+                _, _, host, old_row = entry
+                seg.detector.restore_vc(host, old_row)
+            elif kind == "race-rel":
+                _, _, host, old_row = entry
+                seg.detector.restore_rel(host, old_row)
+            elif kind == "race-log":
+                _, _, old_len = entry
+                seg.detector.truncate_log(old_len)
             else:  # "wc-" undoes a removal, "wc~" undoes a move-to-MRU: both
                 # re-place the page at its recorded LRU position.
                 _, _, host, page, pos = entry
@@ -303,7 +341,8 @@ class SharedSegment:
     def __init__(self, size: int, page_bytes: int, backing_addr: int,
                  home_host: int, port: int, sid: Optional[int] = None,
                  consistency: str = EAGER,
-                 wc_capacity: Optional[int] = DEFAULT_WC_CAPACITY):
+                 wc_capacity: Optional[int] = DEFAULT_WC_CAPACITY,
+                 race_detect: Optional[str] = None):
         if page_bytes <= 0:
             raise CoherenceError(f"invalid page_bytes {page_bytes}")
         if consistency not in _CONSISTENCY_MODES:
@@ -316,6 +355,10 @@ class SharedSegment:
                 f"invalid wc_capacity {wc_capacity}; need >= 1 page per host "
                 f"(or None for an unbounded buffer)"
             )
+        try:
+            race_mode = resolve_mode(race_detect)
+        except ValueError as exc:
+            raise CoherenceError(str(exc)) from None
         self.sid = next(SharedSegment._next_id) if sid is None else sid
         self.size = size
         self.page_bytes = page_bytes
@@ -332,6 +375,12 @@ class SharedSegment:
         # dict is an *ordered set*: iteration order is LRU -> MRU write
         # recency, which picks the victim when the buffer hits wc_capacity.
         self.wc: Dict[int, Dict[int, None]] = {}
+        # Happens-before race detector: release segments only ("eager" writes
+        # publish immediately, so page-level staleness races cannot occur).
+        self.race_detect = race_mode if consistency == RELEASE else "off"
+        self.detector: Optional[RaceDetector] = (
+            RaceDetector(self, race_mode)
+            if consistency == RELEASE and race_mode != "off" else None)
         self.attachments: Set[int] = set()     # attachment addresses
         self.attached_hosts: Dict[int, int] = {}   # host -> attachment count
         self.destroyed = False
@@ -409,6 +458,13 @@ class SharedSegment:
         mutation in `journal` when one is supplied; the caller routes the
         returned messages over the fabric (or charges hw constants for
         empty-path messages when no fabric is attached)."""
+        if self.detector is not None:
+            # Checks run before any mutation: a strict-mode RaceError leaves
+            # the directory, stats, and clocks untouched even without a
+            # journal (the sync paths rely on this).
+            self.detector.on_read(
+                host, self.pages_for(offset, n),
+                f"host {host} read [{offset}, {offset + n})", journal)
         msgs: List[CoherenceMsg] = []
         d = self.directory
         for page in self.pages_for(offset, n):
@@ -499,6 +555,10 @@ class SharedSegment:
         the buffer is at ``wc_capacity``, in which case the least-recently
         written pending page is force-drained through the normal upgrade
         protocol to make room (a real WC buffer's capacity eviction)."""
+        if self.detector is not None:
+            self.detector.on_write(
+                host, self.pages_for(offset, n),
+                f"host {host} write [{offset}, {offset + n})", journal)
         msgs: List[CoherenceMsg] = []
         d = self.directory
         for page in self.pages_for(offset, n):
@@ -539,6 +599,11 @@ class SharedSegment:
         draining in LRU order (so each journaled removal is the O(1) head).
         No-op (and uncounted) when nothing is pending, so fencing an eager
         segment is free."""
+        if self.detector is not None:
+            # The release edge exists even when the buffer is empty — a forced
+            # capacity drain may have published the bytes early, but only the
+            # fence opens a new epoch peers can acquire.
+            self.detector.on_release(host, journal)
         msgs: List[CoherenceMsg] = []
         pending = self.wc.get(host)
         if not pending:
@@ -586,6 +651,7 @@ class SharedSegment:
             "port": self.port,
             "consistency": self.consistency,
             "wc_capacity": self.wc_capacity,
+            "race_detect": self.race_detect,
             "pending_pages": self.pending_pages(),
             "attached_hosts": sorted(self.attached_hosts),
             "stats": self.stats.as_dict(),

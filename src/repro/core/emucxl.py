@@ -51,6 +51,7 @@ from repro.core.coherence import (
 )
 from repro.core.fabric import Fabric, Transfer
 from repro.core.hw import V5E, HardwareModel
+from repro.core.race import RACE_MODES
 from repro.core.policy import PlacementPolicy, StaticPlacement
 from repro.core.pool import PoolCapacityError, PoolQuotaError, SharedPool
 
@@ -514,10 +515,8 @@ class EmuCXL:
                         self.fabric.cancel(transfer)
                     self.free(new_rec.address)
                 raise
-            if self.fabric is not None:
-                makespan = self.fabric.drain() - start_clock
-            else:
-                makespan = serial_time
+            makespan = (self.fabric.drain() - start_clock
+                        if self.fabric is not None else serial_time)
             self.modeled_time[REMOTE_MEMORY] += makespan
             for rec, new_rec, node, _ in staged:
                 new_rec.data = jax.device_put(rec.data, self._sharding_for(node))
@@ -760,7 +759,17 @@ class EmuCXL:
                         f"address {rec.address:#x} is not a shared-segment "
                         f"mapping; acquire targets coherent attachments"
                     )
+                if rec.segment.detector is not None:
+                    # The happens-before edge: join every peer's published
+                    # release clock into this host's view. Free at runtime,
+                    # but required for later reads to be race-clean.
+                    rec.segment.detector.on_acquire(rec.host)
                 self._touch(rec)
+            else:
+                for seg in self._segments.values():
+                    if seg.detector is not None:
+                        for host in sorted(seg.attached_hosts):
+                            seg.detector.on_acquire(host)
             return 0.0
 
     def _maybe_check(self) -> None:
@@ -835,7 +844,19 @@ class EmuCXL:
                size: int) -> int:
         with self._lock:
             drec, srec = self._resolve(dst), self._resolve(src)
-            plan = self._plan_copy(srec, drec, size)
+            # A copy plans two DMA halves; if the write-half's race check
+            # raises after the read-half already moved directory state, the
+            # journal unwinds the half-planned transitions (the single-plan
+            # sync ops need no journal — their checks precede any mutation).
+            journal = DirectoryJournal() if any(
+                r.segment is not None and r.segment.detector is not None
+                for r in (srec, drec)) else None
+            try:
+                plan = self._plan_copy(srec, drec, size, journal)
+            except Exception:
+                if journal is not None:
+                    journal.rollback()
+                raise
             sstore, dstore = self._storage_rec(srec), self._storage_rec(drec)
             chunk = sstore.data[:size]
             if dstore.node != sstore.node:
@@ -854,7 +875,8 @@ class EmuCXL:
     def share(self, size: int, host: int = 0, page_bytes: int = _PAGE,
               writers: Optional[Sequence[int]] = None,
               consistency: str = EAGER,
-              wc_capacity: Optional[int] = DEFAULT_WC_CAPACITY
+              wc_capacity: Optional[int] = DEFAULT_WC_CAPACITY,
+              race_detect: Optional[str] = None
               ) -> SharedSegment:
         """Create a hardware-coherent shared segment of `size` bytes.
 
@@ -871,6 +893,13 @@ class EmuCXL:
         pending page through the normal upgrade protocol. Returns the
         ``SharedSegment``; call ``attach`` to map it for a host, and — for
         release segments — ``fence`` to publish write-combined stores.
+
+        `race_detect` arms the happens-before race detector (core/race.py) on
+        release segments: ``"warn"`` records conflicts into
+        ``stats.races``/``coherence_stats()["races"]``, ``"raise"`` raises
+        ``RaceError`` at the conflicting access, ``"off"`` disables it. The
+        default ``None`` defers to the environment — ``EMUCXL_CHECK=race``
+        means ``"raise"``; an explicit value always wins over the env.
         """
         with self._lock:
             self._require_init()
@@ -888,6 +917,11 @@ class EmuCXL:
                 raise EmuCXLError(
                     f"invalid wc_capacity {wc_capacity}; need >= 1 page per "
                     f"host (or None for an unbounded buffer)"
+                )
+            if race_detect is not None and race_detect not in RACE_MODES:
+                raise EmuCXLError(
+                    f"unknown race_detect {race_detect!r}; options: "
+                    f"{list(RACE_MODES)}"
                 )
             writer_hosts = list(writers) if writers is not None else [host]
             for w in writer_hosts:
@@ -914,7 +948,8 @@ class EmuCXL:
                 seg = SharedSegment(size, page_bytes, backing_addr, host,
                                     self._allocs[backing_addr].port,
                                     sid=self._next_sid, consistency=consistency,
-                                    wc_capacity=wc_capacity)
+                                    wc_capacity=wc_capacity,
+                                    race_detect=race_detect)
             except Exception:
                 # A failed share must not leak: pay the policy weight back AND
                 # release the backing charge if the alloc had already landed.
@@ -1003,6 +1038,12 @@ class EmuCXL:
                 "total": total.as_dict(),
                 "segments": {sid: seg.describe()
                              for sid, seg in self._segments.items()},
+                # Conflicts recorded by race_detect="warn" detectors, in
+                # detection order (strict mode raises instead of recording).
+                "races": [r.describe()
+                          for seg in self._segments.values()
+                          if seg.detector is not None
+                          for r in seg.detector.races],
             }
 
     # ------------------------------------------------------------------ tensor views

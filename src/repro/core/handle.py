@@ -82,10 +82,9 @@ class HandleTable:
 
     def _raise_stale(self, index: int, generation: int, action: str,
                      reason: str, last_address: int) -> None:
+        kind = f"stale handle ({reason}):"
         if reason == "freed":
             kind = "double free of" if action == "free" else "use-after-free:"
-        else:
-            kind = f"stale handle ({reason}):"
         raise StaleHandleError(
             f"{kind} buffer handle {index}:{generation} "
             f"(last address {last_address:#x}) was {reason}", reason,

@@ -246,6 +246,6 @@ def make_policy(name: str) -> PromotionPolicy:
         "policy2-conservative": Policy2(),
     }
     if key not in table:
-        options = sorted(table) + ["congestion-aware"]
+        options = [*sorted(table), "congestion-aware"]
         raise ValueError(f"unknown policy {name!r}; options: {options}")
     return table[key]

@@ -390,6 +390,11 @@ class OpQueue:
             # No protocol traffic of its own: the waiting (if any) is pure
             # ordering, wired by flush as dependencies on the batch's prior
             # peer release fences.
+            if rec.segment.detector is not None:
+                # Happens-before edge for the race detector: join every peer
+                # release published up to this point in plan (== program)
+                # order. Journaled so a failed batch rolls the clocks back.
+                rec.segment.detector.on_acquire(rec.host, journal)
             return _Plan("acquire", buf=op.buf, streams=stream,
                          segment=rec.segment)
         if isinstance(op, ReadOp):

@@ -141,9 +141,8 @@ def parse_collectives(hlo_text: str) -> Dict[str, Any]:
             continue
         type_str, op = m.group(1), m.group(2)
         nbytes = _shape_bytes(type_str)
-        if "f32" in type_str:
-            if _bf16_origin(_operands(line), defs):
-                nbytes = nbytes // 2
+        if "f32" in type_str and _bf16_origin(_operands(line), defs):
+            nbytes = nbytes // 2
         g = _GROUPS_IOTA_RE.search(line)
         if g:
             n = int(g.group(2))
@@ -280,12 +279,13 @@ def build_cell(
         plan_rules = sp.rules_for(cfg, shape)
     grad_accum = grad_accum or 1
     rules = rules_override or plan_rules
-    if opts_override is not None:
-        # analysis mode must still unroll scans regardless of the variant's options
-        opts = (dataclasses.replace(opts_override, unroll_scans=True)
-                if unroll else opts_override)
-    else:
+    if opts_override is None:
         opts = default_options(cfg, shape, unroll)
+    elif unroll:
+        # analysis mode must still unroll scans regardless of the variant's options
+        opts = dataclasses.replace(opts_override, unroll_scans=True)
+    else:
+        opts = opts_override
     hp = default_hp(cfg)
 
     with mesh, axis_rules(mesh, rules):
@@ -388,7 +388,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> CellResult:
         print(f"  memory_analysis: {ma}")
         print(f"  collectives: {coll['counts']} link_bytes/dev={coll['link_bytes']:.3e}")
         return res
-    except Exception as e:  # noqa: BLE001 — record failure in the matrix
+    except Exception as e:  # record failure in the matrix
         traceback.print_exc()
         return CellResult(arch, shape_name, mesh_name, "fail",
                           seconds=time.time() - t0, error=f"{type(e).__name__}: {e}")

@@ -55,10 +55,9 @@ def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtype
     B, S = shape.global_batch, shape.seq_len
     act = dtype_of(cfg.dtype)
     if shape.kind == "train":
-        if cfg.input_mode == "tokens":
-            inp = jax.ShapeDtypeStruct((B, S), jnp.int32)
-        else:
-            inp = jax.ShapeDtypeStruct((B, S, cfg.d_model), act)
+        inp = (jax.ShapeDtypeStruct((B, S), jnp.int32)
+               if cfg.input_mode == "tokens"
+               else jax.ShapeDtypeStruct((B, S, cfg.d_model), act))
         return {"inputs": inp, "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
     if shape.kind == "prefill":
         if cfg.input_mode == "tokens":
@@ -71,10 +70,8 @@ def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtype
 
 
 def batch_axes(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Tuple]:
-    if cfg.input_mode == "tokens":
-        inp_ax = ("batch", "seq")
-    else:
-        inp_ax = ("batch", "seq", None)
+    inp_ax = ("batch", "seq") if cfg.input_mode == "tokens" \
+        else ("batch", "seq", None)
     ax = {"inputs": inp_ax}
     if shape.kind == "train":
         ax["targets"] = ("batch", "seq")

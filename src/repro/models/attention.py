@@ -107,10 +107,8 @@ def _chunked_attention(q, k, v, *, window, causal: bool, scale: float,
     def body(_, inputs):
         qi, qblk = inputs
         qpos = (qi * qb + jnp.arange(qb, dtype=jnp.int32))[None, :, None]
-        if causal:
-            mask = (qpos >= kpos) & (qpos - kpos < window)
-        else:
-            mask = jnp.ones((1, qb, S), jnp.bool_)
+        mask = ((qpos >= kpos) & (qpos - kpos < window) if causal
+                else jnp.ones((1, qb, S), jnp.bool_))
         out = _gqa_scores_mask_values(qblk, k, v, mask, scale)
         return 0, out
 
@@ -151,10 +149,9 @@ def full_attention(
     else:
         qpos = positions[:, :, None]      # (B, S, 1)
         kpos = positions[:, None, :]      # (B, 1, S)
-        if causal:
-            mask = (qpos >= kpos) & (qpos - kpos < window)
-        else:
-            mask = jnp.abs(qpos - kpos) < jnp.maximum(window, S + 1)  # encoder: all-to-all
+        mask = ((qpos >= kpos) & (qpos - kpos < window) if causal
+                # encoder: all-to-all
+                else jnp.abs(qpos - kpos) < jnp.maximum(window, S + 1))
         out = _gqa_scores_mask_values(q, k, v, mask, scale)
 
     out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])

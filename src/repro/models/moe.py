@@ -135,10 +135,7 @@ def _local_expert_pass(xl, router_w, w_gate, w_up, w_down, cfg: ArchConfig,
 
     group_sizes = jnp.bincount(sel_e, length=e_local + 1)[:e_local].astype(jnp.int32)
     xe = xl[sel_t]
-    if exact_flops:
-        rdot = lambda x, w, gs: x @ w[0]
-    else:
-        rdot = jax.lax.ragged_dot
+    rdot = (lambda x, w, gs: x @ w[0]) if exact_flops else jax.lax.ragged_dot
     h = jax.nn.silu(rdot(xe, w_gate, group_sizes)) * rdot(xe, w_up, group_sizes)
     ye = rdot(h, w_down, group_sizes)  # (C, D)
     out = jnp.zeros((T, D), ye.dtype).at[sel_t].add(ye * sel_p[:, None].astype(ye.dtype))

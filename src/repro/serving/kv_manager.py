@@ -153,9 +153,15 @@ class SharedPrefixKV:
         self.updates += 1
 
     def read_page(self, host: int, page_idx: int) -> np.ndarray:
-        """Coherent read of one prefix page through `host`'s mapping."""
-        return self.attach(host).read(page_idx * self.page_bytes,
-                                      self.page_bytes)
+        """Coherent read of one prefix page through `host`'s mapping.
+
+        The acquire pairs with the publisher's release fence — the
+        happens-before edge that entitles this host to the published bytes
+        (free at runtime; without it the race detector rightly flags the
+        read as unsynchronized)."""
+        buf = self.attach(host)
+        buf.acquire()
+        return buf.read(page_idx * self.page_bytes, self.page_bytes)
 
     def close(self) -> None:
         """Detach every mapping and release the pooled backing."""

@@ -5,7 +5,7 @@ import os
 import sys
 
 try:
-    import hypothesis  # noqa: F401
+    import hypothesis  # covered by the per-file F401 ignore in pyproject
 except ModuleNotFoundError:
     sys.path.insert(0, os.path.dirname(__file__))
     import _hypothesis_stub

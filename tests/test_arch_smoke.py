@@ -14,10 +14,10 @@ RNG = np.random.default_rng(3)
 
 
 def _batch(cfg, B=2, S=16):
-    if cfg.input_mode == "tokens":
-        inputs = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
-    else:
-        inputs = jnp.asarray(RNG.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    inputs = (jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+              if cfg.input_mode == "tokens"
+              else jnp.asarray(RNG.standard_normal((B, S, cfg.d_model)),
+                               jnp.float32))
     targets = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
     return {"inputs": inputs, "targets": targets}
 
@@ -49,7 +49,8 @@ def test_one_train_step(arch):
     # params actually moved
     delta = sum(
         float(jnp.abs(a - b).max())
-        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params),
+                        strict=True)
     )
     assert delta > 0
     assert int(new_opt["step"]) == 1
@@ -62,10 +63,10 @@ def test_decode_step_or_documented_skip(arch):
         pytest.skip("encoder-only arch has no decode step (documented skip)")
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     state = tf.init_decode_state(params, cfg, 2, 32)
-    if cfg.input_mode == "tokens":
-        tok = jnp.asarray([[1], [2]], jnp.int32)
-    else:
-        tok = jnp.asarray(RNG.standard_normal((2, 1, cfg.d_model)), jnp.float32)
+    tok = (jnp.asarray([[1], [2]], jnp.int32)
+           if cfg.input_mode == "tokens"
+           else jnp.asarray(RNG.standard_normal((2, 1, cfg.d_model)),
+                            jnp.float32))
     logits, new_state = tf.decode_step(params, cfg, state, tok)
     assert logits.shape == (2, cfg.padded_vocab)
     assert bool(jnp.all(jnp.isfinite(logits)))

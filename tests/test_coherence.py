@@ -239,8 +239,10 @@ def test_fence_combining_beats_eager_storm():
     pays ONE upgrade per host per fence."""
     def run(consistency):
         with make_session() as sess:
+            # two hosts deliberately storm one page unsynchronized — opt out
+            # of the race detector (an explicit "off" beats EMUCXL_CHECK=race)
             seg = sess.share(4096, host=0, page_bytes=4096,
-                             consistency=consistency)
+                             consistency=consistency, race_detect="off")
             a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
             w = np.ones(32, np.uint8)
             for _ in range(8):
@@ -360,7 +362,9 @@ def test_read_of_own_pending_page_is_store_forwarded():
     write-combined but not fenced was charged a read_miss plus a fabric
     fetch — paying the fabric for bytes it just wrote."""
     with make_session() as sess:
-        seg = sess.share(4096, host=0, page_bytes=4096, consistency="release")
+        # host1's stale read below is the point of the test — detector off
+        seg = sess.share(4096, host=0, page_bytes=4096, consistency="release",
+                         race_detect="off")
         a = sess.attach(seg, host=0)
         a.write(np.arange(64, dtype=np.uint8))
         assert seg.pending_pages(0) == 1
@@ -409,8 +413,10 @@ def test_wc_capacity_one_approaches_eager_costs():
     batched burst at the fence."""
     def protocol_msgs(wc_capacity, consistency="release"):
         with make_session() as sess:
+            # both hosts hammer the same pages unsynchronized by design
             seg = sess.share(4 * 4096, host=0, page_bytes=4096,
-                             consistency=consistency, wc_capacity=wc_capacity)
+                             consistency=consistency, wc_capacity=wc_capacity,
+                             race_detect="off")
             a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
             for r in range(3):
                 for p in range(4):
@@ -509,8 +515,9 @@ def test_independent_fences_overlap_in_one_batch():
     makespan beats fencing the same state serially (sync fence per host)."""
     def pending_state(sess_factory):
         sess = sess_factory()
+        # both hosts write the same pages (unsynchronized, by design)
         seg = sess.share(8 * 4096, host=0, page_bytes=4096,
-                         consistency="release")
+                         consistency="release", race_detect="off")
         bufs = [sess.attach(seg, host=h) for h in range(2)]
         for h, buf in enumerate(bufs):
             for p in range(4):
@@ -816,14 +823,14 @@ def test_shared_prefix_matches_guards_import():
     with make_session(num_hosts=2) as sess:
         shared = SharedPrefixKV(sess, num_pages=1, home_host=0, **GEOM)
         prefix = list(range(100, 100 + shared.prefix_tokens))
-        assert not shared.matches(prefix + [1, 2])   # nothing published yet
+        assert not shared.matches([*prefix, 1, 2])   # nothing published yet
         pub = PagedKVPool(num_slots=2, host=0, session=sess, **GEOM)
         pub.attach_shared_prefix(shared)
         pub.alloc_page(0, 0)
         shared.publish(pub, seq_id=0, token_ids=prefix)
-        assert shared.matches(prefix + [1, 2])
+        assert shared.matches([*prefix, 1, 2])
         assert not shared.matches(prefix[:-1])       # too short
-        assert not shared.matches([9] + prefix[1:] + [1])  # different tokens
+        assert not shared.matches([9, *prefix[1:], 1])  # different tokens
         with pytest.raises(EmuCXLError, match="token ids"):
             shared.publish(pub, seq_id=0, token_ids=prefix[:-1])
 

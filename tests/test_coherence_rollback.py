@@ -37,11 +37,16 @@ PAGE = 4096
 PAGES = 4
 
 
-def make_session(fabric=True, consistency="eager", wc_capacity=None):
+def make_session(fabric=True, consistency="eager", wc_capacity=None,
+                 race_detect="off"):
+    # race_detect="off" explicitly: the random interleavings below are
+    # unsynchronized by construction, so the detector is armed only by the
+    # tests that opt into "warn" and assert on its rollback.
     f = Fabric(num_hosts=NUM_HOSTS, pool_ports=2) if fabric else None
     sess = CXLSession(1 << 22, 1 << 24, num_hosts=NUM_HOSTS, fabric=f)
     seg = sess.share(PAGES * PAGE, host=0, page_bytes=PAGE,
-                     consistency=consistency, wc_capacity=wc_capacity)
+                     consistency=consistency, wc_capacity=wc_capacity,
+                     race_detect=race_detect)
     bufs = [sess.attach(seg, host=h) for h in range(NUM_HOSTS)]
     return sess, seg, bufs
 
@@ -54,6 +59,8 @@ def snapshot(sess, seg):
         # victims, so rollback must restore it byte-identically.
         {h: list(p) for h, p in seg.wc.items()},
         copy.deepcopy(sess.coherence_stats()),
+        # vector clocks, release snapshots, write epochs, recorded races
+        seg.detector.snapshot() if seg.detector is not None else None,
     )
 
 
@@ -98,9 +105,12 @@ _OP = st.tuples(st.integers(0, 4), st.integers(0, NUM_HOSTS - 1),
 _WARM = st.tuples(st.integers(0, NUM_HOSTS - 1), st.booleans())
 
 
-@pytest.mark.parametrize("consistency,wc_capacity",
-                         [("eager", None), ("release", None), ("release", 2)],
-                         ids=["eager", "release-unbounded", "release-cap2"])
+@pytest.mark.parametrize("consistency,wc_capacity,race_detect",
+                         [("eager", None, "off"), ("release", None, "off"),
+                          ("release", 2, "off"), ("release", None, "warn"),
+                          ("release", 2, "warn")],
+                         ids=["eager", "release-unbounded", "release-cap2",
+                              "release-warn", "release-cap2-warn"])
 @pytest.mark.parametrize("with_fabric", [True, False],
                          ids=["fabric", "no-fabric"])
 @settings(max_examples=15)
@@ -109,12 +119,17 @@ _WARM = st.tuples(st.integers(0, NUM_HOSTS - 1), st.booleans())
        after=st.lists(_OP, min_size=0, max_size=8),
        failer=st.integers(0, len(_FAILERS) - 1))
 def test_failed_flush_restores_coherence_state(consistency, wc_capacity,
-                                               with_fabric, warm, before,
-                                               after, failer):
+                                               race_detect, with_fabric, warm,
+                                               before, after, failer):
     # wc_capacity=2 with 4 pages makes the random batches overflow the
     # write-combining buffer, so forced partial drains (and their LRU
     # evictions) are exercised under rollback, not just plain buffering.
-    sess, seg, bufs = make_session(with_fabric, consistency, wc_capacity)
+    # The "warn" rows arm the race detector: the random unsynchronized
+    # interleavings record races mid-batch, and the snapshot (which includes
+    # vector clocks, write epochs, and the race log) must still restore
+    # byte-identically after the injected failure.
+    sess, seg, bufs = make_session(with_fabric, consistency, wc_capacity,
+                                   race_detect)
     try:
         warm_up(seg, bufs, warm)
         pre = snapshot(sess, seg)
@@ -286,6 +301,42 @@ def test_failed_flush_after_acquire_unwinds_acquire_stat():
         sess.close()
 
 
+def test_failed_flush_restores_race_detector_state():
+    """Pinned twin for the detector: a failed batch unwinds vector clocks,
+    release snapshots, write epochs, the race log, and ``stats.races``."""
+    sess, seg, bufs = make_session(consistency="release", race_detect="warn")
+    try:
+        # Build non-trivial happens-before state: host 0 publishes page 0,
+        # host 1 joins the release — a proper edge, no race recorded.
+        bufs[0].write(np.ones(32, np.uint8))
+        bufs[0].fence()
+        bufs[1].acquire()
+        bufs[1].read(0, 32)
+        assert seg.stats.races == 0
+        pre = snapshot(sess, seg)
+        det_pre = seg.detector.snapshot()
+        sess.submit(
+            # host 2 never acquired: write-write race on page 0, recorded
+            # (warn mode) and journaled mid-batch ...
+            WriteOp(bufs[2], np.ones(32, np.uint8)),
+            FenceOp(bufs[2]),                        # ... clock bump journaled
+            ReadOp(bufs[1], PAGES * PAGE, 64),       # fails planning
+        )
+        with pytest.raises(EmuCXLError, match="out-of-bounds"):
+            sess.flush()
+        assert snapshot(sess, seg) == pre
+        assert seg.detector.snapshot() == det_pre
+        assert seg.stats.races == 0
+        assert sess.coherence_stats()["races"] == []
+        # replayed for real, the same unsynchronized write records the race
+        bufs[2].write(np.ones(32, np.uint8))
+        assert seg.stats.races == 1
+        assert len(seg.detector.races) == 1
+        assert sess.coherence_stats()["races"][0]["page"] == 0
+    finally:
+        sess.close()
+
+
 # ---------------------------------------------------------------- program order
 def _run_ops(sess, seg, bufs, ops, *, async_batch):
     """Execute the op stream either as one flushed batch or synchronously in
@@ -341,7 +392,7 @@ def test_flush_preserves_program_order(consistency, wc_capacity, ops):
         got = _run_ops(sess_a, seg_a, bufs_a, ops, async_batch=True)
         want = _run_ops(sess_b, seg_b, bufs_b, ops, async_batch=False)
         assert len(got) == len(want)
-        for g, w in zip(got, want):
+        for g, w in zip(got, want, strict=True):
             np.testing.assert_array_equal(g, w)
         assert seg_a.directory.snapshot() == seg_b.directory.snapshot()
         stats_a, stats_b = seg_a.stats.as_dict(), seg_b.stats.as_dict()

@@ -1,5 +1,7 @@
 """Paper Table II API surface + Fig 3 lifecycle + hypothesis property tests."""
 
+import contextlib
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -117,11 +119,9 @@ def test_accounting_invariant(ops):
     lib.init(local_capacity=1 << 20, remote_capacity=1 << 20)
     live = {}
     for size, node, also_free in ops:
-        try:
+        with contextlib.suppress(OutOfTierMemory):
             addr = lib.alloc(size, node)
             live[addr] = (size, node)
-        except OutOfTierMemory:
-            pass
         if also_free and live:
             addr = next(iter(live))
             lib.free(addr)

@@ -1,0 +1,241 @@
+"""Tier-1 wiring for the emucxl API linter (tools/lint_emucxl.py).
+
+One seeded-bad fixture per rule (the linter must exit non-zero on each), good
+twins (zero findings), the pragma contract (trailing = line, standalone
+comment = file), markdown snippet linting, and — the enforcement that
+matters — the repo's own tree lints clean.
+"""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+_spec = importlib.util.spec_from_file_location(
+    "lint_emucxl", REPO_ROOT / "tools" / "lint_emucxl.py")
+lint_emucxl = importlib.util.module_from_spec(_spec)
+sys.modules["lint_emucxl"] = lint_emucxl
+_spec.loader.exec_module(lint_emucxl)
+
+lint_source = lint_emucxl.lint_source
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# --------------------------------------------------------- one fixture per rule
+BAD_V1 = """
+from repro.core import emucxl_alloc, emucxl_free
+addr = emucxl_alloc(4096, 0)
+emucxl_free(addr)
+"""
+
+BAD_RELEASE_WRITE = """
+import numpy as np
+seg = sess.share(1 << 20, host=0, consistency="release")
+w = sess.attach(seg, host=0)
+w.write(np.ones(64, np.uint8))
+"""
+
+BAD_ACQUIRE_EAGER = """
+seg = sess.share(1 << 20, host=0, consistency="eager")
+r = sess.attach(seg, host=1)
+r.acquire()
+"""
+
+BAD_JOURNAL = """
+def plan(self):
+    self._bump(None, "fences")
+    self._set(None, 0, 0, "M")
+    self._wc_add(None, 0, 1)
+"""
+
+BAD_USE_AFTER_DETACH = """
+buf = sess.attach(seg, host=0)
+buf.detach()
+buf.read(0, 64)
+"""
+
+SEEDED_BAD = [
+    ("EMU001", BAD_V1),
+    ("EMU002", BAD_RELEASE_WRITE),
+    ("EMU003", BAD_ACQUIRE_EAGER),
+    ("EMU004", BAD_JOURNAL),
+    ("EMU005", BAD_USE_AFTER_DETACH),
+]
+
+
+@pytest.mark.parametrize("rule,source", SEEDED_BAD,
+                         ids=[r for r, _ in SEEDED_BAD])
+def test_each_rule_fires_on_its_seeded_fixture(rule, source, tmp_path):
+    findings = lint_source(source, "fixture.py")
+    assert rule in rules_of(findings), findings
+    # and the CLI exits non-zero on the same file
+    bad = tmp_path / "bad.py"
+    bad.write_text(source)
+    assert lint_emucxl.main([str(bad)]) == 1
+
+
+GOOD = """
+import numpy as np
+seg = sess.share(1 << 20, host=0, consistency="release")
+w = sess.attach(seg, host=0)
+r = sess.attach(seg, host=1)
+w.write(np.ones(64, np.uint8))
+w.fence()
+r.acquire()
+r.read(0, 64)
+w.detach()
+r.detach()
+
+
+def planner(self, journal):
+    self._bump(journal, "fences")
+    self._set(journal, 0, 0, "M")
+"""
+
+
+def test_good_fixture_is_clean(tmp_path):
+    assert lint_source(GOOD, "fixture.py") == []
+    good = tmp_path / "good.py"
+    good.write_text(GOOD)
+    assert lint_emucxl.main([str(good)]) == 0
+
+
+def test_detach_then_reattach_is_not_a_stale_use():
+    source = """
+buf = sess.attach(seg, host=0)
+buf.detach()
+buf = sess.attach(seg, host=0)
+buf.read(0, 64)
+buf.detach()
+"""
+    assert lint_source(source, "fixture.py") == []
+
+
+def test_write_published_by_async_fence_op_is_clean():
+    source = """
+seg = sess.share(1 << 20, host=0, consistency="release")
+w = sess.attach(seg, host=0)
+sess.submit(WriteOp(w, payload), FenceOp(w))
+sess.flush()
+w.detach()
+"""
+    assert lint_source(source, "fixture.py") == []
+
+
+def test_session_level_free_and_detach_do_not_kill_the_receiver():
+    source = """
+addr = lib.alloc(4096, 0)
+lib.free(addr)
+lib.write(payload, 0, lib.alloc(4096, 0))
+"""
+    assert lint_source(source, "fixture.py") == []
+
+
+def test_rebinding_a_segment_name_updates_the_verdict():
+    """Flow sensitivity: the same names, eager first, release after."""
+    source = """
+seg = sess.share(1 << 20, host=0)
+a = sess.attach(seg, host=0)
+a.acquire()
+a.detach()
+seg = sess.share(1 << 20, host=0, consistency="release")
+a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+a.write(payload)
+a.fence()
+b.acquire()
+a.detach()
+b.detach()
+"""
+    findings = lint_source(source, "fixture.py")
+    assert rules_of(findings) == ["EMU003"]      # only the eager acquire
+    assert findings[0].line == 4
+
+
+# --------------------------------------------------------------------- pragmas
+def test_trailing_pragma_suppresses_the_line_only():
+    source = """
+from repro.core import emucxl_alloc
+a = emucxl_alloc(4096, 0)  # emucxl: allow-v1
+b = emucxl_alloc(4096, 0)
+"""
+    findings = lint_source(source, "fixture.py")
+    assert [f.line for f in findings] == [4]
+
+
+def test_standalone_pragma_suppresses_the_whole_file():
+    source = """
+# emucxl: allow-v1
+from repro.core import emucxl_alloc
+a = emucxl_alloc(4096, 0)
+b = emucxl_alloc(4096, 0)
+"""
+    assert lint_source(source, "fixture.py") == []
+
+
+def test_pragma_only_silences_its_own_rule():
+    source = """
+# emucxl: allow-v1
+buf = sess.attach(seg, host=0)
+buf.detach()
+buf.read(0, 64)
+"""
+    assert rules_of(lint_source(source, "fixture.py")) == ["EMU005"]
+
+
+# -------------------------------------------------------------------- markdown
+def test_markdown_snippets_are_linted(tmp_path):
+    page = tmp_path / "page.md"
+    page.write_text("""# Title
+
+```python
+buf = sess.attach(seg, host=0)
+buf.detach()
+buf.read(0, 64)
+```
+
+```bash
+emucxl_not_python_so_ignored()
+```
+""")
+    findings = lint_emucxl.lint_file(page)
+    assert rules_of(findings) == ["EMU005"]
+    assert findings[0].line == 6                 # line number in the .md file
+
+
+def test_markdown_blocks_share_one_namespace(tmp_path):
+    """A fence in a later snippet publishes an earlier snippet's write —
+    the page lints as one module, like check_docs executes it."""
+    page = tmp_path / "page.md"
+    page.write_text("""```python
+seg = sess.share(1 << 20, host=0, consistency="release")
+w = sess.attach(seg, host=0)
+w.write(payload)
+```
+
+prose in between
+
+```python
+w.fence()
+w.detach()
+```
+""")
+    assert lint_emucxl.lint_file(page) == []
+
+
+# -------------------------------------------------------------------- the repo
+def test_v1_shim_is_exempt_but_only_the_shim():
+    shim = REPO_ROOT / "src" / "repro" / "core" / "emucxl.py"
+    assert lint_emucxl.lint_file(shim) == []
+    # the identical source elsewhere is NOT exempt
+    findings = lint_source(shim.read_text(), "src/other.py")
+    assert "EMU001" in rules_of(findings)
+
+
+def test_repo_lints_clean():
+    """The enforcement gate CI runs: the default tree has zero findings."""
+    assert lint_emucxl.main([]) == 0

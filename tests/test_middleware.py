@@ -81,10 +81,8 @@ def _policy_experiment(policy, hot_frac, n_objects=200, local_cap=60,
     g = np.random.default_rng(seed)
     hot = max(int(hot_frac * n_objects), 1)
     for _ in range(n_gets):
-        if g.random() < 0.9:
-            i = int(g.integers(0, hot))
-        else:
-            i = int(g.integers(0, n_objects))
+        i = int(g.integers(0, hot)) if g.random() < 0.9 \
+            else int(g.integers(0, n_objects))
         kv.get(f"k{i}")
     pct = kv.stats.percent_local
     lib.exit()

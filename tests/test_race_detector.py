@@ -1,0 +1,399 @@
+"""Litmus suite for the happens-before race detector (core/race.py).
+
+Classic weak-memory litmus shapes, each run against the detector's verdict:
+message passing with and without its fence→acquire edge, store buffering
+(write-write), independent streams, and page-granularity false sharing —
+on both the synchronous API and async batches. Plus the enablement contract
+(``race_detect=`` beats ``EMUCXL_CHECK``), warn-mode recording, strict-mode
+rollback, and the zero-cost guarantee when detection is off or clean.
+
+The property at the end is the detector's soundness-in-practice check: any
+properly fenced+acquired interleaving is race-free under ``"raise"`` *and*
+reads back exactly the fenced writer's bytes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    AcquireOp,
+    CXLSession,
+    Fabric,
+    FenceOp,
+    RaceError,
+    ReadOp,
+    WriteOp,
+)
+from repro.core.emucxl import EmuCXLError
+
+NUM_HOSTS = 3
+PAGE = 4096
+PAGES = 4
+
+
+def make_sess(race="raise", consistency="release", num_hosts=NUM_HOSTS):
+    fabric = Fabric(num_hosts=num_hosts, pool_ports=2)
+    sess = CXLSession(1 << 22, 1 << 24, num_hosts=num_hosts, fabric=fabric)
+    seg = sess.share(PAGES * PAGE, host=0, page_bytes=PAGE,
+                     consistency=consistency, race_detect=race)
+    bufs = [sess.attach(seg, host=h) for h in range(num_hosts)]
+    return sess, seg, bufs
+
+
+PAYLOAD = np.full(32, 7, np.uint8)
+
+
+# ------------------------------------------------------------ message passing
+def test_mp_with_fence_and_acquire_is_race_free():
+    sess, seg, bufs = make_sess("raise")
+    try:
+        bufs[0].write(PAYLOAD)
+        bufs[0].fence()
+        bufs[1].acquire()
+        np.testing.assert_array_equal(bufs[1].read(0, 32), PAYLOAD)
+        assert seg.stats.races == 0
+    finally:
+        sess.close()
+
+
+def test_mp_missing_acquire_is_a_read_write_race():
+    sess, seg, bufs = make_sess("raise")
+    try:
+        bufs[0].write(PAYLOAD)
+        bufs[0].fence()                        # released, but never acquired
+        with pytest.raises(RaceError, match="read-write"):
+            bufs[1].read(0, 32)
+    finally:
+        sess.close()
+
+
+def test_mp_missing_fence_is_a_race_despite_acquire():
+    sess, seg, bufs = make_sess("raise")
+    try:
+        bufs[0].write(PAYLOAD)                 # buffered, never released
+        bufs[1].acquire()                      # joins nothing: no release yet
+        with pytest.raises(RaceError, match="fence"):
+            bufs[1].read(0, 32)
+    finally:
+        sess.close()
+
+
+def test_mp_async_batch_classifies_the_same():
+    sess, seg, bufs = make_sess("raise")
+    try:
+        t = sess.submit(
+            WriteOp(bufs[0], PAYLOAD),
+            FenceOp(bufs[0]),
+            AcquireOp(bufs[1]),
+            ReadOp(bufs[1], 0, 32),
+        )
+        sess.flush()
+        np.testing.assert_array_equal(t[3].result(), PAYLOAD)
+        sess.submit(
+            WriteOp(bufs[0], PAYLOAD, offset=PAGE),
+            FenceOp(bufs[0]),
+            ReadOp(bufs[1], PAGE, 32),         # no acquire: flagged at plan
+        )
+        with pytest.raises(RaceError, match="read-write"):
+            sess.flush()
+    finally:
+        sess.close()
+
+
+# ------------------------------------------------------------ store buffering
+def test_store_buffering_is_a_write_write_race():
+    sess, seg, bufs = make_sess("raise")
+    try:
+        bufs[0].write(PAYLOAD)
+        with pytest.raises(RaceError, match="write-write"):
+            bufs[1].write(np.full(32, 9, np.uint8))
+    finally:
+        sess.close()
+
+
+def test_store_buffering_async():
+    sess, seg, bufs = make_sess("raise")
+    try:
+        sess.submit(WriteOp(bufs[0], PAYLOAD),
+                    WriteOp(bufs[1], PAYLOAD, offset=8))
+        with pytest.raises(RaceError, match="write-write"):
+            sess.flush()
+    finally:
+        sess.close()
+
+
+# -------------------------------------------------------- independent streams
+def test_independent_streams_never_conflict():
+    """Each host owns its page; fences publish; a late acquirer reads all."""
+    sess, seg, bufs = make_sess("raise")
+    try:
+        for h in range(2):
+            bufs[h].write(np.full(32, h + 1, np.uint8), offset=h * PAGE)
+            bufs[h].fence()
+        bufs[2].acquire()
+        for h in range(2):
+            np.testing.assert_array_equal(
+                bufs[2].read(h * PAGE, 32), np.full(32, h + 1, np.uint8))
+        assert seg.stats.races == 0
+    finally:
+        sess.close()
+
+
+def test_own_host_rereads_and_rewrites_are_always_ordered():
+    sess, seg, bufs = make_sess("raise")
+    try:
+        bufs[0].write(PAYLOAD)
+        np.testing.assert_array_equal(bufs[0].read(0, 32), PAYLOAD)
+        bufs[0].write(np.full(32, 8, np.uint8))        # rewrite, still pending
+        bufs[0].fence()
+        assert seg.stats.races == 0
+    finally:
+        sess.close()
+
+
+# ------------------------------------------------------ same-page false sharing
+def test_false_sharing_flagged_at_page_granularity():
+    """Disjoint byte ranges of one page still conflict: detection is at the
+    directory's granularity, which is exactly what false sharing costs."""
+    sess, seg, bufs = make_sess("raise")
+    try:
+        bufs[0].write(PAYLOAD, offset=0)               # bytes [0, 32)
+        bufs[0].fence()
+        with pytest.raises(RaceError, match="write-write"):
+            bufs[1].write(PAYLOAD, offset=64)          # bytes [64, 96): races
+    finally:
+        sess.close()
+
+
+def test_false_sharing_cured_by_the_edge():
+    sess, seg, bufs = make_sess("raise")
+    try:
+        bufs[0].write(PAYLOAD, offset=0)
+        bufs[0].fence()
+        bufs[1].acquire()                              # the edge exists now
+        bufs[1].write(PAYLOAD, offset=64)              # ordered: no race
+        bufs[1].fence()
+        assert seg.stats.races == 0
+    finally:
+        sess.close()
+
+
+def test_detach_is_a_release_point():
+    """Detaching drains the WC buffer, so it carries the same release edge a
+    fence does — an acquiring peer is ordered after it."""
+    sess, seg, bufs = make_sess("raise")
+    try:
+        bufs[0].write(PAYLOAD)
+        bufs[0].detach()
+        bufs[1].acquire()
+        np.testing.assert_array_equal(bufs[1].read(0, 32), PAYLOAD)
+    finally:
+        sess.close()
+
+
+# ------------------------------------------------------------------- warn mode
+def test_warn_mode_records_instead_of_raising():
+    sess, seg, bufs = make_sess("warn")
+    try:
+        bufs[0].write(PAYLOAD)
+        bufs[0].fence()
+        bufs[1].read(0, 32)                            # race: recorded, not fatal
+        assert seg.stats.races == 1
+        races = sess.coherence_stats()["races"]
+        assert len(races) == 1
+        assert races[0]["kind"] == "read-write"
+        assert races[0]["page"] == 0
+        assert "acquire" in races[0]["missing"]
+        # both sites are named, so the report is actionable
+        assert "host 0" in races[0]["prev_site"]
+        assert "host 1" in races[0]["curr_site"]
+    finally:
+        sess.close()
+
+
+def test_warn_mode_async_batch_keeps_going():
+    sess, seg, bufs = make_sess("warn")
+    try:
+        t = sess.submit(
+            WriteOp(bufs[0], PAYLOAD),
+            FenceOp(bufs[0]),
+            ReadOp(bufs[1], 0, 32),                    # race: recorded
+        )
+        sess.flush()                                   # batch still completes
+        np.testing.assert_array_equal(t[2].result(), PAYLOAD)
+        assert seg.stats.races == 1
+    finally:
+        sess.close()
+
+
+# ------------------------------------------------------------------ enablement
+def test_env_token_arms_strict_mode(monkeypatch):
+    monkeypatch.setenv("EMUCXL_CHECK", "race")
+    sess, seg, bufs = make_sess(None)                  # defer to environment
+    try:
+        assert seg.race_detect == "raise"
+        bufs[0].write(PAYLOAD)
+        with pytest.raises(RaceError):
+            bufs[1].write(PAYLOAD)
+    finally:
+        sess.close()
+
+
+def test_env_token_is_comma_separated_and_case_insensitive(monkeypatch):
+    monkeypatch.setenv("EMUCXL_CHECK", "dir, RACE")
+    sess, seg, _ = make_sess(None)
+    try:
+        assert seg.race_detect == "raise"
+    finally:
+        sess.close()
+
+
+def test_plain_debug_flag_does_not_arm_the_detector(monkeypatch):
+    monkeypatch.setenv("EMUCXL_CHECK", "1")            # directory checks only
+    sess, seg, _ = make_sess(None)
+    try:
+        assert seg.race_detect == "off"
+        assert seg.detector is None
+    finally:
+        sess.close()
+
+
+def test_explicit_off_beats_the_environment(monkeypatch):
+    monkeypatch.setenv("EMUCXL_CHECK", "race")
+    sess, seg, bufs = make_sess("off")
+    try:
+        assert seg.detector is None
+        bufs[0].write(PAYLOAD)
+        bufs[1].write(PAYLOAD)                         # racy, but opted out
+        assert seg.stats.races == 0
+    finally:
+        sess.close()
+
+
+def test_unknown_mode_is_rejected_before_anything_is_charged():
+    sess = CXLSession(1 << 22, 1 << 24, num_hosts=2,
+                      fabric=Fabric(num_hosts=2, pool_ports=2))
+    try:
+        with pytest.raises(EmuCXLError, match="race_detect"):
+            sess.share(PAGE, host=0, page_bytes=PAGE,
+                       consistency="release", race_detect="banana")
+        assert sess.pool_stats()["used"] == 0
+    finally:
+        sess.close()
+
+
+def test_eager_segments_never_carry_a_detector():
+    """Eager writes are sequentially visible per page — there is no missing
+    edge to detect, and acquire stays a free no-op."""
+    sess, seg, bufs = make_sess("raise", consistency="eager")
+    try:
+        assert seg.detector is None
+        assert seg.race_detect == "off"
+        bufs[0].write(PAYLOAD)
+        bufs[1].write(PAYLOAD)                         # eager: no race model
+        assert bufs[1].acquire() == 0.0
+    finally:
+        sess.close()
+
+
+# ---------------------------------------------------------------- transactions
+def test_strict_race_mid_batch_rolls_back_clocks_and_stats():
+    sess, seg, bufs = make_sess("raise")
+    try:
+        bufs[0].write(PAYLOAD)
+        bufs[0].fence()
+        det_pre = seg.detector.snapshot()
+        stats_pre = seg.stats.as_dict()
+        dir_pre = seg.directory.snapshot()
+        sess.submit(
+            WriteOp(bufs[0], PAYLOAD, offset=PAGE),    # clean: stamps page 1
+            FenceOp(bufs[0]),                          # clean: bumps the clock
+            WriteOp(bufs[1], PAYLOAD),                 # race: aborts the batch
+        )
+        with pytest.raises(RaceError, match="write-write"):
+            sess.flush()
+        assert seg.detector.snapshot() == det_pre      # epochs + clocks unwound
+        assert seg.stats.as_dict() == stats_pre
+        assert seg.directory.snapshot() == dir_pre
+        assert sess.fabric.idle()
+        # the clean prefix replays fine once the racy op is fixed
+        sess.submit(
+            WriteOp(bufs[0], PAYLOAD, offset=PAGE),
+            FenceOp(bufs[0]),
+            AcquireOp(bufs[1]),
+            WriteOp(bufs[1], PAYLOAD),
+        )
+        sess.flush()
+        assert seg.stats.races == 0
+    finally:
+        sess.close()
+
+
+def test_detection_is_free_when_clean_and_absent_when_off():
+    """A properly synchronized program pays nothing for the detector: same
+    protocol stats, same modeled time, same fabric traffic, off or strict."""
+    def run(race):
+        sess, seg, bufs = make_sess(race)
+        try:
+            bufs[0].write(PAYLOAD)
+            bufs[0].fence()
+            bufs[1].acquire()
+            bufs[1].read(0, 32)
+            t = sess.submit(
+                WriteOp(bufs[0], PAYLOAD, offset=PAGE),
+                FenceOp(bufs[0]),
+                AcquireOp(bufs[1]),
+                ReadOp(bufs[1], PAGE, 32),
+            )
+            sess.flush()
+            stats = seg.stats.as_dict()
+            stats.pop("races")
+            return stats, dict(sess.modeled_time), sess.fabric_stats(), \
+                [x.modeled_time for x in t]
+        finally:
+            sess.close()
+
+    assert run("off") == run("raise")
+
+
+# -------------------------------------------------------------------- property
+_ROUND = st.tuples(st.integers(0, PAGES - 1), st.integers(1, 250))
+
+
+@pytest.mark.parametrize("use_async", [False, True], ids=["sync", "async"])
+@settings(max_examples=20)
+@given(rounds=st.lists(_ROUND, min_size=1, max_size=6))
+def test_race_free_interleavings_read_the_fenced_bytes(use_async, rounds):
+    """Soundness in practice: every properly fenced+acquired interleaving is
+    (a) accepted by strict mode and (b) reads back exactly the writer's
+    published bytes — the detector flags only what the model cannot order."""
+    sess, seg, bufs = make_sess("raise")
+    try:
+        expected = {}
+        for page, val in rounds:
+            payload = np.full(32, val, np.uint8)
+            if use_async:
+                t = sess.submit(
+                    WriteOp(bufs[0], payload, offset=page * PAGE),
+                    FenceOp(bufs[0]),
+                    AcquireOp(bufs[1]),
+                    ReadOp(bufs[1], page * PAGE, 32),
+                )
+                sess.flush()
+                got = t[3].result()
+            else:
+                bufs[0].write(payload, offset=page * PAGE)
+                bufs[0].fence()
+                bufs[1].acquire()
+                got = bufs[1].read(page * PAGE, 32)
+            np.testing.assert_array_equal(got, payload)
+            expected[page] = payload
+        bufs[2].acquire()                              # one join orders it all
+        for page, payload in expected.items():
+            np.testing.assert_array_equal(bufs[2].read(page * PAGE, 32),
+                                          payload)
+        assert seg.stats.races == 0
+    finally:
+        sess.close()

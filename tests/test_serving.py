@@ -137,7 +137,7 @@ def test_engine_imports_shared_prefix(model):
         # a long prompt whose tokens DIFFER from the prefix must prefill
         # normally — importing would attend to the wrong KV
         other = [(t + 1) % cfg.vocab_size for t in prefix]
-        engines[1].submit(other + [1, 2], max_new_tokens=2)
+        engines[1].submit([*other, 1, 2], max_new_tokens=2)
         engines[1].run(max_steps=50)
         assert engines[1].tier_stats()["prefix_imports"] == 1  # unchanged
         # requests began decoding after the prefix (import replaced prefill)

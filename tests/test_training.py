@@ -49,7 +49,7 @@ def test_grad_accum_matches_full_batch():
     p1, _, m1 = jax.jit(make_train_step(cfg, opts, hp, grad_accum=1))(params, opt, batch)
     p4, _, m4 = jax.jit(make_train_step(cfg, opts, hp, grad_accum=4))(params, opt, batch)
     diffs = [float(jnp.abs(a - b).max()) for a, b in
-             zip(jax.tree.leaves(p1), jax.tree.leaves(p4))]
+             zip(jax.tree.leaves(p1), jax.tree.leaves(p4), strict=True)]
     assert max(diffs) < 5e-5
     assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-3
 
@@ -78,7 +78,7 @@ def test_checkpoint_restart_bitwise(tmp_path):
     for i in range(3, 6):
         p2, o2, _ = step(p2, o2, batches(i))
 
-    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p2)):
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p2), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -5,6 +5,8 @@ The facade must behave exactly as the paper-fidelity v1 surface did (a replay of
 underneath upgrades silent address reuse into clear errors.
 """
 
+import contextlib
+
 import numpy as np
 import pytest
 
@@ -21,10 +23,8 @@ from repro.core import (
 def v1():
     emucxl_init(local_capacity=1 << 24, remote_capacity=1 << 26)
     yield
-    try:
+    with contextlib.suppress(EmuCXLError):
         emucxl_exit()
-    except EmuCXLError:
-        pass
 
 
 # ------------------------------------------------------------------ quickstart replay

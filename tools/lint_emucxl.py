@@ -1,0 +1,404 @@
+#!/usr/bin/env python
+"""Static API linter for the emucxl surface: catch misuse before it runs.
+
+The race detector (``core/race.py``) catches unsynchronized sharing
+*dynamically* — this is its static sibling, an AST pass over ``src/``,
+``examples/``, ``benchmarks/``, and the executable ``\\`\\`\\`python`` snippets in
+``README.md`` / ``docs/**/*.md``. Run from the repo root (CI's lint job does)::
+
+    python tools/lint_emucxl.py            # lint the default tree
+    python tools/lint_emucxl.py FILE...    # lint specific files (.py or .md)
+
+Rules (each is a heuristic over one scope — a module body or one function —
+tuned to have zero findings on this repo's intended idioms):
+
+=======  =================  ====================================================
+ID       pragma slug        flags
+=======  =================  ====================================================
+EMU001   v1                 raw ``emucxl_*`` calls outside the v1 shim — new
+                            code should use the ``CXLSession`` surface
+EMU002   release-fence      a ``.write()``/``.memset()``/``WriteOp``/``MemsetOp``
+                            on a buffer attached to a ``consistency="release"``
+                            segment, with no ``fence()``/``FenceOp``/``detach()``
+                            on that buffer anywhere in the same scope — the
+                            bytes would never be published
+EMU003   acquire-eager      ``.acquire()``/``AcquireOp`` on a buffer of an
+                            explicitly ``consistency="eager"`` segment — eager
+                            mode has no release edge to wait for
+EMU004   journal            ``._set``/``._bump``/``._wc_*`` called with a
+                            missing or literal-``None`` journal while planning —
+                            an unjournaled mutation survives batch rollback
+EMU005   use-after-detach   a data-plane call on a buffer name after its
+                            ``.detach()``/``.free()`` in straight-line code,
+                            with no rebind in between
+=======  =================  ====================================================
+
+Suppression: a trailing ``# emucxl: allow-<slug>`` comment silences that line;
+a standalone ``# emucxl: allow-<slug>`` comment line silences the rule for the
+whole file. Slugs may be comma- or space-separated.
+
+Exit status is the number of findings capped at 1 — non-zero means the tree
+is not clean. ``tests/test_lint.py`` wires the self-lint into tier-1.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# The v1 shim defines (and may self-call) the Table II functions; everything
+# else should go through sessions. Tests exercise v1 on purpose and are not
+# part of the linted tree.
+V1_SHIM = "src/repro/core/emucxl.py"
+
+DEFAULT_TARGETS = ["src", "examples", "benchmarks", "README.md", "docs"]
+
+RULES = {
+    "EMU001": "v1",
+    "EMU002": "release-fence",
+    "EMU003": "acquire-eager",
+    "EMU004": "journal",
+    "EMU005": "use-after-detach",
+}
+
+WRITE_METHODS = {"write", "memset"}
+WRITE_OPS = {"WriteOp", "MemsetOp"}
+RELEASE_METHODS = {"fence", "detach"}
+DATA_PLANE = {"read", "write", "memset", "fence", "acquire", "migrate",
+              "resize"}
+JOURNALED = {"_set", "_bump", "_wc_add", "_wc_remove", "_wc_touch"}
+
+PRAGMA_RE = re.compile(r"#\s*emucxl:\s*(.+?)\s*$")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} "
+                f"[{RULES[self.rule]}] {self.message}")
+
+
+# ------------------------------------------------------------------- pragmas
+def collect_pragmas(lines: List[str]) -> Tuple[Set[str], Dict[int, Set[str]]]:
+    """File-wide and per-line ``allow-<slug>`` suppressions."""
+    file_allows: Set[str] = set()
+    line_allows: Dict[int, Set[str]] = {}
+    for lineno, line in enumerate(lines, start=1):
+        m = PRAGMA_RE.search(line)
+        if m is None:
+            continue
+        slugs = {tok[len("allow-"):]
+                 for tok in re.split(r"[,\s]+", m.group(1))
+                 if tok.startswith("allow-")}
+        if not slugs:
+            continue
+        if line.lstrip().startswith("#"):
+            file_allows |= slugs
+        else:
+            line_allows.setdefault(lineno, set()).update(slugs)
+    return file_allows, line_allows
+
+
+# --------------------------------------------------------------------- scopes
+SCOPE_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def iter_scopes(tree: ast.Module) -> Iterator[ast.AST]:
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, SCOPE_NODES):
+            yield node
+
+
+def scope_nodes(scope: ast.AST) -> Iterator[ast.AST]:
+    """Walk one scope without descending into nested function bodies."""
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, SCOPE_NODES):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _call_name(call: ast.Call) -> Optional[str]:
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    return None
+
+
+def _method(call: ast.Call) -> Optional[Tuple[str, str]]:
+    """(receiver name, method name) for simple ``name.method(...)`` calls."""
+    f = call.func
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+        return f.value.id, f.attr
+    return None
+
+
+def _kw_str(call: ast.Call, name: str) -> Optional[str]:
+    for kw in call.keywords:
+        if kw.arg == name and isinstance(kw.value, ast.Constant) \
+                and isinstance(kw.value.value, str):
+            return kw.value.value
+    return None
+
+
+def _first_arg_name(call: ast.Call) -> Optional[str]:
+    if call.args and isinstance(call.args[0], ast.Name):
+        return call.args[0].id
+    return None
+
+
+# -------------------------------------------------------------------- analysis
+def _latest(assigns: Dict[str, List[Tuple[int, str]]], name: str,
+            line: int) -> Optional[str]:
+    """Value of the most recent assignment to ``name`` at or before ``line``
+    — straight-line flow sensitivity, enough for rebinding idioms."""
+    best = None
+    for ln, value in assigns.get(name, ()):
+        if ln <= line and (best is None or ln > best[0]):
+            best = (ln, value)
+    return best[1] if best else None
+
+
+def analyze_scope(scope: ast.AST, path: str,
+                  is_shim: bool) -> List[Finding]:
+    seg_assigns: Dict[str, List[Tuple[int, str]]] = {}  # seg -> consistency
+    buf_assigns: Dict[str, List[Tuple[int, str]]] = {}  # buffer -> seg name
+    rebinds: Dict[str, List[int]] = {}     # name -> assignment lines
+    writes: List[Tuple[int, str]] = []     # (line, buffer name)
+    acquires: List[Tuple[int, str]] = []
+    releases: Set[str] = set()             # buffers fenced/detached in scope
+    detaches: List[Tuple[int, str]] = []
+    uses: List[Tuple[int, str, str]] = []  # (line, name, method)
+    findings: List[Finding] = []
+
+    def record_bind(target: ast.expr, value: ast.expr, lineno: int) -> None:
+        if isinstance(target, ast.Tuple) and isinstance(value, ast.Tuple) \
+                and len(target.elts) == len(value.elts):
+            for t, v in zip(target.elts, value.elts, strict=True):
+                record_bind(t, v, lineno)
+            return
+        if isinstance(target, ast.Tuple):
+            for t in target.elts:           # unpacking an opaque value
+                record_bind(t, ast.Constant(value=None), lineno)
+            return
+        if not isinstance(target, ast.Name):
+            return
+        rebinds.setdefault(target.id, []).append(lineno)
+        m = _method(value) if isinstance(value, ast.Call) else None
+        if m is not None and m[1] == "share":
+            seg_assigns.setdefault(target.id, []).append(
+                (lineno, _kw_str(value, "consistency") or "eager"))
+            buf_assigns.setdefault(target.id, []).append((lineno, None))
+        elif m is not None and m[1] == "attach":
+            buf_assigns.setdefault(target.id, []).append(
+                (lineno, _first_arg_name(value)))
+            seg_assigns.setdefault(target.id, []).append((lineno, None))
+        else:
+            # rebinding to anything else forgets what the name used to be
+            seg_assigns.setdefault(target.id, []).append((lineno, None))
+            buf_assigns.setdefault(target.id, []).append((lineno, None))
+
+    for node in scope_nodes(scope):
+        if isinstance(node, ast.Assign):
+            for target in node.targets:
+                record_bind(target, node.value, node.lineno)
+
+        if not isinstance(node, ast.Call):
+            continue
+
+        name = _call_name(node)
+        if name is not None:
+            if name.startswith("emucxl_") and not is_shim:
+                findings.append(Finding(
+                    path, node.lineno, "EMU001",
+                    f"raw v1 call {name}() — use the CXLSession surface "
+                    f"(or mark paper-fidelity code with a pragma)"))
+            elif name in WRITE_OPS:
+                buf = _first_arg_name(node)
+                if buf is not None:
+                    writes.append((node.lineno, buf))
+            elif name == "FenceOp":
+                buf = _first_arg_name(node)
+                if buf is not None:
+                    releases.add(buf)
+            elif name == "AcquireOp":
+                buf = _first_arg_name(node)
+                if buf is not None:
+                    acquires.append((node.lineno, buf))
+
+        m = _method(node)
+        if m is None:
+            continue
+        recv, meth = m
+        if meth in DATA_PLANE:
+            uses.append((node.lineno, recv, meth))
+        if meth in WRITE_METHODS:
+            writes.append((node.lineno, recv))
+        elif meth == "acquire":
+            acquires.append((node.lineno, recv))
+        elif meth in RELEASE_METHODS:
+            releases.add(recv)
+            # zero-arg only: `buf.detach()` kills the handle, while
+            # `sess.detach(buf)` / `lib.free(addr)` are session-level calls
+            # whose receiver stays alive
+            if meth == "detach" and not node.args:
+                detaches.append((node.lineno, recv))
+        elif meth == "free" and not node.args:
+            detaches.append((node.lineno, recv))
+        elif meth in JOURNALED:
+            bad = not node.args and not any(kw.arg == "journal"
+                                            for kw in node.keywords)
+            first = node.args[0] if node.args else None
+            if isinstance(first, ast.Constant) and first.value is None:
+                bad = True
+            for kw in node.keywords:
+                if kw.arg == "journal" and isinstance(kw.value, ast.Constant) \
+                        and kw.value.value is None:
+                    bad = True
+            if bad:
+                findings.append(Finding(
+                    path, node.lineno, "EMU004",
+                    f"{meth}() called without a journal — this mutation "
+                    f"would survive a batch rollback"))
+
+    def consistency_at(buf: str, line: int) -> Optional[str]:
+        seg = _latest(buf_assigns, buf, line)
+        if seg is None:
+            return None
+        return _latest(seg_assigns, seg, line)
+
+    for line, buf in writes:
+        if consistency_at(buf, line) != "release":
+            continue
+        if buf in releases:
+            continue
+        findings.append(Finding(
+            path, line, "EMU002",
+            f"write to release-consistency buffer '{buf}' with no "
+            f"fence()/detach() on it anywhere in this scope — the bytes "
+            f"are never published"))
+
+    for line, buf in acquires:
+        if consistency_at(buf, line) == "eager":
+            findings.append(Finding(
+                path, line, "EMU003",
+                f"acquire() on buffer '{buf}' of an eager segment — eager "
+                f"mode has no release edge to synchronize with"))
+
+    for dline, buf in detaches:
+        rebound_after = [ln for ln in rebinds.get(buf, []) if ln > dline]
+        cutoff = min(rebound_after) if rebound_after else None
+        for uline, name, meth in uses:
+            if name != buf or uline <= dline:
+                continue
+            if cutoff is not None and uline >= cutoff:
+                continue
+            findings.append(Finding(
+                path, uline, "EMU005",
+                f"'{buf}.{meth}()' after '{buf}.detach()/free()' on line "
+                f"{dline} — the handle is stale"))
+
+    return findings
+
+
+# ----------------------------------------------------------------------- files
+def lint_source(source: str, path: str, *,
+                is_shim: bool = False) -> List[Finding]:
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as exc:
+        return [Finding(path, exc.lineno or 1, "EMU001",
+                        f"could not parse: {exc.msg}")]
+    findings: List[Finding] = []
+    for scope in iter_scopes(tree):
+        findings.extend(analyze_scope(scope, path, is_shim))
+
+    file_allows, line_allows = collect_pragmas(source.splitlines())
+    kept = [f for f in findings
+            if RULES[f.rule] not in file_allows
+            and RULES[f.rule] not in line_allows.get(f.line, set())]
+    return sorted(kept, key=lambda f: (f.line, f.rule))
+
+
+def markdown_as_module(text: str) -> str:
+    """Replace every non-snippet line with a blank one, so the page's
+    ```python blocks form one module whose line numbers match the page.
+    Blocks on one page share a namespace when executed (check_docs.py), so
+    linting them together is the faithful model — a fence in a later snippet
+    legitimately publishes an earlier snippet's write."""
+    lines = text.splitlines()
+    out = [""] * len(lines)
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m and m.group(1) == "python":
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                out[i] = lines[i]
+                i += 1
+        i += 1
+    return "\n".join(out)
+
+
+def lint_file(path: Path, root: Path = REPO_ROOT) -> List[Finding]:
+    rel = path.resolve().relative_to(root.resolve()).as_posix() \
+        if path.resolve().is_relative_to(root.resolve()) else str(path)
+    text = path.read_text()
+    if path.suffix == ".md":
+        return lint_source(markdown_as_module(text), rel)
+    return lint_source(text, rel, is_shim=(rel == V1_SHIM))
+
+
+def expand_targets(targets: List[str], root: Path) -> List[Path]:
+    files: List[Path] = []
+    for t in targets:
+        p = (root / t) if not Path(t).is_absolute() else Path(t)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.is_file():
+            files.append(p)
+        else:
+            print(f"warning: no such target {t}", file=sys.stderr)
+    return files
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        description="emucxl API linter (see module docstring for the rules)")
+    parser.add_argument("targets", nargs="*", default=DEFAULT_TARGETS,
+                        help="files or directories (default: the repo tree)")
+    parser.add_argument("--root", default=str(REPO_ROOT),
+                        help="repo root for default targets and shim matching")
+    args = parser.parse_args(argv)
+    root = Path(args.root)
+
+    findings: List[Finding] = []
+    for f in expand_targets(args.targets, root):
+        findings.extend(lint_file(f, root))
+
+    for finding in findings:
+        print(finding)
+    if findings:
+        print(f"{len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("emucxl lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
