@@ -10,90 +10,73 @@ Two API generations share one modeled backend:
 
 Plus the middleware the paper demonstrates (KV store, slab allocator,
 direct-access queue) and the training/serving integration helpers (offload).
+
+Exports resolve lazily (PEP 562): ``from repro.core import CXLSession`` pulls
+in the numpy/jax-backed modules, but ``import repro.core.mc`` (the stdlib-only
+model checker) or ``import repro.core.trace`` does not — the model-checking CI
+job runs on a bare interpreter with no scientific stack installed.
 """
 
-from repro.core.api import CXLSession, as_session
-from repro.core.emucxl import (
-    LOCAL_MEMORY,
-    REMOTE_MEMORY,
-    Allocation,
-    EmuCXL,
-    EmuCXLError,
-    OutOfTierMemory,
-    QuotaExceeded,
-    default_instance,
-    default_session,
-    emucxl_acquire,
-    emucxl_alloc,
-    emucxl_exit,
-    emucxl_fabric_stats,
-    emucxl_fence,
-    emucxl_free,
-    emucxl_get_host,
-    emucxl_get_numa_node,
-    emucxl_get_size,
-    emucxl_init,
-    emucxl_is_local,
-    emucxl_memcpy,
-    emucxl_memmove,
-    emucxl_memset,
-    emucxl_migrate,
-    emucxl_migrate_batch,
-    emucxl_pool_stats,
-    emucxl_read,
-    emucxl_resize,
-    emucxl_stats,
-    emucxl_write,
-)
-from repro.core.engine import EngineError, Job, SimulationEngine
-from repro.core.fabric import Fabric, FabricError, Link, Transfer
-from repro.core.handle import Buffer, HandleTable, StaleHandleError
-from repro.core.hw import V5E, HardwareModel
-from repro.core.kvstore import KVStore
-from repro.core.policy import (
-    AccessStats,
-    CongestionAwarePlacement,
-    CongestionAwarePromotion,
-    Policy1,
-    Policy2,
-    StaticPlacement,
-    Tier,
-    make_policy,
-)
-from repro.core.pool import LRUTier, SharedPool
-from repro.core.queue import (
-    AcquireOp,
-    EmuQueue,
-    FenceOp,
-    MemcpyOp,
-    MemsetOp,
-    MigrateOp,
-    OpQueue,
-    ReadOp,
-    Ticket,
-    WriteOp,
-)
-from repro.core.race import RaceDetector, RaceError, RaceReport
-from repro.core.slab import SlabAllocator, SlabPtr
+import importlib
+from typing import Dict
 
-__all__ = [
-    "LOCAL_MEMORY", "REMOTE_MEMORY", "Allocation", "EmuCXL", "EmuCXLError",
-    "OutOfTierMemory", "QuotaExceeded", "default_instance", "default_session",
-    "emucxl_acquire", "emucxl_alloc",
-    "emucxl_exit", "emucxl_fabric_stats", "emucxl_fence", "emucxl_free",
-    "emucxl_get_host",
-    "emucxl_get_numa_node", "emucxl_get_size", "emucxl_init", "emucxl_is_local",
-    "emucxl_memcpy", "emucxl_memmove", "emucxl_memset", "emucxl_migrate",
-    "emucxl_migrate_batch", "emucxl_pool_stats", "emucxl_read", "emucxl_resize",
-    "emucxl_stats", "emucxl_write", "Fabric", "FabricError", "Link", "Transfer",
-    "SimulationEngine", "Job", "EngineError",
-    "V5E", "HardwareModel", "KVStore", "AccessStats", "CongestionAwarePlacement",
-    "CongestionAwarePromotion", "Policy1", "Policy2", "StaticPlacement", "Tier",
-    "make_policy", "LRUTier", "SharedPool", "EmuQueue", "SlabAllocator", "SlabPtr",
+# Public name -> owning submodule. The attribute is imported (and cached in
+# this module's globals) on first access.
+_EXPORTS: Dict[str, str] = {
     # v2 session API
-    "CXLSession", "as_session", "Buffer", "HandleTable", "StaleHandleError",
-    "OpQueue", "Ticket", "ReadOp", "WriteOp", "MigrateOp", "MemcpyOp", "MemsetOp",
-    "FenceOp", "AcquireOp",
+    "CXLSession": "api", "as_session": "api",
+    "Buffer": "handle", "HandleTable": "handle", "StaleHandleError": "handle",
+    # v1 + backend
+    "LOCAL_MEMORY": "emucxl", "REMOTE_MEMORY": "emucxl",
+    "Allocation": "emucxl", "EmuCXL": "emucxl", "EmuCXLError": "emucxl",
+    "OutOfTierMemory": "emucxl", "QuotaExceeded": "emucxl",
+    "default_instance": "emucxl", "default_session": "emucxl",
+    "emucxl_acquire": "emucxl", "emucxl_alloc": "emucxl",
+    "emucxl_exit": "emucxl", "emucxl_fabric_stats": "emucxl",
+    "emucxl_fence": "emucxl", "emucxl_free": "emucxl",
+    "emucxl_get_host": "emucxl", "emucxl_get_numa_node": "emucxl",
+    "emucxl_get_size": "emucxl", "emucxl_init": "emucxl",
+    "emucxl_is_local": "emucxl", "emucxl_memcpy": "emucxl",
+    "emucxl_memmove": "emucxl", "emucxl_memset": "emucxl",
+    "emucxl_migrate": "emucxl", "emucxl_migrate_batch": "emucxl",
+    "emucxl_pool_stats": "emucxl", "emucxl_read": "emucxl",
+    "emucxl_resize": "emucxl", "emucxl_stats": "emucxl",
+    "emucxl_write": "emucxl",
+    # discrete-event engine + fabric
+    "SimulationEngine": "engine", "Job": "engine", "EngineError": "engine",
+    "Fabric": "fabric", "FabricError": "fabric", "Link": "fabric",
+    "Transfer": "fabric",
+    # hardware model + middleware
+    "V5E": "hw", "HardwareModel": "hw",
+    "KVStore": "kvstore",
+    "AccessStats": "policy", "CongestionAwarePlacement": "policy",
+    "CongestionAwarePromotion": "policy", "Policy1": "policy",
+    "Policy2": "policy", "StaticPlacement": "policy", "Tier": "policy",
+    "make_policy": "policy",
+    "LRUTier": "pool", "SharedPool": "pool",
+    "SlabAllocator": "slab", "SlabPtr": "slab",
+    # async op queue
+    "EmuQueue": "queue", "OpQueue": "queue", "Ticket": "queue",
+    "ReadOp": "queue", "WriteOp": "queue", "MigrateOp": "queue",
+    "MemcpyOp": "queue", "MemsetOp": "queue", "FenceOp": "queue",
+    "AcquireOp": "queue",
     # happens-before race detection (core/race.py)
-    "RaceDetector", "RaceError", "RaceReport",
-]
+    "RaceDetector": "race", "RaceError": "race", "RaceReport": "race",
+    # linearized event traces (core/trace.py, stdlib-only)
+    "TraceEvent": "trace", "TraceRecorder": "trace",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    modname = _EXPORTS.get(name)
+    if modname is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(importlib.import_module(f"{__name__}.{modname}"), name)
+    globals()[name] = value     # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

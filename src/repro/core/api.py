@@ -285,6 +285,11 @@ class CXLSession:
     def coherence_stats(self) -> Dict[str, object]:
         return self._lib.coherence_stats()
 
+    def attach_tracer(self, tracer) -> None:
+        """Record a linearized event trace (``repro.core.trace``) of every
+        coherence plan, flush, and engine job; ``None`` detaches."""
+        self._lib.attach_tracer(tracer)
+
     # ------------------------------------------------------------------ sync ops
     def memcpy(self, dst: Buffer, src: Buffer, size: int) -> Buffer:
         self._check_open()

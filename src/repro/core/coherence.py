@@ -82,6 +82,7 @@ import itertools
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 from .race import RaceDetector, resolve_mode
+from .trace import TraceRecorder
 
 MODIFIED = "M"
 EXCLUSIVE = "E"
@@ -168,7 +169,7 @@ class DirectoryJournal:
         # | ("race-w", seg, page, old_epoch) — last-writer epoch overwritten
         # | ("race-vc", seg, host, old_row) — a host's vector clock replaced
         # | ("race-rel", seg, host, old_row) — a host's release snapshot
-        # | ("race-log", seg, old_len) — warn-mode race reports appended
+        # | ("race-log", seg, old_len, old_counts) — warn-mode reports appended
         self._entries: List[Tuple] = []
 
     def __len__(self) -> int:
@@ -213,7 +214,9 @@ class DirectoryJournal:
             ("race-rel", seg, host, None if row is None else dict(row)))
 
     def record_race_log(self, seg: "SharedSegment") -> None:
-        self._entries.append(("race-log", seg, len(seg.detector.races)))
+        det = seg.detector
+        self._entries.append(
+            ("race-log", seg, len(det.races), dict(det.race_counts)))
 
     @staticmethod
     def _wc_insert_at(seg: "SharedSegment", host: int, page: int,
@@ -256,8 +259,8 @@ class DirectoryJournal:
                 _, _, host, old_row = entry
                 seg.detector.restore_rel(host, old_row)
             elif kind == "race-log":
-                _, _, old_len = entry
-                seg.detector.truncate_log(old_len)
+                _, _, old_len, old_counts = entry
+                seg.detector.restore_log(old_len, old_counts)
             else:  # "wc-" undoes a removal, "wc~" undoes a move-to-MRU: both
                 # re-place the page at its recorded LRU position.
                 _, _, host, page, pos = entry
@@ -306,6 +309,11 @@ class Directory:
     def snapshot(self) -> Dict[int, Dict[int, str]]:
         """Deep copy of all per-page holder maps (rollback-test oracle)."""
         return {p: dict(e) for p, e in self._state.items()}
+
+    def restore(self, snap: Dict[int, Dict[int, str]]) -> None:
+        """Overwrite every holder map from a ``snapshot()`` — state injection
+        for the model checker's protocol enumerator (core/mc.py)."""
+        self._state = {p: dict(e) for p, e in snap.items() if e}
 
     def check(self) -> None:
         for page, entry in self._state.items():
@@ -381,6 +389,11 @@ class SharedSegment:
         self.detector: Optional[RaceDetector] = (
             RaceDetector(self, race_mode)
             if consistency == RELEASE and race_mode != "off" else None)
+        # Optional linearized-event recorder (core/trace.py): when attached
+        # (EmuCXL.attach_tracer, or directly by the model checker), every
+        # planner event — reads with observed write-epochs, upgrades, fences,
+        # acquires — is appended to one totally-ordered trace.
+        self.tracer: Optional[TraceRecorder] = None
         self.attachments: Set[int] = set()     # attachment addresses
         self.attached_hosts: Dict[int, int] = {}   # host -> attachment count
         self.destroyed = False
@@ -449,6 +462,24 @@ class SharedSegment:
         the caller can charge the uncontended hw-constant fallback for it."""
         return fabric.pool_path(host, self.port) if fabric is not None else ()
 
+    # ------------------------------------------------------------------ tracing
+    def _observed_epoch(self, page: int):
+        """The write-epoch a read of `page` observes right now: the detector's
+        last-writer epoch when a detector runs (journal-consistent across
+        rollbacks), else the tracer's last recorded write event."""
+        if self.detector is not None:
+            epoch = self.detector.write_epoch.get(page)
+            return None if epoch is None else (epoch[0], epoch[1])
+        if self.tracer is not None:
+            return self.tracer.observed_epoch(self.sid, page)
+        return None
+
+    def _trace(self, kind: str, host: int, page: Optional[int] = None,
+               **detail) -> None:
+        if self.tracer is not None:
+            self.tracer.emit(kind, sid=self.sid, host=host, page=page,
+                             **detail)
+
     def plan_read(self, fabric, host: int, offset: int, n: int,
                   journal: Optional[DirectoryJournal] = None
                   ) -> List[CoherenceMsg]:
@@ -471,6 +502,8 @@ class SharedSegment:
             st = d.state(page, host)
             if st in (MODIFIED, EXCLUSIVE, SHARED):
                 self._bump(journal, "read_hits")
+                self._trace("read", host, page, outcome="hit",
+                            epoch=self._observed_epoch(page))
                 continue
             if page in self.wc.get(host, ()):
                 # Store forwarding: the host is reading bytes it has
@@ -478,8 +511,12 @@ class SharedSegment:
                 # the freshest copy, so there is nothing to fetch. (Without
                 # this, a host paid a fabric fetch for bytes it just wrote.)
                 self._bump(journal, "read_hits")
+                self._trace("read", host, page, outcome="store-forward",
+                            epoch=self._observed_epoch(page))
                 continue
             self._bump(journal, "read_misses")
+            self._trace("read", host, page, outcome="miss",
+                        epoch=self._observed_epoch(page))
             owner = d.owner(page)
             if owner is not None and owner != host:
                 # Dirty-read forward: the owner's cache has the only fresh copy;
@@ -515,6 +552,7 @@ class SharedSegment:
         st = d.state(page, host)
         if st == MODIFIED:
             return
+        self._trace("upgrade", host, page, from_state=st)
         if st == EXCLUSIVE:
             # Sole clean copy: silent upgrade — the E state's whole purpose.
             self._bump(journal, "e_upgrades")
@@ -565,9 +603,11 @@ class SharedSegment:
             st = d.state(page, host)
             if st == MODIFIED:
                 self._bump(journal, "write_hits")
+                self._trace("write", host, page, outcome="hit")
                 continue
             if st == EXCLUSIVE:
                 self._bump(journal, "write_hits")
+                self._trace("write", host, page, outcome="e-upgrade")
                 self._upgrade(fabric, host, page, journal, msgs)
                 continue
             if self.consistency == RELEASE:
@@ -575,6 +615,7 @@ class SharedSegment:
                 if pending is not None and page in pending:
                     self._wc_touch(journal, host, page)
                     self._bump(journal, "wc_writes")
+                    self._trace("write", host, page, outcome="wc-touch")
                     continue
                 if (self.wc_capacity is not None and pending is not None
                         and len(pending) >= self.wc_capacity):
@@ -582,10 +623,13 @@ class SharedSegment:
                     self._wc_remove(journal, host, victim)
                     self._bump(journal, "forced_drains")
                     self._bump(journal, "forced_drain_pages")
+                    self._trace("forced-drain", host, victim)
                     self._upgrade(fabric, host, victim, journal, msgs)
                 self._wc_add(journal, host, page)
                 self._bump(journal, "wc_writes")
+                self._trace("write", host, page, outcome="wc-buffered")
                 continue
+            self._trace("write", host, page, outcome="eager")
             self._upgrade(fabric, host, page, journal, msgs)
         return msgs
 
@@ -606,6 +650,8 @@ class SharedSegment:
             self.detector.on_release(host, journal)
         msgs: List[CoherenceMsg] = []
         pending = self.wc.get(host)
+        self._trace("fence", host,
+                    pending=tuple(pending) if pending else ())
         if not pending:
             return msgs
         for page in list(pending):
@@ -613,6 +659,18 @@ class SharedSegment:
             self._upgrade(fabric, host, page, journal, msgs)
         self._bump(journal, "fences")
         return msgs
+
+    def plan_acquire(self, host: int,
+                     journal: Optional[DirectoryJournal] = None
+                     ) -> List[CoherenceMsg]:
+        """Acquire barrier: join every peer's published release snapshot into
+        `host`'s view. Pure synchronization — no directory traffic, no stat
+        (the `acquires` counter belongs to the async batch scheduler, which
+        bumps it once per *flush* that carries an acquire edge)."""
+        self._trace("acquire", host)
+        if self.detector is not None:
+            self.detector.on_acquire(host, journal)
+        return []
 
     def pending_pages(self, host: Optional[int] = None) -> int:
         """Write-combined pages awaiting a fence (for one host, or all)."""
@@ -626,6 +684,7 @@ class SharedSegment:
         """Flush `host` out of the directory: pending write-combined pages are
         fenced first (detach is a release point), dirty pages write back, clean
         entries just drop. Called when an attachment is released."""
+        self._trace("detach", host)
         msgs = self.plan_fence(fabric, host, journal)
         d = self.directory
         for page in d.cached_pages(host):

@@ -206,6 +206,10 @@ class EmuCXL:
         self._retired_coherence = CoherenceStats()
         self._device = None
         self._memory_kinds: Dict[int, Optional[str]] = dict(_PREFERRED_KINDS)
+        # Optional linearized event trace (repro.core.trace.TraceRecorder):
+        # attached via attach_tracer(), propagated to every live and future
+        # segment, and threaded through the queue/engine layers.
+        self.tracer = None
         # Modeled elapsed DMA time per tier (seconds) — the Table III analogue on the
         # target HW; the CPU runtime cannot exhibit real HBM-vs-PCIe gaps.
         self.modeled_time = {LOCAL_MEMORY: 0.0, REMOTE_MEMORY: 0.0}
@@ -759,17 +763,15 @@ class EmuCXL:
                         f"address {rec.address:#x} is not a shared-segment "
                         f"mapping; acquire targets coherent attachments"
                     )
-                if rec.segment.detector is not None:
-                    # The happens-before edge: join every peer's published
-                    # release clock into this host's view. Free at runtime,
-                    # but required for later reads to be race-clean.
-                    rec.segment.detector.on_acquire(rec.host)
+                # The happens-before edge: join every peer's published
+                # release clock into this host's view. Free at runtime,
+                # but required for later reads to be race-clean.
+                rec.segment.plan_acquire(rec.host)
                 self._touch(rec)
             else:
                 for seg in self._segments.values():
-                    if seg.detector is not None:
-                        for host in sorted(seg.attached_hosts):
-                            seg.detector.on_acquire(host)
+                    for host in sorted(seg.attached_hosts):
+                        seg.plan_acquire(host)
             return 0.0
 
     def _maybe_check(self) -> None:
@@ -962,6 +964,7 @@ class EmuCXL:
             self._next_sid += 1
             backing = self._allocs[backing_addr]
             seg.placement_weight = weight
+            seg.tracer = self.tracer
             backing.segment = seg
             self._segments[seg.sid] = seg
             return seg
@@ -1028,6 +1031,16 @@ class EmuCXL:
         with self._lock:
             return dict(self._segments)
 
+    def attach_tracer(self, tracer) -> None:
+        """Attach a ``TraceRecorder`` (repro.core.trace) — or ``None`` to
+        detach — capturing a linearized event trace of every coherence plan,
+        queue flush, and engine job. Propagates to all live segments;
+        segments shared later inherit it at creation."""
+        with self._lock:
+            self.tracer = tracer
+            for seg in self._segments.values():
+                seg.tracer = tracer
+
     def coherence_stats(self) -> Dict[str, object]:
         """Fleet-wide + per-segment protocol counters (the coherence analogue
         of ``fabric_stats``)."""
@@ -1039,11 +1052,13 @@ class EmuCXL:
                 "segments": {sid: seg.describe()
                              for sid, seg in self._segments.items()},
                 # Conflicts recorded by race_detect="warn" detectors, in
-                # detection order (strict mode raises instead of recording).
-                "races": [r.describe()
+                # detection order, deduped — each entry carries a "count" of
+                # how many times the identical (page, sites, edge) conflict
+                # recurred (strict mode raises instead of recording).
+                "races": [d
                           for seg in self._segments.values()
                           if seg.detector is not None
-                          for r in seg.detector.races],
+                          for d in seg.detector.report()],
             }
 
     # ------------------------------------------------------------------ tensor views

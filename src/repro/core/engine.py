@@ -118,8 +118,9 @@ class SimulationEngine:
     to execute and are rejected.
     """
 
-    def __init__(self, fabric: Optional[Fabric] = None):
+    def __init__(self, fabric: Optional[Fabric] = None, tracer=None):
         self.fabric = fabric
+        self.tracer = tracer
         self._clock = fabric.clock if fabric is not None else 0.0
         self._heap: List[Tuple[float, int, Callable[[], None]]] = []
         self._seq = itertools.count()
@@ -160,6 +161,8 @@ class SimulationEngine:
 
     def _begin(self, job: Job) -> None:
         job.began_at = self.now
+        if self.tracer is not None:
+            self.tracer.emit("job-begin", label=job.label, at=self.now)
         for path, nbytes in job.routes:
             tr = self.fabric.begin(path, nbytes)
             job.transfers.append(tr)
@@ -170,6 +173,8 @@ class SimulationEngine:
 
     def _complete(self, job: Job) -> None:
         job.completed_at = self.now
+        if self.tracer is not None:
+            self.tracer.emit("job-complete", label=job.label, at=self.now)
         for dep in job._dependents:
             dep._deps_remaining -= 1
             if dep._deps_remaining == 0:

@@ -389,12 +389,10 @@ class OpQueue:
                 )
             # No protocol traffic of its own: the waiting (if any) is pure
             # ordering, wired by flush as dependencies on the batch's prior
-            # peer release fences.
-            if rec.segment.detector is not None:
-                # Happens-before edge for the race detector: join every peer
-                # release published up to this point in plan (== program)
-                # order. Journaled so a failed batch rolls the clocks back.
-                rec.segment.detector.on_acquire(rec.host, journal)
+            # peer release fences. plan_acquire joins every peer release
+            # published up to this point in plan (== program) order, journaled
+            # so a failed batch rolls the clocks back.
+            rec.segment.plan_acquire(rec.host, journal)
             return _Plan("acquire", buf=op.buf, streams=stream,
                          segment=rec.segment)
         if isinstance(op, ReadOp):
@@ -537,6 +535,9 @@ class OpQueue:
             try:
                 for t in tickets:
                     mark = journal.mark()
+                    if lib.tracer is not None:
+                        lib.tracer.emit("op", op=type(t.op).__name__,
+                                        mark=mark)
                     plan = self._plan_one(lib, fabric, t.op, journal)
                     plan.journal_mark = mark
                     for s in plan.streams:
@@ -585,6 +586,8 @@ class OpQueue:
                 # deferred to the event engine below), sources are untouched,
                 # and every ticket in the batch fails with the cause.
                 journal.rollback()
+                if lib.tracer is not None:
+                    lib.tracer.emit("rollback", mark=0, phase="plan")
                 for _, plan in plans:
                     if plan.staged_addr is not None:
                         lib.free(plan.staged_addr)
@@ -598,7 +601,7 @@ class OpQueue:
                 # completes instantly once its own deps do). Dependency-free
                 # jobs all begin at the batch start instant, so a fence-free
                 # batch evolves exactly like one begin-all-then-drain wave.
-                engine = SimulationEngine(fabric)
+                engine = SimulationEngine(fabric, tracer=lib.tracer)
                 barrier_ids = {id(d) for _, p in plans for d in p.deps}
                 jobs: dict = {}
                 for _, plan in plans:
@@ -644,6 +647,9 @@ class OpQueue:
                     # migrate destinations that never committed so the tier
                     # isn't leaked (mirrors the plan-phase rollback).
                     journal.rollback(plan.journal_mark)
+                    if lib.tracer is not None:
+                        lib.tracer.emit("rollback", mark=plan.journal_mark,
+                                        phase="apply")
                     for t2, p2 in plans[i:]:
                         t2._fail(e)
                         if (p2.staged_addr is not None

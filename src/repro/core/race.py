@@ -123,7 +123,8 @@ class RaceDetector:
     supplied journal when one is planning a transactional batch.
     """
 
-    __slots__ = ("seg", "mode", "vc", "rel", "write_epoch", "races")
+    __slots__ = ("seg", "mode", "vc", "rel", "write_epoch", "races",
+                 "race_counts")
 
     def __init__(self, seg: "SharedSegment", mode: str):
         self.seg = seg
@@ -137,7 +138,11 @@ class RaceDetector:
         # page -> (writer host, writer clock at the write, site string).
         self.write_epoch: Dict[int, Tuple[int, int, str]] = {}
         # warn-mode findings, in detection order (journaled like the stats).
+        # `races` holds one report per distinct (page, kind, sites) conflict;
+        # `race_counts` holds how many times each recurred — a long run that
+        # keeps hitting the same missing edge grows a counter, not the log.
         self.races: List[RaceReport] = []
+        self.race_counts: Dict[Tuple[int, str, str, str], int] = {}
 
     # ---------------------------------------------------------------- clocks
     def _clock(self, host: int) -> int:
@@ -169,6 +174,10 @@ class RaceDetector:
             ))
         return out
 
+    @staticmethod
+    def _report_key(report: RaceReport) -> Tuple[int, str, str, str]:
+        return (report.page, report.kind, report.prev_site, report.curr_site)
+
     def _flag(self, conflicts: List[RaceReport],
               journal: Optional["DirectoryJournal"]) -> None:
         if not conflicts:
@@ -177,7 +186,15 @@ class RaceDetector:
             raise RaceError("; ".join(str(c) for c in conflicts))
         if journal is not None:
             journal.record_race_log(self.seg)
-        self.races.extend(conflicts)
+        # Dedupe identical (page, sites, edge) findings across flushes: the
+        # first occurrence lands in the log, repeats bump its counter. The
+        # `races` *stat* still counts every occurrence.
+        for report in conflicts:
+            key = self._report_key(report)
+            seen = self.race_counts.get(key, 0)
+            self.race_counts[key] = seen + 1
+            if seen == 0:
+                self.races.append(report)
         self.seg._bump(journal, "races", len(conflicts))
 
     # ----------------------------------------------------------------- hooks
@@ -249,10 +266,21 @@ class RaceDetector:
         else:
             self.rel[host] = row
 
-    def truncate_log(self, length: int) -> None:
+    def restore_log(self, length: int,
+                    counts: Dict[Tuple[int, str, str, str], int]) -> None:
         del self.races[length:]
+        self.race_counts = dict(counts)
 
     # --------------------------------------------------------------- queries
+    def report(self) -> List[Dict[str, object]]:
+        """Warn-mode findings as dicts, each with its occurrence ``count``."""
+        out: List[Dict[str, object]] = []
+        for r in self.races:
+            d = r.describe()
+            d["count"] = self.race_counts.get(self._report_key(r), 1)
+            out.append(d)
+        return out
+
     def snapshot(self) -> Dict[str, object]:
         """Deep copy of all detector state (rollback-test oracle)."""
         return {
@@ -260,4 +288,5 @@ class RaceDetector:
             "rel": {h: dict(r) for h, r in self.rel.items()},
             "write_epoch": dict(self.write_epoch),
             "races": list(self.races),
+            "race_counts": dict(self.race_counts),
         }

@@ -1,0 +1,69 @@
+"""Replay a model-checker litmus program (repro.core.mc) through the real
+session API under one explicit schedule.
+
+This is the bridge for the detector/checker cross-validation: the model
+checker explores a ``Program`` at the planner level under *all* permitted
+schedules; ``replay_program`` runs the identical op sequence through
+``CXLSession`` (attach-per-host buffers, real pooled bytes) under *one*
+schedule, so the dynamic detector's verdict on that schedule can be compared
+with the checker's. Each write stamps a distinct payload and every read
+asserts it observes the schedule-order last write of its page — the
+emulator's single pooled copy is sequentially consistent at the data plane
+(staleness is what the *detector* flags, not what the bytes do).
+"""
+
+import numpy as np
+
+from repro.core import CXLSession, Fabric
+
+PAGE = 4096
+
+
+def replay_program(program, schedule, race="raise"):
+    """Run `program` under `schedule` (a sequence of thread ids, as produced
+    by ``mc.all_schedules``/``CheckResult.witness_*``). Returns the number of
+    warn-mode race reports; with ``race="raise"`` a racy schedule raises
+    ``RaceError`` at the conflicting access instead."""
+    num_hosts = max(program.num_threads, 2)
+    fabric = Fabric(num_hosts=num_hosts, pool_ports=2)
+    sess = CXLSession(1 << 22, 1 << 24, num_hosts=num_hosts, fabric=fabric)
+    try:
+        seg = sess.share(program.num_pages * PAGE, host=0, page_bytes=PAGE,
+                         consistency=program.consistency,
+                         wc_capacity=program.wc_capacity,
+                         race_detect=race)
+        bufs = {t: sess.attach(seg, host=t)
+                for t in range(program.num_threads)}
+        pc = [0] * program.num_threads
+        last_payload = {}           # page -> last written fill byte
+        stamp = 0
+        for thread in schedule:
+            op = program.threads[thread][pc[thread]]
+            pc[thread] += 1
+            buf = bufs[thread]
+            if op.kind == "write":
+                stamp += 1
+                last_payload[op.page] = stamp % 251 + 1
+                buf.write(np.full(PAGE, last_payload[op.page], np.uint8),
+                          offset=op.page * PAGE)
+            elif op.kind == "read":
+                got = buf.read(op.page * PAGE, PAGE)
+                want = last_payload.get(op.page, 0)
+                np.testing.assert_array_equal(
+                    got, np.full(PAGE, want, np.uint8),
+                    err_msg=(f"{program.name}: host {thread} read page "
+                             f"{op.page} under schedule {schedule}"))
+            elif op.kind == "fence":
+                buf.fence()
+            elif op.kind == "acquire":
+                buf.acquire()
+            elif op.kind == "detach":
+                sess.detach(buf)
+            else:
+                raise AssertionError(f"unknown op kind {op.kind!r}")
+        assert all(pc[t] == len(program.threads[t])
+                   for t in range(program.num_threads)), \
+            f"schedule {schedule} does not cover {program.name}"
+        return seg.stats.races
+    finally:
+        sess.close()

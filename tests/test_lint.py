@@ -156,6 +156,80 @@ b.detach()
     assert findings[0].line == 4
 
 
+# ------------------------------------------------------- EMU005 alias tracking
+def test_tuple_unpacked_handles_are_tracked_individually():
+    """The ISSUE fixture: handles bound by tuple unpacking each get their own
+    liveness — detaching one must flag *that* one and spare the other."""
+    source = """
+a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+a.detach()
+a.read(0, 64)
+b.read(0, 64)
+"""
+    findings = lint_source(source, "fixture.py")
+    assert [f.rule for f in findings] == ["EMU005"]
+    assert findings[0].line == 4 and "'a.read()'" in findings[0].message
+
+
+def test_tuple_swap_follows_the_handle_not_the_name():
+    """`a, b = b, a` re-routes both names: the dead handle is now called `b`,
+    and using it under the new name is still a stale use."""
+    source = """
+a, b = sess.attach(seg, host=0), sess.attach(seg, host=1)
+a.detach()
+a, b = b, a
+b.read(0, 64)
+a.read(0, 64)
+"""
+    findings = lint_source(source, "fixture.py")
+    assert [(f.rule, f.line) for f in findings] == [("EMU005", 5)]
+    assert "'b.read()'" in findings[0].message
+    assert "'a.detach()" in findings[0].message
+
+
+def test_plain_alias_of_a_detached_handle_is_stale():
+    source = """
+buf = sess.attach(seg, host=0)
+alias = buf
+buf.detach()
+alias.read(0, 64)
+"""
+    findings = lint_source(source, "fixture.py")
+    assert [f.rule for f in findings] == ["EMU005"]
+
+
+def test_annotated_walrus_for_and_with_binds_revive_the_name():
+    """Every binding form rebinds: an AnnAssign, a walrus, a loop target, or
+    a with-alias after detach() is a fresh handle, not the dead one."""
+    source = """
+buf = sess.attach(seg, host=0)
+buf.detach()
+buf: object = sess.attach(seg, host=0)
+buf.read(0, 64)
+buf.detach()
+if (buf := sess.attach(seg, host=0)):
+    buf.read(0, 64)
+buf.detach()
+for buf in bufs:
+    buf.read(0, 64)
+buf.detach()
+with sess.attach(seg, host=0) as buf:
+    buf.read(0, 64)
+"""
+    assert lint_source(source, "fixture.py") == []
+
+
+def test_starred_unpacking_binds_opaquely():
+    source = """
+a, *rest = sess.attach(seg, host=0), x, y
+a.detach()
+a.read(0, 64)
+rest.append(1)
+"""
+    findings = lint_source(source, "fixture.py")
+    assert [f.rule for f in findings] == ["EMU005"]
+
+
 # --------------------------------------------------------------------- pragmas
 def test_trailing_pragma_suppresses_the_line_only():
     source = """

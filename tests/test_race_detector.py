@@ -26,7 +26,9 @@ from repro.core import (
     ReadOp,
     WriteOp,
 )
+from repro.core import mc
 from repro.core.emucxl import EmuCXLError
+from _litmus import replay_program
 
 NUM_HOSTS = 3
 PAGE = 4096
@@ -397,3 +399,70 @@ def test_race_free_interleavings_read_the_fenced_bytes(use_async, rounds):
         assert seg.stats.races == 0
     finally:
         sess.close()
+
+
+# ------------------------------------------------------------- report dedupe
+def test_warn_mode_dedupes_repeated_conflicts_with_a_count():
+    """A long run that keeps hitting one missing edge grows a counter, not
+    the report log: identical (page, sites, edge) conflicts collapse into a
+    single entry whose ``count`` tracks occurrences (the ``races`` *stat*
+    still counts every one)."""
+    sess, seg, bufs = make_sess("warn")
+    try:
+        bufs[0].write(PAYLOAD)
+        bufs[0].fence()
+        for _ in range(5):
+            bufs[1].read(0, 32)                # the same stale read, 5 times
+        bufs[2].read(0, 32)                    # a distinct conflicting site
+        assert seg.stats.races == 6            # occurrences
+        races = sess.coherence_stats()["races"]
+        assert len(races) == 2                 # deduped reports
+        by_host = {r["curr_site"]: r["count"] for r in races}
+        assert by_host == {"host 1 read [0, 32)": 5, "host 2 read [0, 32)": 1}
+    finally:
+        sess.close()
+
+
+def test_dedupe_counts_roll_back_with_a_failed_batch():
+    sess, seg, bufs = make_sess("warn")
+    try:
+        bufs[0].write(PAYLOAD)
+        bufs[0].fence()
+        bufs[1].read(0, 32)                    # count 1, committed
+        pre = seg.detector.snapshot()
+        sess.submit(
+            ReadOp(bufs[1], 0, 32),            # same conflict: count -> 2
+            ReadOp(bufs[1], 10 * PAGE, 32),    # out of bounds: batch fails
+        )
+        with pytest.raises(EmuCXLError):
+            sess.flush()
+        assert seg.detector.snapshot() == pre  # count rolled back to 1
+        assert seg.detector.report()[0]["count"] == 1
+    finally:
+        sess.close()
+
+
+# ----------------------------------------------- model-checker cross-validation
+@pytest.mark.parametrize("program", mc.CORPUS, ids=lambda p: p.name)
+def test_detector_and_model_checker_agree(program):
+    """Every corpus litmus program must get the same racy/race-free verdict
+    from the dynamic detector (replayed under a concrete schedule through
+    the real session stack) and the model checker (under all permitted
+    schedules). A checker-only racy verdict would be a detector false
+    negative; a detector-only one would be checker unsoundness — either
+    fails here."""
+    result = mc.check_program(program)
+    assert result.violations == []
+    assert result.racy == program.expect_race
+    if result.racy:
+        # The checker's witness schedule must race under the real detector.
+        with pytest.raises(RaceError):
+            replay_program(program, result.witness_racy, race="raise")
+        # ... and warn mode must count exactly what the checker counted on
+        # that schedule (flag-for-flag agreement, not just the verdict).
+        assert replay_program(program, result.witness_racy, race="warn") > 0
+    else:
+        # Race-free under ALL schedules: strict mode must accept every
+        # permitted interleaving, and each read observes the last write.
+        for schedule in mc.all_schedules(program):
+            assert replay_program(program, schedule, race="raise") == 0

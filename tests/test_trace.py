@@ -1,0 +1,159 @@
+"""Trace-capture layer (core/trace.py): every flush is a linearized event
+trace — reads with observed write-epochs, upgrades, fences, acquires, journal
+marks, engine job begin/complete, and rollback marks on failed batches."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AcquireOp,
+    CXLSession,
+    Fabric,
+    FenceOp,
+    ReadOp,
+    TraceRecorder,
+    WriteOp,
+)
+from repro.core.emucxl import EmuCXLError
+
+PAGE = 4096
+NUM_HOSTS = 2
+
+
+def make_sess(race="warn", fabric=True, tracer=None):
+    fab = Fabric(num_hosts=NUM_HOSTS, pool_ports=2) if fabric else None
+    sess = CXLSession(1 << 22, 1 << 24, num_hosts=NUM_HOSTS, fabric=fab)
+    if tracer is not None:
+        sess.attach_tracer(tracer)
+    seg = sess.share(4 * PAGE, host=0, page_bytes=PAGE,
+                     consistency="release", race_detect=race)
+    bufs = [sess.attach(seg, host=h) for h in range(NUM_HOSTS)]
+    return sess, seg, bufs
+
+
+PAYLOAD = np.full(32, 7, np.uint8)
+
+
+# ------------------------------------------------------------------ recorder
+def test_recorder_orders_events_and_tracks_last_write():
+    rec = TraceRecorder()
+    rec.emit("write", sid=0, page=1, host=0, outcome="wc-buffered")
+    rec.emit("read", sid=0, page=1, host=0, outcome="store-forward")
+    assert [ev.seq for ev in rec] == [0, 1]
+    assert rec.observed_epoch(0, 1) == ("seq", 0)
+    assert rec.observed_epoch(0, 2) is None
+    ev = rec.events[1]
+    assert ev.get("outcome") == "store-forward"
+    assert ev.as_dict()["page"] == 1
+    assert "store-forward" in str(ev)
+
+
+def test_recorder_clear_keeps_seq_monotone():
+    rec = TraceRecorder()
+    rec.emit("op", op="WriteOp", mark=0)
+    rec.clear()
+    assert len(rec) == 0 and rec.observed_epoch(0, 0) is None
+    assert rec.emit("op", op="ReadOp", mark=0).seq == 1
+
+
+# ---------------------------------------------------------------- sync plans
+def test_sync_ops_emit_a_linearized_plan_trace():
+    tracer = TraceRecorder()
+    sess, seg, bufs = make_sess(tracer=tracer)
+    try:
+        bufs[0].write(PAYLOAD)
+        bufs[0].fence()
+        bufs[1].acquire()
+        bufs[1].read(0, 32)
+        kinds = [ev.kind for ev in tracer]
+        assert kinds == ["write", "fence", "upgrade", "acquire", "read"]
+        write, fence, upgrade, acquire, read = tracer.events
+        assert write.get("outcome") == "wc-buffered" and write.page == 0
+        assert fence.get("pending") == (0,)
+        assert upgrade.get("from_state") is None       # I -> M (RFO)
+        # Host 1 never cached the page: a miss, forwarded from host 0's M.
+        assert read.get("outcome") == "miss" and read.host == 1
+        # Detector-backed epoch: the read observed host 0's epoch-1 write.
+        assert read.get("epoch") == (0, 1)
+    finally:
+        sess.close()
+
+
+def test_read_epochs_fall_back_to_trace_seq_without_a_detector():
+    tracer = TraceRecorder()
+    sess, seg, bufs = make_sess(race="off", tracer=tracer)
+    try:
+        bufs[0].write(PAYLOAD)
+        bufs[0].fence()
+        bufs[1].read(0, 32)
+        read = tracer.events_of("read")[0]
+        write = tracer.events_of("write")[0]
+        assert read.get("epoch") == ("seq", write.seq)
+    finally:
+        sess.close()
+
+
+def test_tracer_attaches_to_live_and_future_segments():
+    sess, seg, bufs = make_sess()       # shared before any tracer existed
+    try:
+        tracer = TraceRecorder()
+        sess.attach_tracer(tracer)
+        assert seg.tracer is tracer
+        seg2 = sess.share(PAGE, host=0, page_bytes=PAGE)
+        assert seg2.tracer is tracer
+        bufs[0].write(PAYLOAD)
+        assert [ev.kind for ev in tracer] == ["write"]
+        sess.attach_tracer(None)
+        bufs[0].write(PAYLOAD)
+        assert len(tracer) == 1         # detached: no further events
+    finally:
+        sess.close()
+
+
+# --------------------------------------------------------------- async flush
+def test_flush_records_ops_marks_and_engine_jobs():
+    tracer = TraceRecorder()
+    sess, seg, bufs = make_sess(tracer=tracer)
+    try:
+        sess.submit(
+            WriteOp(bufs[0], PAYLOAD),
+            FenceOp(bufs[0]),
+            AcquireOp(bufs[1]),
+            ReadOp(bufs[1], 0, 32),
+        )
+        sess.flush()
+        ops = tracer.events_of("op")
+        assert [ev.get("op") for ev in ops] == [
+            "WriteOp", "FenceOp", "AcquireOp", "ReadOp"]
+        # Journal marks are monotone: each op plans on top of the previous.
+        marks = [ev.get("mark") for ev in ops]
+        assert marks == sorted(marks)
+        # The engine traced the dependency graph: the draining fence and the
+        # acquire that waited on it both begin and complete.
+        begun = [ev.get("label") for ev in tracer.events_of("job-begin")]
+        done = [ev.get("label") for ev in tracer.events_of("job-complete")]
+        assert "fence" in begun and "acquire" in begun
+        assert sorted(begun) == sorted(done)
+        # Interleaved with the plan events, in one total order.
+        seqs = [ev.seq for ev in tracer]
+        assert seqs == sorted(seqs)
+    finally:
+        sess.close()
+
+
+def test_failed_flush_traces_the_rollback():
+    tracer = TraceRecorder()
+    sess, seg, bufs = make_sess(tracer=tracer)
+    try:
+        sess.submit(
+            WriteOp(bufs[0], PAYLOAD),
+            ReadOp(bufs[0], 10 * PAGE, 32),     # out of bounds: plan fails
+        )
+        with pytest.raises(EmuCXLError):
+            sess.flush()
+        rollbacks = tracer.events_of("rollback")
+        assert len(rollbacks) == 1
+        assert rollbacks[0].get("phase") == "plan"
+        assert rollbacks[0].get("mark") == 0
+    finally:
+        sess.close()

@@ -1,0 +1,189 @@
+#!/usr/bin/env python3
+"""emucxl-mc: run the stateless model checker (src/repro/core/mc.py) as a gate.
+
+Stdlib-only by design — CI's ``emucxl-mc`` job runs this on a bare
+interpreter (no numpy/jax), which is itself asserted below: importing the
+checker must not drag the scientific stack in.
+
+Modes (combinable; all three is what CI runs):
+
+  --corpus      explore every litmus program under all permitted schedules
+                (sleep-set DPOR) and check the axiomatic oracle; gates that
+                every verdict matches, zero model violations, and DPOR
+                explored strictly fewer schedules than the naive multinomial
+                bound on every (multi-threaded) program.
+  --enumerate   exhaustively walk every reachable small-Directory
+                configuration (3 hosts x 2 pages; eager, release, release
+                with a 1-page WC buffer) asserting Directory.check() and the
+                pending-page invariant on every transition.
+  --self-test   run the seeded protocol mutation (the E->M silent upgrade
+                skips the journal) and gate that the rollback-inverse oracle
+                catches it — proof the oracle has teeth.
+
+``--json PATH`` writes the DPOR statistics (explored vs naive, reduction
+ratios, enumerator state counts) as a benchmark artifact; CI uploads it as
+``BENCH_coherence_mc``. ``--program NAME`` checks one program verbosely.
+
+Exit status 0 iff every requested gate holds.
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+#: Enumerator configurations CI proves exhaustively: the eager protocol, the
+#: unbounded release protocol, and the capacity-bounded release protocol
+#: (forced drains reachable from every state with a pending page).
+ENUM_CONFIGS = (("eager", None), ("release", None), ("release", 1))
+
+
+def _fail(failures, msg):
+    failures.append(msg)
+    print(f"FAIL: {msg}")
+
+
+def run_corpus(mc, failures, verbose=False):
+    print(f"== litmus corpus ({len(mc.CORPUS)} programs) ==")
+    rows = []
+    t0 = time.monotonic()
+    for program in mc.CORPUS:
+        result = mc.check_program(program)
+        s = result.summary()
+        rows.append(s)
+        status = "ok" if result.ok else "FAIL"
+        print(f"  {s['program']:28s} explored={s['explored']:5d} "
+              f"naive={s['naive']:5d} reduction={s['reduction']:6.1%} "
+              f"racy={str(s['racy']):5s} [{status}]")
+        if verbose and program.description:
+            print(f"      {program.description}")
+        if result.violations:
+            for v in result.violations[:5]:
+                print(f"      violation: {v}")
+            _fail(failures, f"{program.name}: {len(result.violations)} "
+                            f"model violation(s)")
+        if not result.verdict_ok:
+            _fail(failures,
+                  f"{program.name}: checker says racy={result.racy}, "
+                  f"corpus expects {program.expect_race}")
+        if program.num_threads >= 2 and result.explored >= result.naive:
+            _fail(failures,
+                  f"{program.name}: DPOR explored {result.explored} "
+                  f">= naive bound {result.naive}")
+    elapsed = time.monotonic() - t0
+    total_explored = sum(r["explored"] for r in rows)
+    total_naive = sum(r["naive"] for r in rows)
+    print(f"  total: {total_explored} executions explored vs {total_naive} "
+          f"naive ({1 - total_explored / total_naive:.1%} pruned) "
+          f"in {elapsed:.2f}s")
+    return {"programs": rows, "explored": total_explored,
+            "naive": total_naive, "seconds": round(elapsed, 3)}
+
+
+def run_enumerator(mc, failures):
+    print("== protocol enumerator (3 hosts x 2 pages) ==")
+    rows = []
+    t0 = time.monotonic()
+    for consistency, cap in ENUM_CONFIGS:
+        result = mc.enumerate_protocol(3, 2, consistency=consistency,
+                                       wc_capacity=cap)
+        s = result.summary()
+        rows.append(s)
+        status = "ok" if result.ok else "FAIL"
+        print(f"  {consistency:8s} wc_capacity={str(cap):5s} "
+              f"states={s['states']:6d} transitions={s['transitions']:7d} "
+              f"[{status}]")
+        if result.violations:
+            for v in result.violations[:5]:
+                print(f"      violation: {v}")
+            _fail(failures, f"enumerator ({consistency}, cap={cap}): "
+                            f"{len(result.violations)} violation(s)")
+    elapsed = time.monotonic() - t0
+    print(f"  {sum(r['states'] for r in rows)} reachable states proved "
+          f"in {elapsed:.2f}s")
+    return {"configs": rows, "seconds": round(elapsed, 3)}
+
+
+def run_self_test(mc, failures):
+    print("== oracle self-test (seeded E->M journaling mutation) ==")
+    program = mc.find_program("private_rmw")
+    result = mc.check_program(program,
+                              segment_factory=mc.seeded_mutation_factory)
+    caught = any("rollback" in v for v in result.violations)
+    if caught:
+        print(f"  caught: {result.violations[0]}")
+    else:
+        _fail(failures, "seeded mutation (unjournaled E->M upgrade) was NOT "
+                        "caught by the rollback-inverse oracle")
+    clean = mc.check_program(program)
+    if not clean.ok:
+        _fail(failures, "private_rmw fails without the mutation — "
+                        "self-test baseline broken")
+    return {"caught": caught, "violations": result.violations[:5]}
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(
+        prog="emucxl-mc", description=__doc__.splitlines()[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    parser.add_argument("--corpus", action="store_true",
+                        help="check every litmus program in the corpus")
+    parser.add_argument("--enumerate", action="store_true", dest="enum",
+                        help="exhaustively walk small protocol state spaces")
+    parser.add_argument("--self-test", action="store_true",
+                        help="gate that the seeded mutation is caught")
+    parser.add_argument("--program", metavar="NAME",
+                        help="check one litmus program (verbose)")
+    parser.add_argument("--json", metavar="PATH",
+                        help="write DPOR/enumerator stats as JSON")
+    parser.add_argument("-v", "--verbose", action="store_true")
+    args = parser.parse_args(argv)
+    if not (args.corpus or args.enum or args.self_test or args.program):
+        args.corpus = args.enum = args.self_test = True
+
+    from repro.core import mc  # noqa: E402 (after the sys.path insert)
+
+    heavy = [m for m in sys.modules
+             if m.split(".")[0] in ("numpy", "jax", "jaxlib")]
+    failures = []
+    if heavy:
+        _fail(failures, f"model checker must stay stdlib-only but imported "
+                        f"{sorted(heavy)[:3]}")
+
+    payload = {"bench": "emucxl-mc"}
+    if args.program:
+        program = mc.find_program(args.program)
+        print(program)
+        result = mc.check_program(program)
+        for k, v in result.summary().items():
+            print(f"  {k}: {v}")
+        print(f"  witness_racy: {result.witness_racy}")
+        print(f"  witness_free: {result.witness_free}")
+        for v in result.violations:
+            print(f"  violation: {v}")
+        if not result.ok:
+            _fail(failures, f"{program.name}: not ok")
+        payload["program"] = result.summary()
+    if args.corpus:
+        payload["corpus"] = run_corpus(mc, failures, verbose=args.verbose)
+    if args.enum:
+        payload["enumerator"] = run_enumerator(mc, failures)
+    if args.self_test:
+        payload["self_test"] = run_self_test(mc, failures)
+
+    payload["ok"] = not failures
+    if args.json:
+        Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {args.json}")
+    if failures:
+        print(f"\n{len(failures)} gate(s) failed")
+        return 1
+    print("\nall gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

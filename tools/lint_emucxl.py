@@ -28,9 +28,12 @@ EMU003   acquire-eager      ``.acquire()``/``AcquireOp`` on a buffer of an
 EMU004   journal            ``._set``/``._bump``/``._wc_*`` called with a
                             missing or literal-``None`` journal while planning —
                             an unjournaled mutation survives batch rollback
-EMU005   use-after-detach   a data-plane call on a buffer name after its
-                            ``.detach()``/``.free()`` in straight-line code,
-                            with no rebind in between
+EMU005   use-after-detach   a data-plane call on a stale handle in straight-line
+                            code: after ``.detach()``/``.free()`` the handle is
+                            dead under *every* alias — tuple unpacking
+                            (``a, b = b, a``), plain aliasing (``c = b``),
+                            annotated/walrus/``for``/``with`` bindings are all
+                            tracked — until the name is rebound to a fresh value
 =======  =================  ====================================================
 
 Suppression: a trailing ``# emucxl: allow-<slug>`` comment silences that line;
@@ -46,6 +49,7 @@ from __future__ import annotations
 import argparse
 import ast
 import dataclasses
+import itertools
 import re
 import sys
 from pathlib import Path
@@ -177,7 +181,10 @@ def analyze_scope(scope: ast.AST, path: str,
                   is_shim: bool) -> List[Finding]:
     seg_assigns: Dict[str, List[Tuple[int, str]]] = {}  # seg -> consistency
     buf_assigns: Dict[str, List[Tuple[int, str]]] = {}  # buffer -> seg name
-    rebinds: Dict[str, List[int]] = {}     # name -> assignment lines
+    # (line, target, source name): source is the RHS name when the binding is
+    # a pure alias (a = b, or one element of `a, b = b, a`), else None — the
+    # target was bound to a fresh value. Feeds the EMU005 alias simulation.
+    binds: List[Tuple[int, str, Optional[str]]] = []
     writes: List[Tuple[int, str]] = []     # (line, buffer name)
     acquires: List[Tuple[int, str]] = []
     releases: Set[str] = set()             # buffers fenced/detached in scope
@@ -191,13 +198,17 @@ def analyze_scope(scope: ast.AST, path: str,
             for t, v in zip(target.elts, value.elts, strict=True):
                 record_bind(t, v, lineno)
             return
-        if isinstance(target, ast.Tuple):
+        if isinstance(target, (ast.Tuple, ast.List)):
             for t in target.elts:           # unpacking an opaque value
                 record_bind(t, ast.Constant(value=None), lineno)
             return
+        if isinstance(target, ast.Starred):
+            record_bind(target.value, ast.Constant(value=None), lineno)
+            return
         if not isinstance(target, ast.Name):
             return
-        rebinds.setdefault(target.id, []).append(lineno)
+        binds.append((lineno, target.id,
+                      value.id if isinstance(value, ast.Name) else None))
         m = _method(value) if isinstance(value, ast.Call) else None
         if m is not None and m[1] == "share":
             seg_assigns.setdefault(target.id, []).append(
@@ -212,10 +223,20 @@ def analyze_scope(scope: ast.AST, path: str,
             seg_assigns.setdefault(target.id, []).append((lineno, None))
             buf_assigns.setdefault(target.id, []).append((lineno, None))
 
+    _OPAQUE = ast.Constant(value=None)
     for node in scope_nodes(scope):
         if isinstance(node, ast.Assign):
             for target in node.targets:
                 record_bind(target, node.value, node.lineno)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            record_bind(node.target, node.value, node.lineno)
+        elif isinstance(node, ast.NamedExpr):
+            record_bind(node.target, node.value, node.lineno)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            record_bind(node.target, _OPAQUE, node.lineno)
+        elif isinstance(node, ast.withitem) and node.optional_vars is not None:
+            record_bind(node.optional_vars, _OPAQUE,
+                        node.context_expr.lineno)
 
         if not isinstance(node, ast.Call):
             continue
@@ -299,18 +320,54 @@ def analyze_scope(scope: ast.AST, path: str,
                 f"acquire() on buffer '{buf}' of an eager segment — eager "
                 f"mode has no release edge to synchronize with"))
 
-    for dline, buf in detaches:
-        rebound_after = [ln for ln in rebinds.get(buf, []) if ln > dline]
-        cutoff = min(rebound_after) if rebound_after else None
-        for uline, name, meth in uses:
-            if name != buf or uline <= dline:
-                continue
-            if cutoff is not None and uline >= cutoff:
-                continue
-            findings.append(Finding(
-                path, uline, "EMU005",
-                f"'{buf}.{meth}()' after '{buf}.detach()/free()' on line "
-                f"{dline} — the handle is stale"))
+    # EMU005: straight-line alias simulation. Handles are abstract ids; a
+    # binding with a plain-name RHS copies the id (so `a, b = b, a` moves a
+    # stale handle under a new name), any other RHS mints a fresh id, and
+    # detach()/free() kills the id — every alias of it, under whatever name,
+    # is stale until rebound. Events replay in line order; all bindings on one
+    # line read their sources before any of them assigns (tuple-swap RHS
+    # evaluates first).
+    counter = itertools.count()
+    env: Dict[str, int] = {}
+    dead: Dict[int, Tuple[int, str]] = {}  # handle id -> (detach line, name)
+
+    def handle_id(name: str) -> int:
+        if name not in env:
+            env[name] = next(counter)
+        return env[name]
+
+    events: List[Tuple[int, int, Tuple]] = []
+    events.extend((line, 0, ("detach", name)) for line, name in detaches)
+    events.extend((line, 0, ("use", name, meth)) for line, name, meth in uses)
+    events.extend((line, 1, ("bind", tgt, src)) for line, tgt, src in binds)
+    events.sort(key=lambda e: (e[0], e[1]))
+
+    i = 0
+    while i < len(events):
+        line, _, ev = events[i]
+        if ev[0] == "use":
+            _, name, meth = ev
+            if handle_id(name) in dead:
+                dline, dname = dead[env[name]]
+                findings.append(Finding(
+                    path, line, "EMU005",
+                    f"'{name}.{meth}()' after '{dname}.detach()/free()' on "
+                    f"line {dline} — the handle is stale"))
+            i += 1
+        elif ev[0] == "detach":
+            dead.setdefault(handle_id(ev[1]), (line, ev[1]))
+            i += 1
+        else:
+            # Gather this line's bindings, resolve every source id against the
+            # pre-assignment environment, then assign.
+            staged: List[Tuple[str, Optional[int]]] = []
+            while (i < len(events) and events[i][0] == line
+                   and events[i][2][0] == "bind"):
+                _, tgt, src = events[i][2]
+                staged.append((tgt, None if src is None else handle_id(src)))
+                i += 1
+            for tgt, hid in staged:
+                env[tgt] = next(counter) if hid is None else hid
 
     return findings
 
