@@ -20,12 +20,13 @@ def main() -> None:
                     help="tiny fast CI configuration (seconds, CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: queue,policy,fabric,api,"
-                         "coherence,kernels,offload,serving")
+                         "coherence,topology,kernels,offload,serving")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
     selected = set(args.only.split(",")) if args.only else None
-    smoke_capable = {"queue", "policy", "fabric", "api", "coherence"}
+    smoke_capable = {"queue", "policy", "fabric", "api", "coherence",
+                     "topology"}
     if args.smoke:
         if selected is None:
             # Smoke gates the pure-model benches; kernel/serving compile paths
@@ -63,6 +64,13 @@ def main() -> None:
             rows += coherence_bench.bench(**coherence_bench.SMOKE)[0]
         else:
             rows += coherence_bench.bench(check=True)[0]
+
+    if want("topology"):
+        from benchmarks import topology_bench
+        if args.smoke:
+            rows += topology_bench.bench(**topology_bench.SMOKE)[0]
+        else:
+            rows += topology_bench.bench(check=True)[0]
 
     if want("queue"):
         from benchmarks import queue_latency

@@ -1,0 +1,236 @@
+"""Pluggable topologies: ECMP trunk balance + sharded directory homes.
+
+Two experiments over core/topology.py routing and the per-page directory
+home policies (core/policy.py):
+
+1. **ECMP spine balance** (spine-leaf): every cross-leaf host drives one bulk
+   transfer to every remote pool port through a 2-leaf x 2-spine fabric —
+   16 distinct flows at the default size. Under deterministic ECMP (CRC32
+   flow hash over lexicographic equal-cost paths) the four leaf-spine trunk
+   ports must carry near-equal bytes; with ``ecmp=False`` every tie collapses
+   onto the first candidate spine, so the other spine's trunks carry nothing.
+   Asserted: ECMP max/min trunk-byte ratio <= 1.5 while the single-spine
+   routing shows > 3 — the skew ECMP exists to remove. Also recorded: the
+   cross-leaf drain makespan for both routings (same offered load, so the
+   single-spine variant's halved trunk capacity shows up as elapsed time).
+
+2. **Directory home sharding** (single switch): N hosts write and read a
+   shared eager segment page by page. With every page homed on port 0
+   (``PinnedHome(0)`` — exactly the legacy all-on-the-backing-port layout)
+   the whole protocol stream — RFO fetches, invalidations, writebacks —
+   funnels through one pool port; ``StripedHome()`` spreads page homes across
+   every port. Asserted: sharding strictly reduces the hottest pool port's
+   ``busy_time`` and carried bytes, while total protocol messages are
+   unchanged (the policy moves traffic, it must not invent or lose any).
+
+``--json PATH`` dumps the headline numbers (per-trunk bytes and ratios for
+both routings, per-port busy times for both home policies) for the CI
+artifact; ``--smoke`` runs a seconds-scale configuration and enforces the
+acceptance asserts.
+
+CSV columns: name,us_per_call,derived — consistent with benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.api import CXLSession
+from repro.core.fabric import Fabric
+from repro.core.policy import PinnedHome, StripedHome
+from repro.core.topology import TRUNK, spine_leaf
+
+_PAGE = 4096
+
+
+# ------------------------------------------------------------- ECMP balance
+def bench_ecmp_balance(leaves: int = 2, spines: int = 2,
+                       hosts_per_leaf: int = 4, pool_ports_per_leaf: int = 2,
+                       nbytes: int = 1 << 20) -> Dict[str, object]:
+    """Drive every cross-leaf (host, pool port) flow once and tally the bytes
+    each leaf-spine trunk carried, under ECMP and under first-candidate
+    (single-spine) routing."""
+    out: Dict[str, object] = {
+        "leaves": leaves, "spines": spines,
+        "hosts_per_leaf": hosts_per_leaf,
+        "pool_ports_per_leaf": pool_ports_per_leaf,
+        "nbytes_per_flow": nbytes,
+    }
+    for label, ecmp in (("ecmp", True), ("single_spine", False)):
+        topo = spine_leaf(leaves=leaves, spines=spines,
+                          hosts_per_leaf=hosts_per_leaf,
+                          pool_ports_per_leaf=pool_ports_per_leaf,
+                          ecmp=ecmp)
+        fab = Fabric(topology=topo)
+        flows = 0
+        t0 = time.perf_counter()
+        for h in range(topo.num_hosts):
+            for p in range(topo.pool_ports):
+                path = fab.pool_path(h, p)
+                if len(path) == 2:          # same leaf: no trunk crossed
+                    continue
+                fab.begin(path, nbytes)
+                flows += 1
+        makespan = fab.drain()
+        wall = time.perf_counter() - t0
+        stats = fab.stats()
+        trunks = sorted(name for name, spec in topo.links.items()
+                        if spec.kind == TRUNK)
+        trunk_bytes = {t: stats[t]["bytes_carried"] for t in trunks}
+        hi, lo = max(trunk_bytes.values()), min(trunk_bytes.values())
+        out[label] = {
+            "flows": flows,
+            "trunk_bytes": trunk_bytes,
+            "max_trunk_bytes": hi,
+            "min_trunk_bytes": lo,
+            "max_min_ratio": hi / max(lo, 1),
+            "makespan_s": makespan,
+            "wall_s": wall,
+        }
+    return out
+
+
+# ------------------------------------------------------- directory sharding
+def bench_directory_sharding(hosts: int = 4, pool_ports: int = 4,
+                             pages: int = 16,
+                             rounds: int = 2) -> Dict[str, object]:
+    """Replay the same multi-host coherent write/read churn under the
+    all-home-on-port-0 layout and under striped per-page homes, and compare
+    where the protocol traffic lands."""
+    out: Dict[str, object] = {"hosts": hosts, "pool_ports": pool_ports,
+                              "pages": pages, "rounds": rounds}
+    for label, home in (("pinned", PinnedHome(0)), ("striped", StripedHome())):
+        with CXLSession(1 << 22, 1 << 26, num_hosts=hosts,
+                        fabric=Fabric(num_hosts=hosts,
+                                      pool_ports=pool_ports)) as sess:
+            seg = sess.share(pages * _PAGE, host=0, page_bytes=_PAGE,
+                             home=home)
+            handles = [sess.attach(seg, host=h) for h in range(hosts)]
+            t0 = time.perf_counter()
+            for rnd in range(rounds):
+                for page in range(pages):
+                    writer = handles[(page + rnd) % hosts]
+                    reader = handles[(page + rnd + 1) % hosts]
+                    writer.write(np.full(_PAGE, (page + rnd) % 251, np.uint8),
+                                 offset=page * _PAGE)
+                    reader.read(page * _PAGE, _PAGE)
+            wall = time.perf_counter() - t0
+            fab = sess.fabric
+            stats = fab.stats()
+            busy = {j: stats[fab.pool_link(j)]["busy_time"]
+                    for j in range(pool_ports)}
+            carried = {j: stats[fab.pool_link(j)]["bytes_carried"]
+                       for j in range(pool_ports)}
+            tot = sess.lib.coherence_stats()["total"]
+            out[label] = {
+                "home": seg.describe()["home"],
+                "port_busy_s": busy,
+                "hottest_port_busy_s": max(busy.values()),
+                "port_bytes": carried,
+                "hottest_port_bytes": max(carried.values()),
+                # fetches + the coherence_bench message census: the policy
+                # relocates this traffic, it must not change its volume
+                "protocol_msgs": (tot["read_misses"] + tot["write_misses"]
+                                  + tot["invalidations"] + tot["writebacks"]
+                                  + tot["forwards"]),
+                "wall_s": wall,
+            }
+    return out
+
+
+# ------------------------------------------------------------------ harness
+def bench(leaves: int = 2, spines: int = 2, hosts_per_leaf: int = 4,
+          pool_ports_per_leaf: int = 2, nbytes: int = 1 << 20,
+          shard_hosts: int = 4, shard_ports: int = 4, pages: int = 16,
+          rounds: int = 2,
+          check: bool = False) -> tuple[List[str], Dict[str, object]]:
+    eb = bench_ecmp_balance(leaves=leaves, spines=spines,
+                            hosts_per_leaf=hosts_per_leaf,
+                            pool_ports_per_leaf=pool_ports_per_leaf,
+                            nbytes=nbytes)
+    ds = bench_directory_sharding(hosts=shard_hosts, pool_ports=shard_ports,
+                                  pages=pages, rounds=rounds)
+    artifact: Dict[str, object] = {"ecmp_balance": eb,
+                                   "directory_sharding": ds}
+    rows: List[str] = []
+    for label in ("ecmp", "single_spine"):
+        r = eb[label]
+        rows.append(
+            f"topology_{label}_f{r['flows']},"
+            f"{r['wall_s'] / max(r['flows'], 1) * 1e6:.1f},"
+            f"max_trunk_bytes={r['max_trunk_bytes']},"
+            f"min_trunk_bytes={r['min_trunk_bytes']},"
+            f"max_min_ratio={r['max_min_ratio']:.2f},"
+            f"makespan_s={r['makespan_s']:.3e}"
+        )
+    calls = pages * rounds * 2
+    for label in ("pinned", "striped"):
+        r = ds[label]
+        rows.append(
+            f"topology_home_{label}_h{ds['hosts']}p{ds['pool_ports']},"
+            f"{r['wall_s'] / calls * 1e6:.1f},"
+            f"hottest_port_busy_s={r['hottest_port_busy_s']:.3e},"
+            f"hottest_port_bytes={r['hottest_port_bytes']},"
+            f"protocol_msgs={r['protocol_msgs']}"
+        )
+    if check:
+        ecmp, single = eb["ecmp"], eb["single_spine"]
+        assert ecmp["flows"] == single["flows"] >= 4, (
+            f"need a real cross-leaf flow population, got {ecmp['flows']}"
+        )
+        assert ecmp["max_min_ratio"] <= 1.5, (
+            f"ECMP must balance trunk bytes to within 1.5x: "
+            f"{ecmp['trunk_bytes']}"
+        )
+        assert single["max_min_ratio"] > 3, (
+            f"first-candidate routing must visibly skew the trunks "
+            f"(the imbalance ECMP exists to fix): {single['trunk_bytes']}"
+        )
+        assert single["makespan_s"] > ecmp["makespan_s"], (
+            f"halving usable trunk capacity must cost drain time "
+            f"({single['makespan_s']} vs {ecmp['makespan_s']})"
+        )
+        pin, stripe = ds["pinned"], ds["striped"]
+        assert stripe["hottest_port_busy_s"] < pin["hottest_port_busy_s"], (
+            f"striped homes must strictly drain the hottest port "
+            f"({stripe['hottest_port_busy_s']} vs "
+            f"{pin['hottest_port_busy_s']})"
+        )
+        assert stripe["hottest_port_bytes"] < pin["hottest_port_bytes"], (
+            f"striped homes must strictly spread carried bytes "
+            f"({stripe['port_bytes']} vs {pin['port_bytes']})"
+        )
+        assert stripe["protocol_msgs"] == pin["protocol_msgs"], (
+            f"a home policy moves protocol traffic, it must not change its "
+            f"volume ({stripe['protocol_msgs']} vs {pin['protocol_msgs']})"
+        )
+    return rows, artifact
+
+
+SMOKE = dict(nbytes=1 << 18, pages=8, rounds=2, check=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast configuration for CI (asserts acceptance)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the artifact payload (per-trunk bytes and "
+                         "ratios, per-port busy times per home policy) as "
+                         "JSON")
+    args = ap.parse_args()
+    rows, artifact = bench(**SMOKE) if args.smoke else bench(check=True)
+    print("name,us_per_call,derived")
+    print("\n".join(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

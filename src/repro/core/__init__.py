@@ -42,10 +42,12 @@ _EXPORTS: Dict[str, str] = {
     "emucxl_pool_stats": "emucxl", "emucxl_read": "emucxl",
     "emucxl_resize": "emucxl", "emucxl_stats": "emucxl",
     "emucxl_write": "emucxl",
-    # discrete-event engine + fabric
+    # discrete-event engine + fabric + topology
     "SimulationEngine": "engine", "Job": "engine", "EngineError": "engine",
     "Fabric": "fabric", "FabricError": "fabric", "Link": "fabric",
     "Transfer": "fabric",
+    "Topology": "topology", "TopologyError": "topology",
+    "single_switch": "topology", "spine_leaf": "topology",
     # hardware model + middleware
     "V5E": "hw", "HardwareModel": "hw",
     "KVStore": "kvstore",
@@ -53,6 +55,8 @@ _EXPORTS: Dict[str, str] = {
     "CongestionAwarePromotion": "policy", "Policy1": "policy",
     "Policy2": "policy", "StaticPlacement": "policy", "Tier": "policy",
     "make_policy": "policy",
+    "DirectoryHomePolicy": "policy", "PinnedHome": "policy",
+    "StripedHome": "policy",
     "LRUTier": "pool", "SharedPool": "pool",
     "SlabAllocator": "slab", "SlabPtr": "slab",
     # async op queue

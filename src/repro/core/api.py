@@ -39,6 +39,7 @@ from repro.core.emucxl import (
     EmuCXL,
     EmuCXLError,
 )
+from repro.core.fabric import Fabric
 from repro.core.handle import Buffer, HandleTable, StaleHandleError
 from repro.core.hw import V5E, HardwareModel
 from repro.core.policy import Policy1, PromotionPolicy
@@ -74,6 +75,12 @@ class CXLSession:
     (it is handed to the underlying ``EmuCXL``), while ``promotion`` is the
     session-wide default the middleware (KV store, paged KV pool) picks up when
     not given an explicit policy.
+
+    ``topology`` (core/topology.py) declares the fabric's shape — e.g.
+    ``spine_leaf(leaves=2, spines=2)`` — and the session builds its own
+    ``Fabric`` over it; mutually exclusive with ``fabric``, which hands in a
+    pre-built (possibly shared) fabric instead. With a topology, ``num_hosts``
+    defaults to the topology's host count rather than 1.
     """
 
     def __init__(
@@ -82,8 +89,9 @@ class CXLSession:
         remote_capacity: Optional[int] = None,
         *,
         device=None,
-        num_hosts: int = 1,
+        num_hosts: Optional[int] = None,
         fabric=None,
+        topology=None,
         host_quota=None,
         placement=None,
         promotion: Optional[PromotionPolicy] = None,
@@ -91,6 +99,16 @@ class CXLSession:
         lib: Optional[EmuCXL] = None,
         _initialize: bool = True,
     ):
+        if topology is not None:
+            if fabric is not None:
+                raise EmuCXLError(
+                    "pass either fabric= (a pre-built Fabric) or topology= "
+                    "(a shape for the session to build one from), not both")
+            fabric = Fabric(hw=hw, topology=topology)
+            if num_hosts is None:
+                num_hosts = fabric.num_hosts
+        if num_hosts is None:
+            num_hosts = 1
         self._lib = lib if lib is not None else EmuCXL(hw)
         self._owns_lib = _initialize
         self._table = HandleTable()
@@ -212,7 +230,8 @@ class CXLSession:
     def share(self, size: int, host: int = 0, page_bytes: int = 4096,
               writers=None, consistency: str = "eager",
               wc_capacity: Optional[int] = DEFAULT_WC_CAPACITY,
-              race_detect: Optional[str] = None
+              race_detect: Optional[str] = None,
+              home=None
               ) -> SharedSegment:
         """Create a hardware-coherent shared segment (core/coherence.py).
 
@@ -228,11 +247,18 @@ class CXLSession:
 
         `race_detect` ("off"/"warn"/"raise", default: resolve from
         ``EMUCXL_CHECK=race``) arms the happens-before race detector on
-        release segments — see core/race.py and docs/consistency-model.md."""
+        release segments — see core/race.py and docs/consistency-model.md.
+
+        `home` (a ``DirectoryHomePolicy``, e.g. ``StripedHome()``) shards the
+        segment's directory across pool ports: each page's protocol messages
+        are charged to that page's *home* port's route instead of the
+        segment's backing port. ``None`` keeps the directory on the backing
+        port."""
         with self._lib._lock:
             self._check_open()
             return self._lib.share(size, host, page_bytes, writers,
-                                   consistency, wc_capacity, race_detect)
+                                   consistency, wc_capacity, race_detect,
+                                   home)
 
     def attach(self, segment: SharedSegment, host: int = 0) -> Buffer:
         """Map `segment` for `host`; returns a Buffer over the shared bytes.

@@ -350,7 +350,8 @@ class SharedSegment:
                  home_host: int, port: int, sid: Optional[int] = None,
                  consistency: str = EAGER,
                  wc_capacity: Optional[int] = DEFAULT_WC_CAPACITY,
-                 race_detect: Optional[str] = None):
+                 race_detect: Optional[str] = None,
+                 home: Optional[object] = None):
         if page_bytes <= 0:
             raise CoherenceError(f"invalid page_bytes {page_bytes}")
         if consistency not in _CONSISTENCY_MODES:
@@ -374,6 +375,13 @@ class SharedSegment:
         self.backing_addr = backing_addr
         self.home_host = home_host
         self.port = port
+        # Directory home-node placement (core/policy.py DirectoryHomePolicy):
+        # None keeps every page's directory home on the segment's own backing
+        # port — the pre-sharding behavior. A policy shards the directory by
+        # page, so protocol messages (RFO fetches, invalidations, writebacks,
+        # fence drains) are charged over the route to each page's *own* home
+        # switch port instead of all converging on one.
+        self.home = home
         self.consistency = consistency
         self.wc_capacity = wc_capacity
         self.directory = Directory(self.num_pages)
@@ -455,12 +463,25 @@ class SharedSegment:
         pending[page] = None
 
     # ------------------------------------------------------------------ protocol
-    def _path(self, fabric, host: int) -> Tuple[str, ...]:
-        """Fabric route between `host`'s cache and this segment's pool port.
+    def home_port(self, page: int, pool_ports: Optional[int] = None) -> int:
+        """The pool port owning `page`'s directory entry (its *home node*).
+
+        With no ``home`` policy every page homes on the segment's backing
+        port. `pool_ports` (the fabric's count) lets a sharding policy spread
+        pages across every port of the topology, not just the backing one."""
+        if self.home is None:
+            return self.port
+        ports = pool_ports if pool_ports is not None else self.port + 1
+        return self.home.home_port(self.sid, page, ports)
+
+    def _path(self, fabric, host: int, page: int) -> Tuple[str, ...]:
+        """Fabric route between `host`'s cache and `page`'s home pool port.
 
         Without a fabric the path is empty — the message is still emitted so
         the caller can charge the uncontended hw-constant fallback for it."""
-        return fabric.pool_path(host, self.port) if fabric is not None else ()
+        if fabric is None:
+            return ()
+        return fabric.pool_path(host, self.home_port(page, fabric.pool_ports))
 
     # ------------------------------------------------------------------ tracing
     def _observed_epoch(self, page: int):
@@ -526,7 +547,8 @@ class SharedSegment:
                 self._bump(journal, "writebacks")
                 self._bump(journal, "bytes_moved", self.page_bytes)
                 msgs.append(CoherenceMsg(
-                    self._path(fabric, owner), self.page_bytes, "forward"))
+                    self._path(fabric, owner, page), self.page_bytes,
+                    "forward"))
                 self._set(journal, page, owner, SHARED)
             else:
                 # A clean exclusive peer silently downgrades (its copy stays
@@ -536,7 +558,7 @@ class SharedSegment:
                         self._set(journal, page, peer, SHARED)
             self._bump(journal, "bytes_moved", self.page_bytes)
             msgs.append(CoherenceMsg(
-                self._path(fabric, host), self.page_bytes, "fetch"))
+                self._path(fabric, host, page), self.page_bytes, "fetch"))
             # Sole reader lands in E (upgradeable without an RFO); any company
             # means S.
             others = any(h != host for h in d.holders(page))
@@ -568,18 +590,19 @@ class SharedSegment:
                 self._bump(journal, "writebacks")
                 self._bump(journal, "bytes_moved", self.page_bytes)
                 msgs.append(CoherenceMsg(
-                    self._path(fabric, peer), self.page_bytes, "writeback"))
+                    self._path(fabric, peer, page), self.page_bytes,
+                    "writeback"))
             self._bump(journal, "invalidations")
             self._bump(journal, "msg_bytes", MSG_BYTES)
             msgs.append(CoherenceMsg(
-                self._path(fabric, peer), MSG_BYTES, "invalidate"))
+                self._path(fabric, peer, page), MSG_BYTES, "invalidate"))
             self._set(journal, page, peer, None)
         if st is None:
             # Read-for-ownership: the writer needs the page's current bytes
             # before modifying part of it.
             self._bump(journal, "bytes_moved", self.page_bytes)
             msgs.append(CoherenceMsg(
-                self._path(fabric, host), self.page_bytes, "fetch"))
+                self._path(fabric, host, page), self.page_bytes, "fetch"))
         self._set(journal, page, host, MODIFIED)
 
     def plan_write(self, fabric, host: int, offset: int, n: int,
@@ -692,7 +715,8 @@ class SharedSegment:
                 self._bump(journal, "writebacks")
                 self._bump(journal, "bytes_moved", self.page_bytes)
                 msgs.append(CoherenceMsg(
-                    self._path(fabric, host), self.page_bytes, "writeback"))
+                    self._path(fabric, host, page), self.page_bytes,
+                    "writeback"))
             self._set(journal, page, host, None)
         return msgs
 
@@ -708,6 +732,8 @@ class SharedSegment:
             "num_pages": self.num_pages,
             "home_host": self.home_host,
             "port": self.port,
+            "home": (None if self.home is None
+                     else type(self.home).__name__),
             "consistency": self.consistency,
             "wc_capacity": self.wc_capacity,
             "race_detect": self.race_detect,

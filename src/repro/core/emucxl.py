@@ -878,7 +878,8 @@ class EmuCXL:
               writers: Optional[Sequence[int]] = None,
               consistency: str = EAGER,
               wc_capacity: Optional[int] = DEFAULT_WC_CAPACITY,
-              race_detect: Optional[str] = None
+              race_detect: Optional[str] = None,
+              home: Optional[object] = None
               ) -> SharedSegment:
         """Create a hardware-coherent shared segment of `size` bytes.
 
@@ -902,6 +903,13 @@ class EmuCXL:
         ``RaceError`` at the conflicting access, ``"off"`` disables it. The
         default ``None`` defers to the environment — ``EMUCXL_CHECK=race``
         means ``"raise"``; an explicit value always wins over the env.
+
+        `home` optionally shards the segment's directory across pool ports: a
+        ``DirectoryHomePolicy`` (core/policy.py — e.g. ``StripedHome``) maps
+        each page to the pool port *homing* its directory entry, and every
+        protocol message for that page is charged over the fabric route to
+        its home instead of the segment's backing port. Default ``None``
+        keeps the whole directory on the backing port.
         """
         with self._lock:
             self._require_init()
@@ -951,7 +959,7 @@ class EmuCXL:
                                     self._allocs[backing_addr].port,
                                     sid=self._next_sid, consistency=consistency,
                                     wc_capacity=wc_capacity,
-                                    race_detect=race_detect)
+                                    race_detect=race_detect, home=home)
             except Exception:
                 # A failed share must not leak: pay the policy weight back AND
                 # release the backing charge if the alloc had already landed.
@@ -1031,15 +1039,24 @@ class EmuCXL:
         with self._lock:
             return dict(self._segments)
 
-    def attach_tracer(self, tracer) -> None:
+    def attach_tracer(self, tracer, transfers: bool = False) -> None:
         """Attach a ``TraceRecorder`` (repro.core.trace) — or ``None`` to
         detach — capturing a linearized event trace of every coherence plan,
         queue flush, and engine job. Propagates to all live segments;
-        segments shared later inherit it at creation."""
+        segments shared later inherit it at creation.
+
+        ``transfers=True`` additionally propagates the recorder to the fabric,
+        which then emits per-transfer ``transfer-begin`` / ``transfer-complete``
+        (resolved route, bytes, port-queue wait) and ``transfer-drop`` events.
+        Off by default: every sync DMA becomes two extra events, which changes
+        the trace's linearized shape for tooling that replays plan-level
+        events only."""
         with self._lock:
             self.tracer = tracer
             for seg in self._segments.values():
                 seg.tracer = tracer
+            if self.fabric is not None:
+                self.fabric.tracer = tracer if transfers else None
 
     def coherence_stats(self) -> Dict[str, object]:
         """Fleet-wide + per-segment protocol counters (the coherence analogue

@@ -162,7 +162,11 @@ class SimulationEngine:
     def _begin(self, job: Job) -> None:
         job.began_at = self.now
         if self.tracer is not None:
-            self.tracer.emit("job-begin", label=job.label, at=self.now)
+            # The resolved routes (ordered link names) were pinned at plan
+            # time by the topology's router; recording them here is what lets
+            # a trace explain *where* the modeled time of this job went.
+            self.tracer.emit("job-begin", label=job.label, at=self.now,
+                             routes=tuple(tuple(p) for p, _ in job.routes))
         for path, nbytes in job.routes:
             tr = self.fabric.begin(path, nbytes)
             job.transfers.append(tr)
@@ -174,7 +178,11 @@ class SimulationEngine:
     def _complete(self, job: Job) -> None:
         job.completed_at = self.now
         if self.tracer is not None:
-            self.tracer.emit("job-complete", label=job.label, at=self.now)
+            # Aggregate port-queue wait across the job's transfers: nonzero
+            # only when a bounded switch port backpressured one of them.
+            self.tracer.emit("job-complete", label=job.label, at=self.now,
+                             queue_wait=sum(t.queue_wait
+                                            for t in job.transfers))
         for dep in job._dependents:
             dep._deps_remaining -= 1
             if dep._deps_remaining == 0:

@@ -183,6 +183,57 @@ class SharingAwarePlacement:
             self._port_writer_weight.pop(port, None)
 
 
+# ------------------------------------------------------- directory home nodes
+class DirectoryHomePolicy(Protocol):
+    """Assigns each coherent page a *home* pool port for its directory entry.
+
+    Every directory message a page generates — RFO fetch, invalidation,
+    dirty writeback, fence drain — is charged over the fabric route to that
+    page's home port (``SharedSegment.home_port``). Without a policy all of a
+    segment's pages home on its backing port, which makes that one port the
+    directory-bandwidth bottleneck for the whole segment; a sharding policy
+    spreads the protocol load across the topology's ports.
+    """
+
+    name: str
+
+    def home_port(self, sid: int, page: int, pool_ports: int) -> int: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class PinnedHome:
+    """Every page of every segment homes on one fixed port — the
+    all-on-one-port baseline the sharding benchmarks compare against."""
+
+    port: int = 0
+    name: str = "pinned-home"
+
+    def home_port(self, sid: int, page: int, pool_ports: int) -> int:
+        if not 0 <= self.port < pool_ports:
+            raise ValueError(
+                f"pinned home port {self.port} outside 0..{pool_ports - 1}")
+        return self.port
+
+
+@dataclasses.dataclass(frozen=True)
+class StripedHome:
+    """Shard the directory round-robin: `stride` consecutive pages per port.
+
+    The segment id offsets the stripe so independent segments don't all start
+    hammering port 0 — the same page of two segments lands on different homes.
+    """
+
+    stride: int = 1
+    name: str = "striped-home"
+
+    def __post_init__(self):
+        if self.stride < 1:
+            raise ValueError(f"invalid stride {self.stride}; need >= 1")
+
+    def home_port(self, sid: int, page: int, pool_ports: int) -> int:
+        return (page // self.stride + sid) % pool_ports
+
+
 @dataclasses.dataclass
 class CongestionAwarePromotion:
     """Wrap a promotion policy with a live-occupancy gate on the owner's uplink.

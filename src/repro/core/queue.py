@@ -354,6 +354,11 @@ class OpQueue:
             new_rec = lib._allocs[new_addr]
             plan = _Plan("migrate", buf=op.buf, n=rec.size, node=op.node,
                          staged_addr=new_addr)
+            # Route resolution happens HERE, at plan time: the topology router
+            # (fabric.pool_path -> Topology.route) pins the ordered link path —
+            # including the ECMP spine choice on multi-path fabrics — before
+            # the event engine runs, so a batch's routes are deterministic
+            # regardless of execution interleaving.
             path = lib._fabric_path(rec, op.node, target_host, new_rec.port)
             if path is not None:
                 plan.routes.append((path, rec.size))

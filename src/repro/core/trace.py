@@ -33,8 +33,14 @@ KINDS = (
     "detach",
     "op",            # queue flush submitted an op; detail: op, streams, mark
     "rollback",      # a flush failed and the journal rolled back to `mark`
-    "job-begin",     # engine started a timeline job; detail: label, at
-    "job-complete",  # detail: label, at
+    "job-begin",     # engine started a timeline job; detail: label, at,
+    #                  routes=(ordered link-name tuples resolved at plan time)
+    "job-complete",  # detail: label, at, queue_wait (summed port-queue wait
+    #                  across the job's transfers)
+    "transfer-begin",     # fabric registered a DMA; detail: tid, route, nbytes, at
+    "transfer-complete",  # detail: tid, route, queue_wait, at
+    "transfer-drop",      # arrival beyond a port's bounded FIFO depth;
+    #                       detail: tid, link, depth, at (lossless: it still queues)
 )
 
 

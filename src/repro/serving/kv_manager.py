@@ -62,7 +62,7 @@ class SharedPrefixKV:
     def __init__(self, session: CXLSession, num_layers: int, num_pages: int,
                  page_size: int, kv_heads: int, head_dim: int,
                  dtype=jnp.float32, home_host: int = 0,
-                 consistency: str = "release"):
+                 consistency: str = "release", home=None):
         self.L, self.page, self.K, self.hd = num_layers, page_size, kv_heads, head_dim
         self.dtype = dtype
         self.num_pages = num_pages
@@ -71,10 +71,13 @@ class SharedPrefixKV:
         self.prefix_tokens = num_pages * page_size
         self.session = session
         self.home_host = home_host
+        # `home` (a DirectoryHomePolicy, e.g. StripedHome) shards the prefix
+        # directory across pool ports, so a wide prefix's import/invalidation
+        # traffic isn't all charged down one port's uplink.
         self.segment = session.share(
             num_pages * self.page_bytes, host=home_host,
             page_bytes=self.page_bytes, writers=[home_host],
-            consistency=consistency,
+            consistency=consistency, home=home,
         )
         self._maps: Dict[int, object] = {}     # host -> attachment Buffer
         self.token_ids: Optional[List[int]] = None   # set by publish()

@@ -59,12 +59,19 @@ buf.detach()
 buf.read(0, 64)
 """
 
+BAD_LINK_NAME = """
+stats = fabric.stats()
+busy = stats["pool1"]["busy_time"]
+occupancy = fabric.link_occupancy("host0")
+"""
+
 SEEDED_BAD = [
     ("EMU001", BAD_V1),
     ("EMU002", BAD_RELEASE_WRITE),
     ("EMU003", BAD_ACQUIRE_EAGER),
     ("EMU004", BAD_JOURNAL),
     ("EMU005", BAD_USE_AFTER_DETACH),
+    ("EMU006", BAD_LINK_NAME),
 ]
 
 
@@ -228,6 +235,38 @@ rest.append(1)
 """
     findings = lint_source(source, "fixture.py")
     assert [f.rule for f in findings] == ["EMU005"]
+
+
+# ------------------------------------------------------------ EMU006 link names
+def test_link_name_good_twin_uses_the_resolution_api():
+    """The same lookups through host_link()/pool_link() are clean — and so
+    are strings that merely *mention* a link name inside a longer sentence."""
+    source = """
+stats = fabric.stats()
+busy = stats[fabric.pool_link(1)]["busy_time"]
+occupancy = fabric.link_occupancy(fabric.host_link(0))
+msg = "traffic on host0 was heavy today"
+"""
+    assert lint_source(source, "fixture.py") == []
+
+
+def test_link_name_rule_fires_on_trunk_and_switch_names():
+    source = """
+spine = route_of("leaf0-spine1")
+leaf = "leaf1"
+"""
+    findings = lint_source(source, "fixture.py")
+    assert [f.rule for f in findings] == ["EMU006", "EMU006"]
+
+
+def test_link_namers_are_exempt_everyone_else_is_not():
+    """fabric.py / topology.py mint the names; the identical source under any
+    other path is a finding."""
+    source = 'LEGACY_DEFAULT = "switch0"\n'
+    for exempt in sorted(lint_emucxl.LINK_NAMERS):
+        assert lint_source(source, exempt) == []
+    assert rules_of(lint_source(source, "src/repro/core/queue.py")) \
+        == ["EMU006"]
 
 
 # --------------------------------------------------------------------- pragmas

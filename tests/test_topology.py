@@ -1,0 +1,411 @@
+"""Topology layer: builder, routing/ECMP, port queues, sharded directory homes.
+
+Covers the pluggable-fabric refactor end to end: the ``Topology`` graph
+builder and its router (``core/topology.py``), the fabric's bounded per-port
+FIFO queues with exact backpressure arithmetic, the ``least_loaded_port``
+tie-break contract placement policies rely on, the per-transfer trace events
+(resolved route + port-queue wait), ``CXLSession(topology=...)`` construction,
+and ``DirectoryHomePolicy`` sharding of coherence traffic across pool ports.
+"""
+
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.api import CXLSession, WriteOp
+from repro.core.emucxl import EmuCXLError
+from repro.core.fabric import Fabric, FabricError
+from repro.core.policy import PinnedHome, StripedHome
+from repro.core.topology import (
+    Topology,
+    TopologyError,
+    host_node,
+    pool_node,
+    single_switch,
+    spine_leaf,
+)
+from repro.core.trace import TraceRecorder
+
+
+# ------------------------------------------------------------------- builder
+class TestBuilder:
+    def test_single_switch_reproduces_the_legacy_shape(self):
+        topo = single_switch(num_hosts=3, pool_ports=2).validate()
+        assert topo.num_hosts == 3 and topo.pool_ports == 2
+        assert [topo.host_link(i) for i in range(3)] \
+            == [f"host{i}" for i in range(3)]
+        assert [topo.pool_link(j) for j in range(2)] \
+            == [f"pool{j}" for j in range(2)]
+        # legacy link order: hosts first, then pool ports
+        assert list(topo.links) == ["host0", "host1", "host2",
+                                    "pool0", "pool1"]
+        # legacy two-link paths, and the degenerate same-host single link
+        assert topo.route(host_node(1), pool_node(0)) == ("host1", "pool0")
+        assert topo.route(host_node(0), host_node(2)) == ("host0", "host2")
+        assert topo.route(host_node(1), host_node(1)) == ("host1",)
+
+    def test_builder_rejects_malformed_graphs(self):
+        topo = Topology()
+        topo.add_switch("s")
+        with pytest.raises(TopologyError, match="duplicate switch"):
+            topo.add_switch("s")
+        topo.add_host("s")
+        with pytest.raises(TopologyError, match="unknown switch"):
+            topo.add_host("nope")
+        from repro.core.topology import LinkSpec
+        with pytest.raises(TopologyError, match="duplicate link"):
+            topo.add_link(LinkSpec("host0", "a", "b"))
+        with pytest.raises(TopologyError, match="self-loop"):
+            topo.add_link(LinkSpec("loop", "a", "a"))
+        with pytest.raises(TopologyError, match="queue_capacity"):
+            topo.add_link(LinkSpec("bad", "a", "b", queue_capacity=0))
+        with pytest.raises(TopologyError, match="queue_depth"):
+            topo.add_link(LinkSpec("bad2", "a", "b", queue_depth=0))
+
+    def test_validate_requires_endpoints_and_connectivity(self):
+        with pytest.raises(TopologyError, match="need >= 1"):
+            Topology().validate()
+        topo = Topology()
+        topo.add_switch("a")
+        topo.add_switch("b")          # never trunked to "a"
+        topo.add_host("a")
+        topo.add_pool_port("b")
+        with pytest.raises(TopologyError, match="disconnected"):
+            topo.validate()
+        with pytest.raises(FabricError, match="disconnected"):
+            Fabric(topology=topo)     # the fabric re-raises as FabricError
+
+    def test_spine_leaf_shape(self):
+        topo = spine_leaf(leaves=2, spines=2, hosts_per_leaf=2,
+                          pool_ports_per_leaf=1).validate()
+        assert topo.num_hosts == 4 and topo.pool_ports == 2
+        assert topo.switches == ("leaf0", "leaf1", "spine0", "spine1")
+        # same-leaf traffic never touches a trunk
+        same = topo.route(host_node(0), pool_node(0))
+        assert same == (topo.host_link(0), topo.pool_link(0))
+        # cross-leaf traffic is exactly host uplink, two trunks, pool port
+        cross = topo.route(host_node(0), pool_node(1))
+        assert len(cross) == 4
+        assert cross[0] == topo.host_link(0)
+        assert cross[-1] == topo.pool_link(1)
+        assert all("-" in trunk for trunk in cross[1:3])
+
+
+# ------------------------------------------------------------------- routing
+class TestRouting:
+    def test_ecmp_is_deterministic_and_hash_pinned(self):
+        topo = spine_leaf(leaves=2, spines=4)
+        src, dst = host_node(0), pool_node(1)
+        candidates = topo.equal_cost_paths(src, dst)
+        assert len(candidates) == 4      # one per spine
+        assert candidates == sorted(candidates)
+        expect = candidates[zlib.crc32(f"{src}->{dst}".encode())
+                            % len(candidates)]
+        assert topo.route(src, dst) == expect
+        assert topo.route(src, dst) == expect      # cached, still identical
+
+    def test_ecmp_spreads_distinct_flows_across_spines(self):
+        topo = spine_leaf(leaves=2, spines=2, hosts_per_leaf=4,
+                          pool_ports_per_leaf=2)
+        spines_used = set()
+        for i in range(4):               # leaf0 hosts -> leaf1 ports
+            for j in (2, 3):
+                path = topo.route(host_node(i), pool_node(j))
+                spines_used.add(path[1])
+        assert len(spines_used) > 1, "every flow hashed onto one spine"
+
+    def test_ecmp_false_pins_every_tie_to_the_first_candidate(self):
+        topo = spine_leaf(leaves=2, spines=2, ecmp=False)
+        for i in range(2):
+            for j in range(2):
+                path = topo.route(host_node(i), pool_node(j))
+                assert path == topo.equal_cost_paths(
+                    host_node(i), pool_node(j))[0]
+
+    def test_route_raises_on_unknown_nodes(self):
+        topo = single_switch(1, 1)
+        with pytest.raises(TopologyError, match="unknown node"):
+            topo.route(host_node(5), pool_node(0))
+
+    def test_multi_hop_path_latency_charges_one_switch_per_hop(self):
+        lat, swl = 100e-9, 10e-9
+        topo = spine_leaf(leaves=2, spines=1, link_latency=lat)
+        fab = Fabric(topology=topo, switch_latency=swl)
+        cross = fab.pool_path(0, 1)
+        assert len(cross) == 4
+        assert fab.path_latency(cross) == pytest.approx(4 * lat + 3 * swl)
+        same = fab.pool_path(0, 0)
+        assert fab.path_latency(same) == pytest.approx(2 * lat + 1 * swl)
+        # degenerate same-host path still pays one switch traversal (legacy)
+        assert fab.path_latency(fab.host_path(0, 0)) \
+            == pytest.approx(lat + swl)
+
+
+# --------------------------------------------------------------- port queues
+def _queued_fabric(capacity=1, depth=None, bw=100.0):
+    topo = single_switch(1, 1, queue_capacity=capacity, queue_depth=depth)
+    return Fabric(topology=topo, host_bandwidth=bw, pool_port_bandwidth=bw,
+                  link_latency=0.0, switch_latency=0.0)
+
+
+class TestPortQueues:
+    def test_backpressure_serializes_exactly(self):
+        """capacity=1: the second transfer waits for the first's slot, so each
+        runs alone at full bandwidth — 1s + 1s — instead of sharing (2s each).
+        """
+        fab = _queued_fabric(capacity=1)
+        path = fab.pool_path(0, 0)
+        t0 = fab.begin(path, 100)
+        t1 = fab.begin(path, 100)
+        fab.drain()
+        assert t0.completed_at == pytest.approx(1.0)
+        assert t1.completed_at == pytest.approx(2.0)
+        assert t0.queue_wait == pytest.approx(0.0)
+        assert t1.queue_wait == pytest.approx(1.0)
+        s = fab.stats()[fab.pool_link(0)]
+        assert s["queue_waits"] == 1
+        assert s["queue_wait_time"] == pytest.approx(1.0)
+        assert s["peak_queue_depth"] >= 1
+        assert s["drops"] == 0
+        # the port was busy the whole makespan — serialized, never idle
+        assert s["busy_time"] == pytest.approx(2.0)
+
+    def test_unbounded_queues_share_bandwidth_the_legacy_way(self):
+        fab = _queued_fabric(capacity=None)
+        path = fab.pool_path(0, 0)
+        t0 = fab.begin(path, 100)
+        t1 = fab.begin(path, 100)
+        fab.drain()
+        # equal-share fluid flow: both at bw/2, both complete together
+        assert t0.completed_at == pytest.approx(2.0)
+        assert t1.completed_at == pytest.approx(2.0)
+        s = fab.stats()[fab.pool_link(0)]
+        assert s["queue_waits"] == 0 and s["queue_wait_time"] == 0.0
+
+    def test_fifo_admission_order(self):
+        fab = _queued_fabric(capacity=1)
+        path = fab.pool_path(0, 0)
+        ts = [fab.begin(path, 100) for _ in range(4)]
+        fab.drain()
+        dones = [t.completed_at for t in ts]
+        assert dones == sorted(dones)
+        assert dones[-1] == pytest.approx(4.0)
+        waits = [t.queue_wait for t in ts]
+        assert waits == pytest.approx([0.0, 1.0, 2.0, 3.0])
+
+    def test_bounded_depth_counts_wouldbe_drops_but_still_delivers(self):
+        fab = _queued_fabric(capacity=1, depth=1)
+        path = fab.pool_path(0, 0)
+        ts = [fab.begin(path, 100) for _ in range(3)]
+        fab.drain()
+        # lossless: everything completed even past the FIFO bound
+        assert all(t.completed_at is not None for t in ts)
+        s = fab.stats()[fab.pool_link(0)]
+        assert s["drops"] >= 1
+        assert s["peak_queue_depth"] >= 2
+
+    def test_no_cross_port_head_of_line_blocking(self):
+        """A transfer stalled on a full pool port must not block a later
+        arrival whose own ports have room (virtual-output queueing)."""
+        topo = single_switch(2, 2, queue_capacity=1)
+        fab = Fabric(topology=topo, host_bandwidth=100.0,
+                     pool_port_bandwidth=100.0, link_latency=0.0,
+                     switch_latency=0.0)
+        fab.begin(fab.pool_path(0, 0), 100)        # holds pool0 + host0
+        blocked = fab.begin(fab.pool_path(0, 0), 100)   # queued behind it
+        free = fab.begin(fab.pool_path(1, 1), 100)      # disjoint ports
+        fab.drain()
+        assert free.queue_wait == pytest.approx(0.0)
+        assert free.completed_at == pytest.approx(1.0)
+        assert blocked.completed_at == pytest.approx(2.0)
+
+    def test_cancel_of_a_flowing_transfer_admits_queued_work(self):
+        fab = _queued_fabric(capacity=1)
+        path = fab.pool_path(0, 0)
+        t0 = fab.begin(path, 100)
+        t1 = fab.begin(path, 100)
+        fab.cancel(t0)
+        fab.drain(t1)
+        assert t1.completed_at == pytest.approx(1.0)
+
+    def test_engine_co_simulation_respects_port_queues(self):
+        """Queued ports under the discrete-event engine: jobs on one
+        capacity-1 port serialize; next_event_time stays consistent."""
+        from repro.core.engine import SimulationEngine
+        fab = _queued_fabric(capacity=1)
+        eng = SimulationEngine(fab)
+        path = fab.pool_path(0, 0)
+        a = eng.job([(path, 100)], label="a")
+        b = eng.job([(path, 100)], label="b")
+        assert a is not None and b is not None
+        end = eng.run()
+        assert end == pytest.approx(2.0)
+
+
+# ----------------------------------------------- least_loaded_port (ISSUE fix)
+class TestLeastLoadedPort:
+    def test_idle_fabric_ties_break_to_the_lowest_index(self):
+        fab = Fabric(num_hosts=1, pool_ports=4)
+        assert fab.least_loaded_port() == 0
+
+    def test_tie_breaking_is_by_port_index_among_equally_loaded(self):
+        fab = Fabric(num_hosts=2, pool_ports=3)
+        fab.begin(fab.pool_path(0, 0), 1024)    # pool0 loaded
+        # pool1 and pool2 tie at zero -> the lower index wins, deterministically
+        assert fab.least_loaded_port() == 1
+        fab.begin(fab.pool_path(1, 1), 1024)
+        assert fab.least_loaded_port() == 2
+        fab.drain()
+        assert fab.least_loaded_port() == 0
+
+
+# ------------------------------------------------------------ transfer traces
+class TestTransferTrace:
+    def test_fabric_emits_route_and_queue_wait(self):
+        fab = _queued_fabric(capacity=1)
+        fab.tracer = tracer = TraceRecorder()
+        path = fab.pool_path(0, 0)
+        fab.begin(path, 100)
+        fab.begin(path, 100)
+        fab.drain()
+        begins = tracer.events_of("transfer-begin")
+        dones = tracer.events_of("transfer-complete")
+        assert [ev.get("route") for ev in begins] == [path, path]
+        assert [ev.get("nbytes") for ev in begins] == [100, 100]
+        assert [ev.get("queue_wait") for ev in dones] \
+            == pytest.approx([0.0, 1.0])
+        assert [ev.get("at") for ev in dones] == pytest.approx([1.0, 2.0])
+
+    def test_drop_events_name_the_link_and_depth(self):
+        fab = _queued_fabric(capacity=1, depth=1)
+        fab.tracer = tracer = TraceRecorder()
+        path = fab.pool_path(0, 0)
+        for _ in range(3):
+            fab.begin(path, 100)
+        fab.drain()
+        drops = tracer.events_of("transfer-drop")
+        assert drops, "bounded FIFO overflow must trace a drop"
+        assert all(ev.get("link") in path for ev in drops)
+        assert all(ev.get("depth") >= 2 for ev in drops)
+
+    def test_attach_tracer_transfers_flag_propagates_to_the_fabric(self):
+        with CXLSession(1 << 22, 1 << 24,
+                        fabric=Fabric(num_hosts=1, pool_ports=1)) as sess:
+            tracer = TraceRecorder()
+            sess.lib.attach_tracer(tracer, transfers=True)
+            buf = sess.alloc(4096)
+            buf.write(np.zeros(4096, np.uint8))
+            begins = tracer.events_of("transfer-begin")
+            assert begins and begins[0].get("route") \
+                == sess.fabric.pool_path(0, 0)
+            # detaching resets the fabric's recorder too
+            sess.lib.attach_tracer(None)
+            assert sess.fabric.tracer is None
+
+    def test_job_begin_records_plan_time_routes(self):
+        with CXLSession(1 << 22, 1 << 24,
+                        fabric=Fabric(num_hosts=1, pool_ports=1)) as sess:
+            tracer = TraceRecorder()
+            sess.lib.attach_tracer(tracer)
+            buf = sess.alloc(8192)
+            sess.submit(WriteOp(buf, np.zeros(8192, np.uint8)))
+            sess.flush()
+            begins = tracer.events_of("job-begin")
+            routes = [r for ev in begins for r in ev.get("routes")]
+            assert sess.fabric.pool_path(0, 0) in routes
+
+
+# ------------------------------------------------------- session over topology
+class TestSessionTopology:
+    def test_session_builds_its_fabric_from_the_topology(self):
+        topo = spine_leaf(leaves=2, spines=2)
+        with CXLSession(1 << 22, 1 << 24, topology=topo) as sess:
+            assert sess.fabric.topology is topo
+            assert sess.num_hosts == topo.num_hosts == 2
+            assert sess.fabric.pool_ports == 2
+
+    def test_fabric_and_topology_are_mutually_exclusive(self):
+        with pytest.raises(EmuCXLError, match="not both"):
+            CXLSession(1 << 22, 1 << 24,
+                       fabric=Fabric(num_hosts=1, pool_ports=1),
+                       topology=single_switch(1, 1))
+
+    def test_cross_leaf_traffic_crosses_the_trunks(self):
+        topo = spine_leaf(leaves=2, spines=2)
+        with CXLSession(1 << 22, 1 << 24, topology=topo) as sess:
+            # host 1 hangs off leaf1; the default placement port 0 off leaf0
+            buf = sess.alloc(1 << 16, host=1)
+            buf.write(np.zeros(1 << 16, np.uint8))
+            stats = sess.fabric.stats()
+            cross = sess.fabric.pool_path(1, 0)
+            trunk_bytes = sum(stats[n]["bytes_carried"] for n in cross[1:3])
+            assert len(cross) == 4
+            assert trunk_bytes >= 1 << 16
+            # same-leaf control: host 0 -> port 0 never touches a trunk
+            assert len(sess.fabric.pool_path(0, 0)) == 2
+
+
+# ------------------------------------------------------ directory home shards
+class TestDirectoryHomes:
+    def _port_bytes(self, sess):
+        stats = sess.fabric.stats()
+        return [stats[sess.fabric.pool_link(j)]["bytes_carried"]
+                for j in range(sess.fabric.pool_ports)]
+
+    def _share_and_write(self, home, pages=8):
+        sess = CXLSession(1 << 22, 1 << 24, num_hosts=2,
+                          fabric=Fabric(num_hosts=2, pool_ports=4))
+        with sess:
+            seg = sess.share(pages * 4096, host=0, page_bytes=4096,
+                             writers=[0, 1], home=home)
+            w = sess.attach(seg, host=0)
+            r = sess.attach(seg, host=1)
+            for p in range(pages):
+                w.write(np.full(4096, p % 251, np.uint8), offset=p * 4096)
+                r.read(p * 4096, 4096)       # fetch -> charged to p's home
+            per_port = self._port_bytes(sess)
+            w.detach()
+            r.detach()
+            sess.destroy(seg)
+        return seg, per_port
+
+    def test_default_home_is_the_backing_port(self):
+        seg, per_port = self._share_and_write(home=None)
+        loaded = [j for j, b in enumerate(per_port) if b > 0]
+        assert loaded == [seg.port]
+        assert seg.describe()["home"] is None
+
+    def test_striped_home_spreads_directory_traffic_across_ports(self):
+        seg, per_port = self._share_and_write(home=StripedHome())
+        assert sum(1 for b in per_port if b > 0) == 4, per_port
+        assert seg.describe()["home"] == "StripedHome"
+        # strictly less concentrated than all-home-on-one-port
+        _, pinned = self._share_and_write(home=PinnedHome(0))
+        assert max(per_port) < max(pinned)
+
+    def test_home_port_mapping_is_the_policy_verbatim(self):
+        with CXLSession(1 << 22, 1 << 24,
+                        fabric=Fabric(num_hosts=1, pool_ports=4)) as sess:
+            seg = sess.share(8 * 4096, page_bytes=4096, home=StripedHome())
+            for page in range(8):
+                assert seg.home_port(page, 4) \
+                    == StripedHome().home_port(seg.sid, page, 4)
+            sess.destroy(seg)
+
+    def test_pinned_home_rejects_out_of_range_ports(self):
+        with pytest.raises(ValueError, match="outside"):
+            PinnedHome(7).home_port(0, 0, 4)
+        with pytest.raises(ValueError, match="stride"):
+            StripedHome(stride=0)
+
+    def test_kv_manager_passes_home_through(self):
+        jnp = pytest.importorskip("jax.numpy")
+        from repro.serving.kv_manager import SharedPrefixKV
+        with CXLSession(1 << 22, 1 << 26, num_hosts=2,
+                        fabric=Fabric(num_hosts=2, pool_ports=2)) as sess:
+            kv = SharedPrefixKV(sess, num_layers=1, num_pages=4, page_size=8,
+                                kv_heads=1, head_dim=4, dtype=jnp.float32,
+                                home=StripedHome())
+            assert kv.segment.home is not None
+            assert type(kv.segment.home).__name__ == "StripedHome"

@@ -34,6 +34,11 @@ EMU005   use-after-detach   a data-plane call on a stale handle in straight-line
                             (``a, b = b, a``), plain aliasing (``c = b``),
                             annotated/walrus/``for``/``with`` bindings are all
                             tracked — until the name is rebound to a fresh value
+EMU006   link-name          a hard-coded fabric link-name string (``"host0"``,
+                            ``"pool1"``, ``"leaf0-spine1"``) outside
+                            ``core/fabric.py``/``core/topology.py`` — link names
+                            are a topology detail; callers must resolve them via
+                            ``host_link()``/``pool_link()``/``route()``
 =======  =================  ====================================================
 
 Suppression: a trailing ``# emucxl: allow-<slug>`` comment silences that line;
@@ -62,6 +67,11 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 # part of the linted tree.
 V1_SHIM = "src/repro/core/emucxl.py"
 
+# The only modules allowed to spell link names literally: the topology builder
+# mints them and the fabric materializes them. Everyone else must go through
+# the resolution APIs so code survives a topology swap.
+LINK_NAMERS = {"src/repro/core/fabric.py", "src/repro/core/topology.py"}
+
 DEFAULT_TARGETS = ["src", "examples", "benchmarks", "README.md", "docs"]
 
 RULES = {
@@ -70,6 +80,7 @@ RULES = {
     "EMU003": "acquire-eager",
     "EMU004": "journal",
     "EMU005": "use-after-detach",
+    "EMU006": "link-name",
 }
 
 WRITE_METHODS = {"write", "memset"}
@@ -81,6 +92,11 @@ JOURNALED = {"_set", "_bump", "_wc_add", "_wc_remove", "_wc_touch"}
 
 PRAGMA_RE = re.compile(r"#\s*emucxl:\s*(.+?)\s*$")
 FENCE_RE = re.compile(r"^```(\w*)\s*$")
+# Names the single-switch and spine-leaf builders mint: host/pool attachment
+# links, switch names, and trunk links between switches. fullmatch-ed against
+# string constants, so prose mentioning a link name in a sentence never fires.
+LINK_NAME_RE = re.compile(
+    r"(?:host|pool)\d+|(?:leaf|spine|switch)\d+(?:-(?:leaf|spine|switch)\d+)?")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -237,6 +253,15 @@ def analyze_scope(scope: ast.AST, path: str,
         elif isinstance(node, ast.withitem) and node.optional_vars is not None:
             record_bind(node.optional_vars, _OPAQUE,
                         node.context_expr.lineno)
+
+        if isinstance(node, ast.Constant) and isinstance(node.value, str) \
+                and path not in LINK_NAMERS \
+                and LINK_NAME_RE.fullmatch(node.value):
+            findings.append(Finding(
+                path, node.lineno, "EMU006",
+                f"hard-coded link name {node.value!r} — link names are a "
+                f"topology detail; resolve via host_link()/pool_link()/"
+                f"route() so the code survives a topology swap"))
 
         if not isinstance(node, ast.Call):
             continue
