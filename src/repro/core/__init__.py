@@ -68,6 +68,11 @@ _EXPORTS: Dict[str, str] = {
     "RaceDetector": "race", "RaceError": "race", "RaceReport": "race",
     # linearized event traces (core/trace.py, stdlib-only)
     "TraceEvent": "trace", "TraceRecorder": "trace",
+    # plan-time symbolic batch verifier (core/verify.py, stdlib-only)
+    "Diagnostic": "verify", "OpDesc": "verify", "PoolView": "verify",
+    "PreflightError": "verify", "PreflightResult": "verify",
+    "SegmentView": "verify", "fresh_segment_view": "verify",
+    "resolve_preflight_mode": "verify", "verify_batch": "verify",
 }
 
 __all__ = list(_EXPORTS)

@@ -54,6 +54,7 @@ from repro.core.queue import (
     Ticket,
     WriteOp,
 )
+from repro.core.verify import resolve_preflight_mode
 
 __all__ = [
     "CXLSession", "Buffer", "SharedSegment", "StaleHandleError", "as_session",
@@ -97,6 +98,7 @@ class CXLSession:
         promotion: Optional[PromotionPolicy] = None,
         hw: HardwareModel = V5E,
         lib: Optional[EmuCXL] = None,
+        preflight: Optional[str] = None,
         _initialize: bool = True,
     ):
         if topology is not None:
@@ -109,6 +111,12 @@ class CXLSession:
                 num_hosts = fabric.num_hosts
         if num_hosts is None:
             num_hosts = 1
+        if preflight is not None:
+            # Validate eagerly (resolve_preflight_mode raises on bad input)
+            # but store the raw value: None keeps deferring to EMUCXL_CHECK
+            # per flush, like race_detect does per share.
+            resolve_preflight_mode(preflight)
+        self._preflight = preflight
         self._lib = lib if lib is not None else EmuCXL(hw)
         self._owns_lib = _initialize
         self._table = HandleTable()
@@ -383,10 +391,15 @@ class CXLSession:
                 raise
             return tickets[0] if len(tickets) == 1 else tickets
 
-    def flush(self) -> float:
-        """Complete every pending op; returns the batch's modeled makespan."""
+    def flush(self, preflight: Optional[str] = None) -> float:
+        """Complete every pending op; returns the batch's modeled makespan.
+
+        ``preflight`` overrides the session's plan-time batch-verifier mode
+        for this flush only (``"warn" | "raise" | "off"``; ``None`` keeps the
+        session default set by ``CXLSession(preflight=...)``, which itself
+        defers to ``EMUCXL_CHECK=preflight``). See ``repro.core.verify``."""
         self._check_open()
-        return self.queue.flush()
+        return self.queue.flush(preflight=preflight)
 
     @property
     def pending_ops(self) -> int:

@@ -724,6 +724,35 @@ class SharedSegment:
     def sharers(self, page: int) -> List[int]:
         return sorted(self.directory.holders(page))
 
+    def preflight_view(self) -> Dict[str, object]:
+        """Read-only footprint snapshot for the plan-time batch verifier
+        (``repro.core.verify``): geometry, per-host pending WC pages (LRU
+        order), per-host M/E-held pages (writes to these bypass the WC
+        buffer), and the detector's clock/epoch state when one is armed.
+        Every container is freshly built — the verifier can never mutate
+        live directory, WC, stats, or detector state through it."""
+        held: Dict[int, List[int]] = {}
+        for page, entry in self.directory._state.items():
+            for host, st in entry.items():
+                if st in (MODIFIED, EXCLUSIVE):
+                    held.setdefault(host, []).append(page)
+        det = self.detector
+        return {
+            "sid": self.sid,
+            "consistency": self.consistency,
+            "wc_capacity": self.wc_capacity,
+            "page_bytes": self.page_bytes,
+            "num_pages": self.num_pages,
+            "pending": {h: tuple(ps) for h, ps in self.wc.items() if ps},
+            "held": {h: tuple(sorted(ps)) for h, ps in held.items()},
+            "write_epoch": ({p: (w, c) for p, (w, c, _site)
+                             in det.write_epoch.items()} if det else {}),
+            "vc": ({h: dict(row) for h, row in det.vc.items()}
+                   if det else {}),
+            "rel": ({h: dict(row) for h, row in det.rel.items()}
+                    if det else {}),
+        }
+
     def describe(self) -> Dict[str, object]:
         return {
             "sid": self.sid,

@@ -210,6 +210,13 @@ class EmuCXL:
         # attached via attach_tracer(), propagated to every live and future
         # segment, and threaded through the queue/engine layers.
         self.tracer = None
+        # Plan-time batch-verifier results (repro.core.verify), recorded by
+        # OpQueue.flush when preflight != "off": the last batch's full
+        # PreflightResult plus cumulative per-code counters, surfaced via
+        # coherence_stats()["preflight"].
+        self._preflight_last = None
+        self._preflight_totals: Dict[str, int] = {
+            "batches": 0, "must": 0, "may": 0}
         # Modeled elapsed DMA time per tier (seconds) — the Table III analogue on the
         # target HW; the CPU runtime cannot exhibit real HBM-vs-PCIe gaps.
         self.modeled_time = {LOCAL_MEMORY: 0.0, REMOTE_MEMORY: 0.0}
@@ -1058,6 +1065,18 @@ class EmuCXL:
             if self.fabric is not None:
                 self.fabric.tracer = tracer if transfers else None
 
+    def _record_preflight(self, result) -> None:
+        """Fold one flush's ``PreflightResult`` into the running totals
+        (meta-state only: never part of the journaled protocol state)."""
+        with self._lock:
+            self._preflight_last = result
+            totals = self._preflight_totals
+            totals["batches"] += 1
+            totals["must"] += result.must_count
+            totals["may"] += result.may_count
+            for d in result.diagnostics:
+                totals[d.code] = totals.get(d.code, 0) + 1
+
     def coherence_stats(self) -> Dict[str, object]:
         """Fleet-wide + per-segment protocol counters (the coherence analogue
         of ``fabric_stats``)."""
@@ -1076,6 +1095,13 @@ class EmuCXL:
                           for seg in self._segments.values()
                           if seg.detector is not None
                           for d in seg.detector.report()],
+                # Plan-time verifier findings (repro.core.verify): the last
+                # preflighted batch in full, plus cumulative counters.
+                "preflight": {
+                    "last": (self._preflight_last.as_dict()
+                             if self._preflight_last is not None else None),
+                    "totals": dict(self._preflight_totals),
+                },
             }
 
     # ------------------------------------------------------------------ tensor views

@@ -43,6 +43,7 @@ import jax
 import numpy as np
 
 from repro.core import emucxl as ecxl
+from repro.core import verify
 from repro.core.engine import SimulationEngine
 
 _NODE_BYTES = 16
@@ -421,6 +422,95 @@ class OpQueue:
             lib._plan_dma(rec, plan.offset, plan.n, write=write,
                           journal=journal))
 
+    # ------------------------------------------------------------------ preflight
+    def _preflight_descs(self, lib, tickets) -> Tuple[list, dict]:
+        """Reduce pending tickets to verifier descriptors plus read-only
+        segment views — the same footprint math ``_plan_one`` uses, with no
+        directory/WC/stats/detector mutation anywhere on the path."""
+        descs: list = []
+        views: dict = {}
+
+        def view_of(seg):
+            if seg is not None and seg.sid not in views:
+                views[seg.sid] = verify.SegmentView(**seg.preflight_view())
+            return seg
+
+        for t in tickets:
+            op = t.op
+            label = type(op).__name__
+            try:
+                if isinstance(op, MigrateOp):
+                    rec = lib._resolve(op.buf.address)
+                    target = rec.host if op.host is None else op.host
+                    if (rec.segment is not None
+                            or (op.node == rec.node and target == rec.host)):
+                        # Shared mappings cannot migrate (planning raises on
+                        # its own) and same-placement migrates are no-ops:
+                        # neither stages an allocation.
+                        descs.append(verify.OpDesc(kind="noop", label=label))
+                    else:
+                        descs.append(verify.OpDesc(
+                            kind="migrate", host=target, node=op.node,
+                            size=rec.size, label=label))
+                    continue
+                if isinstance(op, MemcpyOp):
+                    drec = lib._resolve(op.dst.address)
+                    srec = lib._resolve(op.src.address)
+                    dseg = view_of(drec.segment)
+                    sseg = view_of(srec.segment)
+                    n = op.size
+                    descs.append(verify.OpDesc(
+                        kind="memcpy",
+                        sid=dseg.sid if dseg else None, host=drec.host,
+                        pages=(tuple(dseg.pages_for(0, n)) if dseg else ()),
+                        src_sid=sseg.sid if sseg else None,
+                        src_host=srec.host,
+                        src_pages=(tuple(sseg.pages_for(0, n))
+                                   if sseg else ()),
+                        label=label))
+                    continue
+                rec = lib._resolve(op.buf.address)
+                seg = view_of(rec.segment)
+                sid = seg.sid if seg else None
+                if isinstance(op, FenceOp):
+                    kind, pages = "fence", ()
+                elif isinstance(op, AcquireOp):
+                    kind, pages = "acquire", ()
+                elif isinstance(op, ReadOp):
+                    n = (rec.size - op.offset) if op.size is None else op.size
+                    kind = "read"
+                    pages = tuple(seg.pages_for(op.offset, n)) if seg else ()
+                elif isinstance(op, WriteOp):
+                    n = op.size if op.size is not None else int(op.data.size)
+                    kind = "write"
+                    pages = tuple(seg.pages_for(op.offset, n)) if seg else ()
+                else:                                        # MemsetOp
+                    n = rec.size if op.size is None else op.size
+                    kind = "memset"
+                    pages = tuple(seg.pages_for(0, n)) if seg else ()
+                descs.append(verify.OpDesc(
+                    kind=kind, sid=sid, host=rec.host, pages=pages,
+                    label=label))
+            except Exception:
+                # Stale handle / bad bounds: planning will surface the real
+                # error with full rollback; preflight just skips the op.
+                descs.append(verify.OpDesc(kind="noop", label=label))
+        return descs, views
+
+    def _preflight_check(self, lib, tickets) -> "verify.PreflightResult":
+        descs, views = self._preflight_descs(lib, tickets)
+        pool = lib._pool
+        pool_view = verify.PoolView(
+            pool_free=pool.free,
+            quota_free={
+                h: (None if pool.quota(h) is None
+                    else pool.quota(h) - pool.used_by_host[h])
+                for h in range(lib.num_hosts)},
+            local_free={h: lib._local_capacity - lib._used_local[h]
+                        for h in range(lib.num_hosts)},
+        )
+        return verify.verify_batch(descs, views, pool_view)
+
     # ------------------------------------------------------------------ apply
     def _apply_one(self, lib, plan: _Plan):
         """Apply one op's data effect; handles are re-resolved so earlier ops in
@@ -466,7 +556,8 @@ class OpQueue:
         return plan.buf
 
     # ------------------------------------------------------------------ flush
-    def flush(self, only: Optional[List[Ticket]] = None) -> float:
+    def flush(self, only: Optional[List[Ticket]] = None,
+              preflight: Optional[str] = None) -> float:
         """Complete every pending op as ONE overlapped batch; returns the modeled
         makespan (virtual seconds the whole batch occupies). With `only`, flush
         just those still-pending tickets (in submission order) and leave the
@@ -506,6 +597,18 @@ class OpQueue:
         same all-or-nothing guarantee staged allocations and fabric transfers
         already had. An apply-phase failure unwinds the journal back to the
         first op that never took effect (earlier ops in the batch committed).
+
+        ``preflight`` runs the plan-time symbolic batch verifier
+        (``repro.core.verify``) over the selected tickets *before* the first
+        planner call — so before any directory/WC/stats/detector state can
+        change. ``"warn"`` records the :class:`~repro.core.verify.PreflightResult`
+        into ``coherence_stats()["preflight"]``; ``"raise"`` additionally
+        raises :class:`~repro.core.verify.PreflightError` (failing every
+        ticket, with nothing to roll back) when any must-severity diagnostic
+        — a guaranteed defect — is found; ``"off"`` skips the pass. ``None``
+        defers to the session default (``CXLSession(preflight=...)``), which
+        itself defers to the ``EMUCXL_CHECK`` environment token
+        ``preflight``.
         """
         lib = self._session.lib
         with lib._lock:
@@ -524,6 +627,21 @@ class OpQueue:
                 for t in tickets:
                     t._fail(e)
                 raise
+            mode = verify.resolve_preflight_mode(
+                preflight if preflight is not None
+                else getattr(self._session, "_preflight", None))
+            if mode != "off":
+                result = self._preflight_check(lib, tickets)
+                lib._record_preflight(result)
+                if lib.tracer is not None:
+                    lib.tracer.emit("preflight", ops=result.ops,
+                                    must=result.must_count,
+                                    may=result.may_count)
+                if mode == "raise" and not result.ok:
+                    err = verify.PreflightError(result)
+                    for t in tickets:
+                        t._fail(err)
+                    raise err
             fabric = lib.fabric
             start = fabric.clock if fabric is not None else 0.0
             plans: List[Tuple[Ticket, _Plan]] = []

@@ -19,7 +19,8 @@ checker's CI job must run without jax/numpy.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Tuple
+import json
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple, Union
 
 #: Event kinds the planners emit. Kept here as documentation; the recorder
 #: accepts any kind string so layered tooling can add its own marks.
@@ -32,6 +33,7 @@ KINDS = (
     "acquire",
     "detach",
     "op",            # queue flush submitted an op; detail: op, streams, mark
+    "preflight",     # flush ran the batch verifier; detail: ops, must, may
     "rollback",      # a flush failed and the journal rolled back to `mark`
     "job-begin",     # engine started a timeline job; detail: label, at,
     #                  routes=(ordered link-name tuples resolved at plan time)
@@ -116,6 +118,56 @@ class TraceRecorder:
 
     def events_of(self, *kinds: str) -> List[TraceEvent]:
         return [ev for ev in self.events if ev.kind in kinds]
+
+    # ------------------------------------------------------------- persistence
+    def to_jsonl(self) -> str:
+        """Serialize the trace as JSON Lines (one event per line, stdlib
+        json) — the capture format ``tools/emucxl_verify.py --trace`` replays
+        offline. Tuples become JSON arrays; ``from_jsonl`` restores them, so
+        a round trip reproduces the events exactly (values that json cannot
+        encode are stringified and round-trip as their string form)."""
+        lines = [
+            json.dumps(
+                {"seq": ev.seq, "kind": ev.kind, "sid": ev.sid,
+                 "host": ev.host, "page": ev.page,
+                 "detail": {k: v for k, v in ev.detail}},
+                default=str, separators=(",", ":"))
+            for ev in self.events
+        ]
+        return "".join(line + "\n" for line in lines)
+
+    @staticmethod
+    def _untuple(value: object) -> object:
+        if isinstance(value, list):
+            return tuple(TraceRecorder._untuple(v) for v in value)
+        return value
+
+    @classmethod
+    def from_jsonl(cls, source: Union[str, Iterable[str]]) -> "TraceRecorder":
+        """Rebuild a recorder from ``to_jsonl`` output (a string or an
+        iterable of lines, e.g. an open file). Blank lines are skipped;
+        ``_seq`` resumes past the highest loaded sequence number so new
+        events appended to a loaded trace never reuse one."""
+        rec = cls()
+        lines = source.splitlines() if isinstance(source, str) else source
+        for line in lines:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            detail = tuple(sorted(
+                (k, cls._untuple(v))
+                for k, v in (d.get("detail") or {}).items()))
+            ev = TraceEvent(seq=int(d["seq"]), kind=d["kind"],
+                            sid=d.get("sid"), host=d.get("host"),
+                            page=d.get("page"), detail=detail)
+            rec.events.append(ev)
+            if (ev.kind == "write" and ev.sid is not None
+                    and ev.page is not None):
+                rec._last_write[(ev.sid, ev.page)] = ev.seq
+        rec._seq = (max(ev.seq for ev in rec.events) + 1
+                    if rec.events else 0)
+        return rec
 
     def clear(self) -> None:
         self.events.clear()

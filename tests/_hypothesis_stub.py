@@ -57,6 +57,11 @@ def tuples(*elements):
     return _Strategy(lambda r: tuple(e.sample(r) for e in elements))
 
 
+def sampled_from(elements):
+    pool = list(elements)
+    return _Strategy(lambda r: pool[r.randrange(len(pool))])
+
+
 def one_of(*strategies):
     return _Strategy(lambda r: r.choice(strategies).sample(r))
 
@@ -100,7 +105,7 @@ def install() -> None:
     hyp = types.ModuleType("hypothesis")
     strategies = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "booleans", "none", "binary", "lists",
-                 "tuples", "one_of"):
+                 "tuples", "one_of", "sampled_from"):
         setattr(strategies, name, globals()[name])
     hyp.given = given
     hyp.settings = settings

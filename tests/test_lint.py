@@ -65,6 +65,13 @@ busy = stats["pool1"]["busy_time"]
 occupancy = fabric.link_occupancy("host0")
 """
 
+BAD_UNPAIRED_ACQUIRE = """
+seg = sess.share(1 << 20, host=0, consistency="release")
+r = sess.attach(seg, host=1)
+r.acquire()
+data = r.read(0, 64)
+"""
+
 SEEDED_BAD = [
     ("EMU001", BAD_V1),
     ("EMU002", BAD_RELEASE_WRITE),
@@ -72,6 +79,7 @@ SEEDED_BAD = [
     ("EMU004", BAD_JOURNAL),
     ("EMU005", BAD_USE_AFTER_DETACH),
     ("EMU006", BAD_LINK_NAME),
+    ("EMU007", BAD_UNPAIRED_ACQUIRE),
 ]
 
 
@@ -267,6 +275,53 @@ def test_link_namers_are_exempt_everyone_else_is_not():
         assert lint_source(source, exempt) == []
     assert rules_of(lint_source(source, "src/repro/core/queue.py")) \
         == ["EMU006"]
+
+
+# ---------------------------------------------------------- EMU007 pairing
+def test_self_release_does_not_pair_with_own_acquire():
+    """A fence on the acquiring handle itself publishes nothing the acquire
+    could observe — only a release on a different receiver pairs."""
+    source = """
+seg = sess.share(1 << 20, host=0, consistency="release")
+r = sess.attach(seg, host=1)
+r.fence()
+r.acquire()
+"""
+    assert rules_of(lint_source(source, "fixture.py")) == ["EMU007"]
+
+
+def test_peer_fence_in_another_scope_pairs_with_the_acquire():
+    """Same receiver *name* in a different function is a different binding:
+    the publisher's fence legitimately feeds the reader's acquire."""
+    source = """
+def publish(pool):
+    buf = pool.attach(0)
+    buf.write(payload)
+    buf.fence()
+
+
+def consume(pool):
+    buf = pool.attach(1)
+    buf.acquire()
+    return buf.read(0, 64)
+"""
+    assert lint_source(source, "fixture.py") == []
+
+
+def test_async_fence_op_pairs_with_acquire_op():
+    source = """
+sess.submit(WriteOp(w, payload), FenceOp(w))
+sess.submit(AcquireOp(r), ReadOp(r, 0, 64))
+"""
+    assert lint_source(source, "fixture.py") == []
+
+
+def test_unpaired_acquire_pragma():
+    source = """
+r = sess.attach(seg, host=1)
+r.acquire()  # emucxl: allow-acquire-unpaired
+"""
+    assert lint_source(source, "fixture.py") == []
 
 
 # --------------------------------------------------------------------- pragmas

@@ -157,3 +157,54 @@ def test_failed_flush_traces_the_rollback():
         assert rollbacks[0].get("mark") == 0
     finally:
         sess.close()
+
+
+# ---------------------------------------------------------------- persistence
+def test_jsonl_round_trip_reproduces_the_events_exactly():
+    tracer = TraceRecorder()
+    sess, seg, bufs = make_sess(tracer=tracer)
+    try:
+        bufs[0].write(PAYLOAD)
+        bufs[0].fence()
+        bufs[1].acquire()
+        bufs[1].read(0, 32)
+    finally:
+        sess.close()
+    text = tracer.to_jsonl()
+    assert len(text.splitlines()) == len(tracer.events)
+    loaded = TraceRecorder.from_jsonl(text)
+    assert loaded.events == tracer.events
+    # last-write tracking and the seq counter survive the round trip
+    assert loaded.observed_epoch(seg.sid, 0) == tracer.observed_epoch(
+        seg.sid, 0)
+    assert loaded.emit("op").seq == tracer.events[-1].seq + 1
+
+
+def test_from_jsonl_accepts_line_iterables_and_skips_blanks(tmp_path):
+    rec = TraceRecorder()
+    rec.emit("write", sid=0, host=0, page=1, outcome="wc-buffered")
+    rec.emit("fence", sid=0, host=0, pending=(1,))
+    path = tmp_path / "trace.jsonl"
+    path.write_text(rec.to_jsonl() + "\n\n")        # trailing blank lines
+    with path.open() as fh:
+        loaded = TraceRecorder.from_jsonl(fh)
+    assert loaded.events == rec.events
+    # tuple-valued detail came back as a tuple, not a list
+    assert loaded.events[1].get("pending") == (1,)
+
+
+def test_preflighted_flush_emits_a_preflight_event():
+    tracer = TraceRecorder()
+    sess, seg, bufs = make_sess(tracer=tracer)
+    try:
+        sess.submit(WriteOp(bufs[0], PAYLOAD))
+        sess.flush(preflight="warn")
+        marks = tracer.events_of("preflight")
+        assert len(marks) == 1
+        assert marks[0].get("ops") == 1
+        assert marks[0].get("must") >= 1            # the write is unfenced
+        # the preflight mark lands before any of the batch's op events
+        first_op = tracer.events_of("op")[0]
+        assert marks[0].seq < first_op.seq
+    finally:
+        sess.close()

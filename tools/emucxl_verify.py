@@ -1,0 +1,276 @@
+#!/usr/bin/env python3
+"""emucxl-verify: run the plan-time batch verifier (core/verify.py) as a gate.
+
+Stdlib-only by design — CI's ``emucxl-verify`` job runs this on a bare
+interpreter (no numpy/jax), which is itself asserted below: importing the
+verifier must not drag the scientific stack in.
+
+Modes (combinable; ``--corpus --examples`` is what CI runs):
+
+  --corpus      soundness gates over the model checker's litmus corpus
+                (src/repro/core/mc.py). For every program and every
+                permitted schedule, replay the ops through a real
+                ``SharedSegment`` with the dynamic race detector in warn
+                mode AND feed the same schedule-order batch to the symbolic
+                verifier; gate that every page the dynamic detector flags
+                is inside the verifier's PF005 may-race set (the static
+                analysis over-approximates, never misses), and that
+                race-free programs draw zero must-severity diagnostics on
+                every schedule. Spot-checks pin PF001 on mp_missing_fence
+                and PF004 on wc_capacity_eviction.
+  --examples    seeded descriptor batches, one firing pair per diagnostic
+                code: a batch that must raise the code and a minimally
+                fixed twin that must not — proof each rule has teeth and
+                each fix silences exactly it.
+  --trace PATH  replay a captured JSONL trace (``TraceRecorder.to_jsonl``)
+                through the verifier offline and print its diagnostics.
+
+``--json PATH`` writes the gate statistics as a benchmark artifact; CI
+uploads it as ``BENCH_verify``. Exit status 0 iff every requested gate
+holds (``--trace`` gates on must-severity findings only).
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def _fail(failures, msg):
+    failures.append(msg)
+    print(f"FAIL: {msg}")
+
+
+def replay_schedule(mc, program, schedule):
+    """Run one permitted interleaving through a real segment with the
+    dynamic detector in warn mode. Returns the schedule-order event list
+    (the verifier's input) and the set of pages the detector flagged."""
+    from repro.core.coherence import DirectoryJournal, SharedSegment
+
+    seg = SharedSegment(
+        program.num_pages * mc.PAGE, mc.PAGE, backing_addr=0, home_host=0,
+        port=0, sid=0, consistency=program.consistency,
+        wc_capacity=program.wc_capacity, race_detect="warn")
+    journal = DirectoryJournal()
+    pc = [0] * program.num_threads
+    events = []
+    for t in schedule:
+        op = program.threads[t][pc[t]]
+        pc[t] += 1
+        events.append((op.kind, 0, t, op.page))
+        offset = (op.page or 0) * seg.page_bytes
+        if op.kind == "read":
+            seg.plan_read(None, t, offset, seg.page_bytes, journal)
+        elif op.kind == "write":
+            seg.plan_write(None, t, offset, seg.page_bytes, journal)
+        elif op.kind == "fence":
+            seg.plan_fence(None, t, journal)
+        elif op.kind == "acquire":
+            seg.plan_acquire(t, journal)
+        elif op.kind == "detach":
+            seg.plan_detach(None, t, journal)
+        else:  # pragma: no cover - corpus only uses the five kinds above
+            raise ValueError(f"unknown op kind {op.kind!r}")
+    dynamic = ({r.page for r in seg.detector.races}
+               if seg.detector is not None else set())
+    return events, dynamic
+
+
+def verify_schedule(mc, verify, program, events):
+    """Feed one schedule-order batch to the symbolic verifier with a fresh
+    view matching the litmus segment's geometry."""
+    views = {0: verify.fresh_segment_view(
+        0, num_pages=program.num_pages, consistency=program.consistency,
+        wc_capacity=program.wc_capacity)}
+    return verify.verify_batch(verify.descs_from_events(events), views)
+
+
+def run_corpus(mc, verify, failures, verbose=False):
+    print(f"== soundness vs litmus corpus ({len(mc.CORPUS)} programs) ==")
+    rows = []
+    t0 = time.monotonic()
+    for program in mc.CORPUS:
+        schedules = dynamic_pages = static_pages = musts = 0
+        codes = set()
+        for schedule in mc.all_schedules(program):
+            events, dynamic = replay_schedule(mc, program, schedule)
+            result = verify_schedule(mc, verify, program, events)
+            schedules += 1
+            dynamic_pages += len(dynamic)
+            static_pages += len(result.race_pages(0))
+            musts += result.must_count
+            codes |= result.codes()
+            missed = dynamic - result.race_pages(0)
+            if missed:
+                _fail(failures,
+                      f"{program.name} @ {'-'.join(map(str, schedule))}: "
+                      f"dynamic detector flagged pages {sorted(missed)} "
+                      f"outside the PF005 may-set (unsound)")
+            if not program.expect_race and result.must_count:
+                _fail(failures,
+                      f"{program.name} @ {'-'.join(map(str, schedule))}: "
+                      f"race-free program drew must-severity "
+                      f"{sorted(d.code for d in result.by_severity('must'))}")
+        row = {"program": program.name, "schedules": schedules,
+               "dynamic_pages": dynamic_pages, "pf005_pages": static_pages,
+               "must": musts, "codes": sorted(codes)}
+        rows.append(row)
+        print(f"  {program.name:28s} schedules={schedules:4d} "
+              f"dyn={dynamic_pages:3d} <= pf005={static_pages:3d} "
+              f"must={musts:3d} codes={','.join(sorted(codes)) or '-'}")
+        if verbose and program.description:
+            print(f"      {program.description}")
+
+    # Spot-checks: the classic defects produce their pinned codes.
+    def codes_of(name):
+        program = mc.find_program(name)
+        out = set()
+        for schedule in mc.all_schedules(program):
+            events, _ = replay_schedule(mc, program, schedule)
+            out |= verify_schedule(mc, verify, program, events).codes()
+        return out
+
+    if "PF001" not in codes_of("mp_missing_fence"):
+        _fail(failures, "mp_missing_fence: unmatched acquire did not "
+                        "draw PF001 on any schedule")
+    if "PF004" not in codes_of("wc_capacity_eviction"):
+        _fail(failures, "wc_capacity_eviction: forced drain forecast did "
+                        "not draw PF004 on any schedule")
+    elapsed = time.monotonic() - t0
+    total = sum(r["schedules"] for r in rows)
+    print(f"  total: {total} schedules cross-validated in {elapsed:.2f}s")
+    return {"programs": rows, "schedules": total,
+            "seconds": round(elapsed, 3)}
+
+
+#: (code, firing batch, fixed twin). Each batch is (events, wc_capacity,
+#: pool) — events as (kind, sid, host, page); ``pool`` a PoolView kwargs
+#: dict for the PF003 case. The firing batch must draw exactly its code's
+#: diagnostic family; the twin must draw no diagnostic with that code.
+def _example_cases(verify):
+    E = lambda *evs: list(evs)  # noqa: E731 - local shorthand
+    return (
+        ("PF001",
+         E(("acquire", 0, 1, None), ("read", 0, 1, 0)),
+         E(("write", 0, 0, 0), ("fence", 0, 0, None),
+           ("acquire", 0, 1, None), ("read", 0, 1, 0)),
+         None, None),
+        ("PF002",
+         E(("write", 0, 0, 0)),
+         E(("write", 0, 0, 0), ("fence", 0, 0, None)),
+         None, None),
+        ("PF003",
+         [verify.OpDesc(kind="migrate", sid=0, host=0, pages=(0,),
+                        node=verify.REMOTE_MEMORY, size=8192)],
+         [verify.OpDesc(kind="migrate", sid=0, host=0, pages=(0,),
+                        node=verify.REMOTE_MEMORY, size=4096)],
+         None, {"pool_free": 4096, "quota_free": {}, "local_free": {}}),
+        ("PF004",
+         E(("write", 0, 0, 0), ("write", 0, 0, 1), ("fence", 0, 0, None)),
+         E(("write", 0, 0, 0), ("fence", 0, 0, None),
+           ("write", 0, 0, 1), ("fence", 0, 0, None)),
+         1, None),
+        ("PF005",
+         E(("write", 0, 0, 0), ("fence", 0, 0, None), ("read", 0, 1, 0)),
+         E(("write", 0, 0, 0), ("fence", 0, 0, None),
+           ("acquire", 0, 1, None), ("read", 0, 1, 0)),
+         None, None),
+    )
+
+
+def run_examples(verify, failures):
+    print("== seeded examples (one firing/fixed pair per code) ==")
+    rows = []
+    for code, bad, good, wc_capacity, pool_kw in _example_cases(verify):
+        pool = verify.PoolView(**pool_kw) if pool_kw else None
+
+        def check(batch, wc_capacity=wc_capacity, pool=pool):
+            descs = (batch if batch and isinstance(batch[0], verify.OpDesc)
+                     else verify.descs_from_events(batch))
+            views = {0: verify.fresh_segment_view(
+                0, num_pages=4, wc_capacity=wc_capacity)}
+            return verify.verify_batch(descs, views, pool)
+
+        fired = code in check(bad).codes()
+        silenced = code not in check(good).codes()
+        status = "ok" if fired and silenced else "FAIL"
+        print(f"  {code}: fires={fired} fixed-twin-clean={silenced} "
+              f"[{status}]")
+        rows.append({"code": code, "fires": fired, "fixed": silenced})
+        if not fired:
+            _fail(failures, f"{code}: seeded-bad batch did not fire")
+        if not silenced:
+            _fail(failures, f"{code}: fixed twin still fires")
+    return {"cases": rows}
+
+
+def run_trace(verify, path, failures):
+    from repro.core.trace import TraceRecorder
+
+    print(f"== replaying trace {path} ==")
+    rec = TraceRecorder.from_jsonl(Path(path).read_text())
+    descs, views = verify.descs_from_trace(rec.events)
+    result = verify.verify_batch(descs, views)
+    print(f"  {len(rec.events)} event(s) -> {len(descs)} replayable op(s)")
+    print(f"  {result.summary()}")
+    for d in result.diagnostics:
+        print(f"  {d}")
+    if not result.ok:
+        _fail(failures, f"trace {path}: {result.must_count} must-severity "
+                        f"diagnostic(s)")
+    return {"path": str(path), "events": len(rec.events),
+            "ops": len(descs), "result": result.as_dict()}
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(
+        prog="emucxl-verify", description=__doc__.splitlines()[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    parser.add_argument("--corpus", action="store_true",
+                        help="cross-validate PF005 against the dynamic "
+                             "detector over every corpus schedule")
+    parser.add_argument("--examples", action="store_true",
+                        help="seeded firing/fixed pair per diagnostic code")
+    parser.add_argument("--trace", metavar="PATH",
+                        help="replay a captured JSONL trace offline")
+    parser.add_argument("--json", metavar="PATH",
+                        help="write gate statistics as JSON")
+    parser.add_argument("-v", "--verbose", action="store_true")
+    args = parser.parse_args(argv)
+    if not (args.corpus or args.examples or args.trace):
+        args.corpus = args.examples = True
+
+    from repro.core import mc, verify  # noqa: E402 (after sys.path insert)
+
+    heavy = [m for m in sys.modules
+             if m.split(".")[0] in ("numpy", "jax", "jaxlib")]
+    failures = []
+    if heavy:
+        _fail(failures, f"verifier must stay stdlib-only but imported "
+                        f"{sorted(heavy)[:3]}")
+
+    payload = {"bench": "emucxl-verify"}
+    if args.corpus:
+        payload["corpus"] = run_corpus(mc, verify, failures,
+                                       verbose=args.verbose)
+    if args.examples:
+        payload["examples"] = run_examples(verify, failures)
+    if args.trace:
+        payload["trace"] = run_trace(verify, args.trace, failures)
+
+    payload["ok"] = not failures
+    if args.json:
+        Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {args.json}")
+    if failures:
+        print(f"\n{len(failures)} gate(s) failed")
+        return 1
+    print("\nall gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,6 +39,13 @@ EMU006   link-name          a hard-coded fabric link-name string (``"host0"``,
                             ``core/fabric.py``/``core/topology.py`` — link names
                             are a topology detail; callers must resolve them via
                             ``host_link()``/``pool_link()``/``route()``
+EMU007   acquire-unpaired   ``.acquire()``/``AcquireOp``/``emucxl_acquire``
+                            with no observable peer release — no ``fence()``/
+                            ``FenceOp``/``detach()`` on a *different* receiver
+                            (or v1 ``emucxl_fence``) anywhere in the module.
+                            Acquire joins peer release rows only; with nothing
+                            published it synchronizes with nothing (the static
+                            sibling of the preflight verifier's PF001)
 =======  =================  ====================================================
 
 Suppression: a trailing ``# emucxl: allow-<slug>`` comment silences that line;
@@ -81,6 +88,7 @@ RULES = {
     "EMU004": "journal",
     "EMU005": "use-after-detach",
     "EMU006": "link-name",
+    "EMU007": "acquire-unpaired",
 }
 
 WRITE_METHODS = {"write", "memset"}
@@ -397,6 +405,66 @@ def analyze_scope(scope: ast.AST, path: str,
     return findings
 
 
+def analyze_acquire_pairing(tree: ast.Module, path: str) -> List[Finding]:
+    """EMU007: acquire joins *peer* release rows only — a module whose every
+    release (if any) lands on the acquiring receiver itself publishes nothing
+    an acquire could observe. Module-wide on purpose: unlike EMU002 this is
+    about pairing across scopes (a fence in a helper legitimately feeds an
+    acquire elsewhere on the page), so the whole module is the scope and a
+    release on *any other* receiver — or a v1 ``emucxl_fence``/``detach``
+    whose receiver the AST cannot name — counts as the observable peer."""
+    acquires: List[Tuple[int, int, Optional[str]]] = []
+    releases: Set[Tuple[int, Optional[str]]] = set()   # (scope idx, receiver)
+    anonymous_release = False
+    for scope_idx, scope in enumerate(iter_scopes(tree)):
+        for node in scope_nodes(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            if name == "AcquireOp" or name == "emucxl_acquire":
+                acquires.append(
+                    (node.lineno, scope_idx, _first_arg_name(node)))
+            elif name == "FenceOp":
+                buf = _first_arg_name(node)
+                if buf is None:
+                    anonymous_release = True
+                else:
+                    releases.add((scope_idx, buf))
+            elif name in ("emucxl_fence", "emucxl_free"):
+                anonymous_release = True
+            m = _method(node)
+            if m is None:
+                continue
+            recv, meth = m
+            if meth == "acquire":
+                acquires.append((node.lineno, scope_idx, recv))
+            elif meth in RELEASE_METHODS:
+                if node.args:   # session-level detach(buf): buf releases
+                    buf = _first_arg_name(node)
+                    if buf is None:
+                        anonymous_release = True
+                    else:
+                        releases.add((scope_idx, buf))
+                else:
+                    releases.add((scope_idx, recv))
+    findings: List[Finding] = []
+    if anonymous_release:
+        return findings
+    for line, scope_idx, recv in acquires:
+        # A same-scope release on the same name is the acquirer's own handle
+        # (self-release feeds nobody); any other release is a plausible peer.
+        peers = releases - ({(scope_idx, recv)} if recv is not None else set())
+        if peers:
+            continue
+        findings.append(Finding(
+            path, line, "EMU007",
+            f"acquire on '{recv or '<anonymous>'}' with no peer release "
+            f"anywhere in this module — no fence()/detach()/FenceOp on a "
+            f"different receiver means nothing was ever published for the "
+            f"acquire to observe"))
+    return findings
+
+
 # ----------------------------------------------------------------------- files
 def lint_source(source: str, path: str, *,
                 is_shim: bool = False) -> List[Finding]:
@@ -408,6 +476,7 @@ def lint_source(source: str, path: str, *,
     findings: List[Finding] = []
     for scope in iter_scopes(tree):
         findings.extend(analyze_scope(scope, path, is_shim))
+    findings.extend(analyze_acquire_pairing(tree, path))
 
     file_allows, line_allows = collect_pragmas(source.splitlines())
     kept = [f for f in findings
